@@ -1,0 +1,49 @@
+"""Paper §4.3 power extrapolation: 5 sticks ~1-2 W each under load =>
+~7-8 W for accelerators, ~10 W with host overhead."""
+from __future__ import annotations
+
+from repro.bus import calibrated
+from repro.core.cartridge import DeviceModel
+from repro.core import messages as msg
+from repro.core.cartridge import FnCartridge
+from repro.bus import BusParams, SharedBus
+from repro.runtime import CapabilityRegistry, StreamEngine
+
+SPEC = msg.MessageSpec(msg.IMAGE_FRAME)
+HOST_IDLE_W, HOST_PER_DEVICE_W = 2.0, 0.25
+
+
+def run(n_devices: int = 5) -> dict:
+    p = calibrated("ncs2")
+    reg = CapabilityRegistry()
+    for i in range(n_devices):
+        reg.insert(i, FnCartridge(
+            f"ncs2_{i}", lambda p_, x: x, SPEC, SPEC,
+            device=DeviceModel(service_s=p.t_comp_s, power_w=1.8,
+                               idle_w=0.3)))
+    eng = StreamEngine(reg, SharedBus(p))
+    eng.feed(300, interval_s=p.t_comp_s)
+    rep = eng.run(until=120)
+    device_w = 0.0
+    per_device = {}
+    for name, st in rep.stage_stats.items():
+        util = min(st.busy_s / max(rep.sim_time, 1e-9), 1.0)
+        w = util * 1.8 + (1 - util) * 0.3
+        per_device[name] = round(w, 2)
+        device_w += w
+    host_w = HOST_IDLE_W + HOST_PER_DEVICE_W * n_devices
+    return {
+        "n_devices": n_devices,
+        "per_device_w": per_device,
+        "devices_total_w": round(device_w, 2),
+        "host_w": round(host_w, 2),
+        "system_w": round(device_w + host_w, 2),
+        "paper_devices_band_w": [5, 10],
+        "paper_system_w": 10,
+        "in_band": bool(5 <= device_w + host_w <= 13),
+    }
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=2))

@@ -1,0 +1,75 @@
+"""Beyond-paper: render the dry-run roofline table from results JSONL.
+
+Reads the records produced by ``repro.launch.dryrun --out`` and emits the
+EXPERIMENTS.md-ready table: three terms per (arch x shape), dominant
+bottleneck, MODEL_FLOPS ratio, memory fit.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+DEFAULT_PATH = os.environ.get("DRYRUN_RESULTS", "results/dryrun_single.jsonl")
+
+
+def load(path=DEFAULT_PATH):
+    recs = []
+    if not os.path.exists(path):
+        return recs
+    with open(path) as f:
+        for line in f:
+            recs.append(json.loads(line))
+    # newest record per cell wins
+    by_cell = {}
+    for r in recs:
+        by_cell[(r["arch"], r["shape"], r["mesh"])] = r
+    return list(by_cell.values())
+
+
+def table(recs) -> str:
+    hdr = ("| arch | shape | mesh | rules | compute_s | memory_s | "
+           "collective_s | dominant | useful | mem/dev GiB | fits |")
+    sep = "|" + "---|" * 11
+    lines = [hdr, sep]
+    for r in sorted(recs, key=lambda r: (r["mesh"], r["arch"], r["shape"])):
+        if r["status"] == "skip":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | "
+                         f"skip | — | — | — | — | — | {r['reason'][:40]} |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | "
+                         f"ERROR | — | — | — | — | — | — |")
+            continue
+        rl, mem = r["roofline"], r["memory"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['rules']} | "
+            f"{rl['compute_s']:.3e} | {rl['memory_s']:.3e} | "
+            f"{rl['collective_s']:.3e} | {rl['dominant']} | "
+            f"{rl['useful_ratio']:.2f} | "
+            f"{mem['per_device_total'] / 2**30:.2f} | "
+            f"{'y' if mem['fits_hbm'] else 'N'} |")
+    return "\n".join(lines)
+
+
+def run() -> dict:
+    recs = load()
+    ok = [r for r in recs if r["status"] == "ok"]
+    dom = {}
+    for r in ok:
+        dom[r["roofline"]["dominant"]] = dom.get(
+            r["roofline"]["dominant"], 0) + 1
+    return {
+        "n_cells": len(recs),
+        "n_ok": len(ok),
+        "n_skip": sum(r["status"] == "skip" for r in recs),
+        "n_error": sum(r["status"] == "error" for r in recs),
+        "dominant_term_histogram": dom,
+        "all_fit_hbm": all(r["memory"]["fits_hbm"] for r in ok) if ok else
+        False,
+    }
+
+
+if __name__ == "__main__":
+    print(table(load()))
+    import json as j
+    print(j.dumps(run(), indent=2))

@@ -1,0 +1,44 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+``python -m benchmarks.run`` prints a CSV summary line per benchmark plus
+the full JSON payloads; exit code is non-zero if any paper-validation
+check fails.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+from benchmarks import (bus_scaling, hotswap, pipeline_latency, power_model,
+                        roofline_report, secure_match)
+
+BENCHES = [
+    ("table1_bus_scaling", bus_scaling.run, "pass_pm1fps"),
+    ("s4_2_pipeline_latency", pipeline_latency.run, "in_paper_band"),
+    ("s4_2_hotswap", hotswap.run, "zero_loss"),
+    ("s4_3_power_model", power_model.run, "in_band"),
+    ("s3_encrypted_matching", secure_match.run, "identical_all"),
+    ("roofline_report", roofline_report.run, None),
+]
+
+
+def main() -> None:
+    print("name,ms,check")
+    payloads = {}
+    failures = []
+    for name, fn, check_key in BENCHES:
+        t0 = time.perf_counter()
+        out = fn()
+        ms = (time.perf_counter() - t0) * 1e3
+        ok = out.get(check_key, True) if check_key else True
+        if not ok:
+            failures.append(name)
+        payloads[name] = out
+        print(f"{name},{ms:.1f},{'PASS' if ok else 'FAIL'}")
+    print(json.dumps(payloads, indent=2))
+    if failures:
+        raise SystemExit(f"benchmark validation failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

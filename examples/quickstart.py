@@ -1,0 +1,13 @@
+"""Quickstart: assemble a CHAMP pipeline like LEGO bricks, stream frames
+through it, hot-swap a cartridge live, and match against an encrypted
+watchlist.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.launch.serve import run_biometric
+
+
+if __name__ == "__main__":
+    rep = run_biometric(n_frames=24, hotswap=True)
+    assert rep.lost == 0, "hot-swap must not lose frames"
+    print("quickstart OK — zero frame loss across a live hot-swap")

@@ -1,0 +1,35 @@
+"""Field-biometrics scenario (paper §5): checkpoint watchlist screening.
+
+1. enroll 10 subjects into the encrypted gallery (templates protected by
+   the keyed rotation, stored under the Threefry stream cipher);
+2. stream camera frames through detect -> quality -> embed -> match;
+3. mid-mission, the operator pulls the quality cartridge (hot-swap) —
+   screening continues with zero frame loss;
+4. re-keying the gallery (revocation) keeps matching working.
+
+Run:  PYTHONPATH=src python examples/serve_biometric.py
+"""
+import numpy as np
+
+from repro.launch.serve import build_biometric_pipeline, run_biometric
+
+
+def main():
+    rep = run_biometric(n_frames=30, hotswap=True)
+    assert rep.lost == 0
+    assert rep.total_downtime() < 1.0  # only the 0.5 s removal pause
+
+    # revocation demo
+    reg, gallery = build_biometric_pipeline(seed=1)
+    rng = np.random.default_rng(0)
+    raw = rng.normal(size=(5, 128)).astype(np.float32)
+    gallery.enroll(raw, [f"s{i}" for i in range(5)])
+    labels_before, _ = gallery.match(raw[[2]], k=1)
+    gallery.rekey(new_seed=99)
+    labels_after, _ = gallery.match(raw[[2]], k=1)
+    assert labels_before[0, 0] == labels_after[0, 0] == "s2"
+    print("serve_biometric OK — zero-loss hot-swap + revocable templates")
+
+
+if __name__ == "__main__":
+    main()

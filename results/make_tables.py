@@ -1,0 +1,51 @@
+"""Render the §Roofline tables for EXPERIMENTS.md from sweep JSONLs."""
+import json
+import sys
+
+
+def load(path):
+    by = {}
+    try:
+        for line in open(path):
+            r = json.loads(line)
+            by[(r["arch"], r["shape"])] = r
+    except FileNotFoundError:
+        pass
+    return by
+
+
+def table(by, title):
+    out = [f"### {title}", "",
+           "| arch | shape | rules | compute_s | memory_s | collective_s |"
+           " dominant | useful | mem/dev GiB (raw / TPU-adj) | fits |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for (a, s), r in sorted(by.items()):
+        if r["status"] == "skip":
+            out.append(f"| {a} | {s} | — | — | — | — | skip | — | — | "
+                       f"full-attn 500k skip |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {a} | {s} | — | ERROR | | | | | | |")
+            continue
+        rl, m = r["roofline"], r["memory"]
+        out.append(
+            f"| {a} | {s} | {r['rules']} | {rl['compute_s']:.3e} | "
+            f"{rl['memory_s']:.3e} | {rl['collective_s']:.3e} | "
+            f"{rl['dominant']} | {rl['useful_ratio']:.2f} | "
+            f"{m['per_device_total']/2**30:.2f} / "
+            f"{m['per_device_tpu_adjusted']/2**30:.2f} | "
+            f"{'yes' if m['fits_hbm'] else 'NO'} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    single = load("results/dryrun_single.jsonl")
+    multi = load("results/dryrun_multi.jsonl")
+    print(table(single, "16x16 single pod (roofline baseline)"))
+    print()
+    if multi:
+        ok = sum(1 for r in multi.values() if r["status"] == "ok")
+        sk = sum(1 for r in multi.values() if r["status"] == "skip")
+        print(f"### 2x16x16 multi-pod: {ok} ok / {sk} skip / "
+              f"{len(multi)-ok-sk} failed (compile-proof; roofline table is "
+              f"single-pod per the brief)")

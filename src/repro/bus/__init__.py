@@ -1,0 +1,2 @@
+from repro.bus.simulator import (BusParams, SharedBus, TABLE1, calibrated,
+                                 calibrate_from_fps, simulate_broadcast_fps)

@@ -1,0 +1,141 @@
+"""Capability cartridges: self-describing, hot-swappable AI stages.
+
+A ``Cartridge`` binds (1) a typed consume/produce contract, (2) a jitted JAX
+compute fn with its params, (3) a *device model* (service time, bytes moved,
+power) used by the bus simulator and power accounting, and (4) lifecycle
+hooks (load/warmup = the paper's "reloading the model on the stick", which
+dominates the 2 s re-insert pause).
+
+``capability_id`` mirrors the paper's predefined per-function codes.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.core import messages as msg
+
+
+@dataclass
+class DeviceModel:
+    """Calibrated accelerator model (per NCS2/Coral/cartridge type)."""
+    name: str = "ncs2"
+    service_s: float = 1 / 15.0  # per-frame compute time at batch 1
+    host_overhead_s: float = 0.004  # per-transfer host CPU dispatch cost
+    power_w: float = 1.8  # draw while running (paper §4.3: 1-2 W)
+    idle_w: float = 0.3
+    load_s: float = 1.5  # model (re)load on insert — bulk of the 2 s pause
+
+
+class Cartridge:
+    """Base class. Subclasses set contract + fn; instances are hot-swappable."""
+
+    capability_id: int = 0
+    name: str = "cartridge"
+    consumes: msg.MessageSpec = msg.MessageSpec(msg.IMAGE_FRAME)
+    produces: msg.MessageSpec = msg.MessageSpec(msg.IMAGE_FRAME)
+
+    def __init__(self, params: Any = None, device: Optional[DeviceModel] = None,
+                 name: Optional[str] = None):
+        self.params = params
+        self.device = device or DeviceModel()
+        if name:
+            self.name = name
+        self._fn = None
+        self._loaded = False
+        self.stats = {"processed": 0, "busy_s": 0.0}
+
+    # -- lifecycle ----------------------------------------------------------
+    def load(self) -> float:
+        """Flash/compile the cartridge. Returns load time (s)."""
+        t0 = time.perf_counter()
+        self._fn = jax.jit(self.fn)
+        self.warmup()
+        self._loaded = True
+        return time.perf_counter() - t0
+
+    def unload(self):
+        self._fn = None
+        self._loaded = False
+
+    def warmup(self):
+        ex = self.example_input()
+        if ex is not None:
+            jax.block_until_ready(self._fn(self.params, ex))
+
+    def example_input(self):
+        sh = self.consumes.shape
+        if sh is None or any(s is None for s in sh):
+            return None
+        dt = self.consumes.dtype or np.float32
+        return np.zeros(sh, dt)
+
+    # -- compute ------------------------------------------------------------
+    def fn(self, params, x):  # override
+        raise NotImplementedError
+
+    def process(self, m: msg.Message) -> msg.Message:
+        assert self._loaded, f"{self.name}: process() before load()"
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(self._fn(self.params, m.payload))
+        self.stats["busy_s"] += time.perf_counter() - t0
+        self.stats["processed"] += 1
+        return m.with_payload(out, self.produces.kind)
+
+    # -- handshake (paper §3.2: capability ID + data format) -----------------
+    def handshake(self) -> dict:
+        return {
+            "capability_id": self.capability_id,
+            "name": self.name,
+            "consumes": self.consumes,
+            "produces": self.produces,
+            "device": self.device.name,
+        }
+
+    def __repr__(self):
+        return (f"<{type(self).__name__} {self.name} "
+                f"{self.consumes.describe()}->{self.produces.describe()}>")
+
+
+class FnCartridge(Cartridge):
+    """Wrap an arbitrary (params, x) -> y JAX fn as a cartridge."""
+
+    def __init__(self, name, fn, consumes, produces, params=None,
+                 capability_id=99, device=None):
+        self._user_fn = fn
+        self.capability_id = capability_id
+        super().__init__(params=params, device=device, name=name)
+        self.consumes = consumes
+        self.produces = produces
+
+    def fn(self, params, x):
+        return self._user_fn(params, x)
+
+
+class PassThrough(Cartridge):
+    """VDiSK's bridge stage: inserted when a removed cartridge's gap is
+    type-compatible (paper §2.3: 'receives a default pass-through')."""
+
+    capability_id = 0
+    name = "bridge"
+
+    def __init__(self, spec: msg.MessageSpec):
+        super().__init__()
+        self.consumes = spec
+        self.produces = spec
+
+    def fn(self, params, x):
+        return x
+
+    def load(self) -> float:
+        self._fn = lambda p, x: x
+        self._loaded = True
+        return 0.0
+
+    def process(self, m: msg.Message) -> msg.Message:
+        self.stats["processed"] += 1
+        return m

@@ -1,0 +1,4 @@
+from repro.crypto.templates import (KeyedRotation, cosine_scores,
+                                    encrypt_bytes, decrypt_bytes,
+                                    encrypt_array, decrypt_array)
+from repro.crypto.gallery import SecureGallery

@@ -1,0 +1,80 @@
+"""Secure gallery store — the paper's Database/Storage cartridge brain.
+
+Holds a biometric gallery (N templates + identity labels) where templates
+live in the protected (rotated) space and the backing arrays are encrypted
+at rest with the Threefry stream cipher. Matching happens entirely in
+protected space via the ``gallery_match`` kernel (cosine top-k); raw
+embeddings never exist inside the store.
+
+The store also "defines the necessary matching calculation for the
+template type it stores" (paper fig. 2): `match()` is the store's own
+calculation, parameterized by template kind.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.crypto.templates import (KeyedRotation, decrypt_array,
+                                    encrypt_array)
+
+
+class SecureGallery:
+    def __init__(self, dim: int, *, seed: int = 7, template_kind: str =
+                 "face_embedding"):
+        self.dim = dim
+        self.template_kind = template_kind
+        self.rotation = KeyedRotation(dim, seed)
+        self._cipher_key = jax.random.PRNGKey(seed ^ 0x5EC2E7)
+        self._enc_templates: Optional[dict] = None  # encrypted at rest
+        self._labels: list = []
+        self._n = 0
+
+    # -- enrollment ------------------------------------------------------------
+    def enroll(self, raw_templates: np.ndarray, labels):
+        """raw (N, dim) embeddings -> protected + encrypted at rest."""
+        prot = np.asarray(self.rotation.protect(jnp.asarray(raw_templates)))
+        if self._enc_templates is not None:
+            prev = decrypt_array(self._cipher_key, self._enc_templates)
+            prot = np.concatenate([prev, prot], axis=0)
+        self._enc_templates = encrypt_array(self._cipher_key,
+                                            prot.astype(np.float32))
+        self._labels = list(self._labels) + list(labels)
+        self._n = len(self._labels)
+
+    def __len__(self):
+        return self._n
+
+    # -- matching ----------------------------------------------------------------
+    def protected_gallery(self) -> jax.Array:
+        assert self._enc_templates is not None, "empty gallery"
+        return jnp.asarray(decrypt_array(self._cipher_key,
+                                         self._enc_templates))
+
+    def match(self, raw_queries: jax.Array, k: int = 5):
+        """Match raw query embeddings; returns (labels, scores).
+
+        Queries are protected with the same rotation, then matched in
+        protected space (cosine is invariant under the shared rotation).
+        """
+        from repro.kernels import ops as K
+        q = self.rotation.protect(jnp.asarray(raw_queries))
+        g = self.protected_gallery()
+        scores, idx = K.gallery_match(q, g, k=min(k, self._n))
+        labels = np.asarray(self._labels, object)[np.asarray(idx)]
+        return labels, scores
+
+    # -- revocation --------------------------------------------------------------
+    def rekey(self, new_seed: int):
+        """Cancellable biometrics: re-protect the gallery under a new key."""
+        g = np.asarray(self.protected_gallery())
+        raw = np.asarray(self.rotation.unprotect(jnp.asarray(g)))
+        self.rotation = KeyedRotation(self.dim, new_seed)
+        self._cipher_key = jax.random.PRNGKey(new_seed ^ 0x5EC2E7)
+        prot = np.asarray(self.rotation.protect(jnp.asarray(raw)))
+        self._enc_templates = encrypt_array(self._cipher_key,
+                                            prot.astype(np.float32))

@@ -1,0 +1,118 @@
+"""Pallas TPU kernel: blocked online-softmax (flash) attention.
+
+Prefill hot path. Grid (B*H, Sq/BQ, Sk/BK) with the key dimension
+innermost (sequential on TPU): running max / denominator / output
+accumulators live in VMEM scratch across key blocks. GQA reads the
+kv-head via the BlockSpec index map (h // G) — kv heads are never
+materialized per-q-head in HBM. Causal and sliding-window masks skip
+fully-masked key blocks entirely (``pl.when`` around the block body), so
+compiled FLOPs follow the actual mask occupancy.
+
+VMEM tiling: q/k/v tiles are (BQ|BK, D) with D the full head dim —
+hardware-aligned for the MXU when D in {64, 128, 192, 256}.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -2.0e38
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
+                  scale, causal, window, bq, bk, sq, sk):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_s[...] = jnp.full(m_s.shape, NEG, m_s.dtype)
+        l_s[...] = jnp.zeros(l_s.shape, l_s.dtype)
+        acc_s[...] = jnp.zeros(acc_s.shape, acc_s.dtype)
+
+    # causal / window block skipping (compile-time grid, runtime predicate)
+    q_lo = qi * bq
+    k_lo = kj * bk
+    needed = jnp.bool_(True)
+    if causal:
+        needed &= k_lo <= q_lo + bq - 1
+    if window:
+        needed &= k_lo + bk - 1 >= q_lo - window + 1
+
+    @pl.when(needed)
+    def _block():
+        q = q_ref[0, 0]                              # (BQ, D)
+        k = k_ref[0, 0]                              # (BK, D)
+        v = v_ref[0, 0]                              # (BK, Dv)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (BQ, BK)
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos < sk
+        if causal:
+            mask &= qpos >= kpos
+        if window:
+            mask &= qpos - kpos < window
+        s = jnp.where(mask, s, NEG)
+        m_prev = m_s[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_s[...] = l_s[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_s[...] = acc_s[...] * corr + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_s[...] = m_new
+
+    @pl.when(kj == nk - 1)
+    def _flush():
+        o_ref[0, 0] = (acc_s[...] /
+                       jnp.maximum(l_s[...], 1e-20)).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal=True, window=0, scale=None,
+                           bq=256, bk=256, interpret=False):
+    """q: (B, H, Sq, D); k/v: (B, Kh, Sk, D[v]). Returns (B, H, Sq, Dv)."""
+    B, H, Sq, D = q.shape
+    Kh, Sk = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = H // Kh
+    scale = scale if scale is not None else D ** -0.5
+    bq = min(bq, Sq)
+    bk = min(bk, Sk)
+    Sqp = -(-Sq // bq) * bq
+    Skp = -(-Sk // bk) * bk
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, Sqp - Sq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, Skp - Sk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, Skp - Sk), (0, 0)))
+    kernel = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                               window=window, bq=bq, bk=bk, sq=Sq, sk=Sk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, Sqp // bq, Skp // bk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D),
+                         lambda bh, i, j: (bh // H, bh % H, i, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda bh, i, j, G=G, H=H:
+                         (bh // H, (bh % H) // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, Dv),
+                         lambda bh, i, j, G=G, H=H:
+                         (bh // H, (bh % H) // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, Dv),
+                               lambda bh, i, j: (bh // H, bh % H, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sqp, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, Dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :, :Sq]

@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: blocked cosine top-k gallery matching.
+
+The Database cartridge's hot path: score Q protected query templates
+against an N-row protected gallery and keep the top-k matches per query.
+
+TPU adaptation (vs. the GPU "matmul then sort" idiom): the gallery streams
+through VMEM in (BN, D) tiles feeding the MXU per (BQ, BN) score block; a
+running (BQ, k) top-k accumulator lives in VMEM scratch across the
+sequential gallery-block grid dimension, merged with each new score block
+by k unrolled max/argmax passes (k is small and static — no sort, and the
+(Q, N) score matrix never round-trips HBM).
+
+Grid: (Q/BQ, N/BN); the gallery dimension iterates fastest (sequential on
+TPU), the accumulator resets at j == 0 and flushes at j == last.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -3.0e38
+
+
+def _match_kernel(q_ref, g_ref, scores_ref, idx_ref, acc_s, acc_i, *,
+                  k: int, bn: int, n_gallery: int):
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_s[...] = jnp.full(acc_s.shape, NEG, acc_s.dtype)
+        acc_i[...] = jnp.zeros(acc_i.shape, acc_i.dtype)
+
+    q = q_ref[...]                                   # (BQ, D)
+    g = g_ref[...]                                   # (BN, D)
+    s = jax.lax.dot_general(
+        q, g, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (BQ, BN)
+    col = j * bn + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(col < n_gallery, s, NEG)           # mask tail padding
+
+    # merge carry and block: k unrolled max/argmax passes
+    cs = jnp.concatenate([acc_s[...], s], axis=1)    # (BQ, k+BN)
+    ci = jnp.concatenate([acc_i[...], col], axis=1)
+    lanes = jax.lax.broadcasted_iota(jnp.int32, cs.shape, 1)
+    for slot in range(k):
+        a = jnp.argmax(cs, axis=1)                   # (BQ,)
+        m = jnp.max(cs, axis=1)
+        acc_s[:, slot] = m
+        acc_i[:, slot] = jnp.take_along_axis(ci, a[:, None], axis=1)[:, 0]
+        cs = jnp.where(lanes == a[:, None], NEG, cs)
+
+    @pl.when(j == nj - 1)
+    def _flush():
+        scores_ref[...] = acc_s[...]
+        idx_ref[...] = acc_i[...]
+
+
+def gallery_match_pallas(q: jax.Array, g: jax.Array, *, k: int = 5,
+                         bq: int = 128, bn: int = 512,
+                         interpret: bool = False):
+    """q: (Q, D) normalized queries; g: (N, D) normalized gallery rows.
+    Returns (scores (Q, k) f32, idx (Q, k) i32), scores descending."""
+    Q, D = q.shape
+    N = g.shape[0]
+    bq = min(bq, max(Q, 8))
+    bn = min(bn, max(N, 8))
+    Qp = -(-Q // bq) * bq
+    Np = -(-N // bn) * bn
+    qp = jnp.pad(q.astype(jnp.float32), ((0, Qp - Q), (0, 0)))
+    gp = jnp.pad(g.astype(jnp.float32), ((0, Np - N), (0, 0)))
+    kernel = functools.partial(_match_kernel, k=k, bn=bn, n_gallery=N)
+    scores, idx = pl.pallas_call(
+        kernel,
+        grid=(Qp // bq, Np // bn),
+        in_specs=[
+            pl.BlockSpec((bq, D), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, D), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Qp, k), jnp.float32),
+            jax.ShapeDtypeStruct((Qp, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, k), jnp.float32),
+            pltpu.VMEM((bq, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(qp, gp)
+    return scores[:Q], idx[:Q]

@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: chunked Mamba-2 SSD (state-space dual) scan.
+
+The hybrid-arch (zamba2) hot path. The sequential recurrence
+    state_t = exp(dt_t A) state_{t-1} + dt_t x_t B_t^T ;  y_t = C_t state_t
+is evaluated chunk-parallel (Dao & Gu SSD): within a chunk of length c the
+quadratic form  y_intra = (C B^T o L) (dt * x)  runs on the MXU, and the
+running (P, N) state carries across chunks in VMEM scratch — one grid
+step per (batch*head, chunk), chunk dimension sequential.
+
+TPU adaptation: the GPU implementation tiles warps over the (c, c)
+attention-like matrix; here the natural mapping is one (c, N) x (N, c)
+MXU matmul per chunk with f32 accumulation in scratch, P and N padded to
+lane multiples.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, st_ref, state_s,
+                *, chunk: int):
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        state_s[...] = jnp.zeros(state_s.shape, state_s.dtype)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)        # (c, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)         # (c,)
+    A = a_ref[0, 0]                                  # scalar (this head)
+    B = b_ref[0].astype(jnp.float32)                 # (c, N)
+    C = c_ref[0].astype(jnp.float32)                 # (c, N)
+
+    a = dt * A                                       # (c,) log-decay
+    cum = jnp.cumsum(a)                              # (c,)
+    seg = cum[:, None] - cum[None, :]                # sum_{u in (s, t]} a_u
+    t_ge_s = (jax.lax.broadcasted_iota(jnp.int32, seg.shape, 0)
+              >= jax.lax.broadcasted_iota(jnp.int32, seg.shape, 1))
+    L = jnp.where(t_ge_s, jnp.exp(seg), 0.0)         # (c, c) decay mask
+    G = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (c, c)
+    xdt = x * dt[:, None]                            # (c, P)
+    y = jax.lax.dot((G * L).astype(xdt.dtype), xdt,
+                    preferred_element_type=jnp.float32)          # (c, P)
+
+    # inter-chunk: contribution of the carried state
+    st = state_s[...]                                # (P, N)
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        C, st, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (c, P)
+
+    # state update: st_new = exp(sum a) st + sum_t exp(sum_{u>t} a) dBx_t
+    total = cum[-1]
+    w = jnp.exp(total - cum)                         # (c,)
+    dBx = jax.lax.dot_general(xdt * w[:, None], B,
+                              (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (P, N)
+    state_s[...] = jnp.exp(total) * st + dBx
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    @pl.when(j == nj - 1)
+    def _flush():
+        st_ref[0, 0] = state_s[...].astype(st_ref.dtype)
+
+
+def mamba2_ssd_pallas(x, dt, A, B, C, *, chunk: int = 256,
+                      interpret: bool = False):
+    """x: (Bt, L, H, P); dt: (Bt, L, H); A: (H,); B, C: (Bt, L, N).
+    Returns (y (Bt, L, H, P) f32-accumulated, state (Bt, H, P, N) f32)."""
+    Bt, Lx, H, P = x.shape
+    N = B.shape[-1]
+    c = min(chunk, Lx)
+    assert Lx % c == 0, (Lx, c)
+    kernel = functools.partial(_ssd_kernel, chunk=c)
+    y, st = pl.pallas_call(
+        kernel,
+        grid=(Bt * H, Lx // c),
+        in_specs=[
+            pl.BlockSpec((1, c, 1, P),
+                         lambda bh, j, H=H: (bh // H, j, bh % H, 0)),
+            pl.BlockSpec((1, c, 1),
+                         lambda bh, j, H=H: (bh // H, j, bh % H)),
+            pl.BlockSpec((1, 1), lambda bh, j, H=H: (bh % H, 0)),
+            pl.BlockSpec((1, c, N), lambda bh, j, H=H: (bh // H, j, 0)),
+            pl.BlockSpec((1, c, N), lambda bh, j, H=H: (bh // H, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, c, 1, P),
+                         lambda bh, j, H=H: (bh // H, j, bh % H, 0)),
+            pl.BlockSpec((1, 1, P, N),
+                         lambda bh, j, H=H: (bh // H, bh % H, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bt, Lx, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((Bt, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A.reshape(H, 1), B, C)
+    return y, st

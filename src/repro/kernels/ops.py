@@ -1,0 +1,45 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) kernels execute with ``interpret=True`` —
+the kernel body runs in Python per grid step, which validates BlockSpec
+indexing and accumulator logic against the pure-jnp oracles in ref.py.
+On TPU the same calls compile to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.gallery_match import gallery_match_pallas
+from repro.kernels.mamba2_ssd import mamba2_ssd_pallas
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def gallery_match(q, g, *, k: int = 5):
+    """Cosine top-k of queries (Q,D) against gallery (N,D): normalizes,
+    then runs the blocked Pallas matcher."""
+    qn = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-9)
+    gn = g / jnp.maximum(jnp.linalg.norm(g, axis=-1, keepdims=True), 1e-9)
+    return gallery_match_pallas(qn.astype(jnp.float32),
+                                gn.astype(jnp.float32), k=k,
+                                interpret=_on_cpu())
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B,H,S,D); k/v: (B,Kh,S,Dv)."""
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  interpret=_on_cpu())
+
+
+@jax.jit
+def mamba2_ssd(x, dt, A, B, C):
+    """Chunk-parallel SSD scan; see mamba2_ssd.py."""
+    return mamba2_ssd_pallas(x, dt, A, B, C, interpret=_on_cpu())

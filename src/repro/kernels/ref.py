@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gallery_match_ref(q, g, *, k: int = 5):
+    """q: (Q, D), g: (N, D) — cosine top-k by full matmul + top_k."""
+    s = q.astype(jnp.float32) @ g.astype(jnp.float32).T
+    scores, idx = jax.lax.top_k(s, k)
+    return scores, idx.astype(jnp.int32)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, scale=None, window=0):
+    """q: (B,H,Sq,D), k/v: (B,Kh,Sk,D[v]). Plain softmax attention, f32."""
+    B, H, Sq, D = q.shape
+    Kh = k.shape[1]
+    G = H // Kh
+    scale = scale if scale is not None else D ** -0.5
+    qg = q.reshape(B, Kh, G, Sq, D)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    Sk = k.shape[2]
+    qpos = jnp.arange(Sq)[:, None] + (Sk - Sq)   # right-aligned
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask[None, None, None], s, -2e38)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, v.shape[-1])
+
+
+def mamba2_ssd_ref(x, dt, A, B, C, D=None, *, init_state=None):
+    """Sequential SSD recurrence (Mamba-2), the exactness oracle.
+
+    x: (Bt, L, H, P)  dt: (Bt, L, H)  A: (H,)  B,C: (Bt, L, N)
+    state: (Bt, H, P, N); y[t] = C[t] . state[t]  (+ D*x skip).
+    """
+    Bt, L, H, P = x.shape
+    N = B.shape[-1]
+    st = init_state if init_state is not None else jnp.zeros(
+        (Bt, H, P, N), jnp.float32)
+
+    def step(st, args):
+        xt, dtt, Bt_, Ct = args  # (Bt,H,P), (Bt,H), (Bt,N), (Bt,N)
+        dA = jnp.exp(dtt * A[None, :])                      # (Bt,H)
+        dBx = jnp.einsum("bhp,bn->bhpn", xt * dtt[..., None], Bt_)
+        st = st * dA[..., None, None] + dBx
+        y = jnp.einsum("bhpn,bn->bhp", st, Ct)
+        return st, y
+
+    xs = (x.swapaxes(0, 1).astype(jnp.float32),
+          dt.swapaxes(0, 1).astype(jnp.float32),
+          B.swapaxes(0, 1).astype(jnp.float32),
+          C.swapaxes(0, 1).astype(jnp.float32))
+    st, ys = jax.lax.scan(step, st, xs)
+    y = ys.swapaxes(0, 1)                                   # (Bt,L,H,P)
+    if D is not None:
+        y = y + x.astype(jnp.float32) * D[None, None, :, None]
+    return y, st

@@ -1,0 +1,226 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves the distribution config is coherent (no sharding
+mismatch, no unsupported collective), prints ``memory_analysis`` (fits HBM)
+and ``cost_analysis`` (FLOPs/bytes), and records the roofline terms parsed
+out of the compiled HLO (see hlo_stats / roofline).
+
+Usage:
+  python -m repro.launch.dryrun --arch tinyllama-1.1b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results.jsonl]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base as cb
+from repro.launch import specs as sp
+from repro.launch import steps as st
+from repro.launch.hlo_stats import analyze
+from repro.launch.mesh import HBM_BYTES, make_production_mesh
+from repro.launch.roofline import derive
+from repro.optim import for_config, param_count
+from repro.optim.optimizers import state_specs
+from repro.sharding import RULE_SETS, logical_to_pspec, spec_map, use_rules
+from jax.sharding import NamedSharding
+
+
+def pick_rules(cfg: cb.ArchConfig, shape: cb.ShapeSpec) -> str:
+    """Sharding-rule policy per (arch, shape) — see DESIGN.md §5."""
+    n = param_count(cfg)
+    if shape.kind in ("train", "prefill"):
+        return "fsdp" if n >= 2e9 else "tp"
+    if shape.name == "long_500k":
+        return "long"
+    # decode_32k: cache time axis shards over "model" (flash-decode);
+    # MoE archs additionally spread experts over the batch axes (EP)
+    if cfg.family == "moe":
+        return "decode_moe"
+    return "decode"
+
+
+def batch_shard_count(mesh) -> int:
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n
+
+
+def build_inputs(cfg, shape, mesh, rules):
+    """ShapeDtypeStructs (with shardings) for the step function's args."""
+    rule_map = RULE_SETS[rules]
+    params = sp.param_structs(cfg, mesh, rule_map)
+    if shape.kind == "train":
+        opt = for_config(cfg)
+        ospecs = state_specs(opt, __import__("repro.models.model",
+                                             fromlist=["param_specs"]
+                                             ).param_specs(cfg))
+        ostructs = spec_map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, s.dtype or jnp.float32,
+                sharding=NamedSharding(
+                    mesh, logical_to_pspec(s.axes, rule_map, mesh, s.shape))),
+            ospecs)
+        batch = sp.input_specs(cfg, shape, mesh, rule_map)["batch"]
+        step_struct = jax.ShapeDtypeStruct((), jnp.int32)
+        return opt, (params, ostructs, batch, step_struct)
+    if shape.kind == "prefill":
+        batch = sp.input_specs(cfg, shape, mesh, rule_map)["batch"]
+        return None, (params, batch)
+    dec = sp.input_specs(cfg, shape, mesh, rule_map)
+    return None, (params, dec["token"], dec["pos"], dec["cache"])
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             verbose: bool = True, rules: str | None = None,
+             cfg_overrides: dict | None = None) -> dict:
+    cfg = cb.get(arch)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    shape = cb.SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    if cfg_overrides:
+        rec["cfg_overrides"] = cfg_overrides
+    ok, why = cb.supports_shape(cfg, shape_name)
+    if not ok:
+        rec.update(status="skip", reason=why)
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    rules = rules or pick_rules(cfg, shape)
+    rec["rules"] = rules
+    try:
+        opt, args = build_inputs(cfg, shape, mesh, rules)
+        seq_shards = mesh.shape.get("model", 1) if rules == "fsdp_sp" else 1
+        fn, donate, n_micro = st.step_fn_for(
+            cfg, shape, opt, batch_shard_count(mesh), seq_shards=seq_shards)
+        rec["n_micro"] = n_micro
+        with use_rules(rules, mesh):
+            lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        stats = analyze(hlo)
+        rl = derive(cfg, shape,
+                    dot_flops_dev=stats.dot_flops,
+                    traffic_bytes_dev=stats.dot_bytes,
+                    collective_bytes_dev=stats.collective_bytes,
+                    n_chips=n_chips)
+        per_dev_bytes = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                         + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+        # XLA-CPU float normalization carries bf16 loop state as f32 (no
+        # native bf16 on CPU); TPU keeps it bf16 — report both figures.
+        adj_bytes = per_dev_bytes - stats.f32_upcast_carry_bytes
+        rec.update(
+            status="ok",
+            t_lower_s=round(t_lower, 1),
+            t_compile_s=round(t_compile, 1),
+            hlo_bytes=len(hlo),
+            memory={
+                "argument": mem.argument_size_in_bytes,
+                "output": mem.output_size_in_bytes,
+                "temp": mem.temp_size_in_bytes,
+                "alias": mem.alias_size_in_bytes,
+                "per_device_total": per_dev_bytes,
+                "per_device_tpu_adjusted": adj_bytes,
+                "fits_hbm": bool(adj_bytes <= HBM_BYTES),
+                "fits_hbm_raw": bool(per_dev_bytes <= HBM_BYTES),
+            },
+            cost={"flops": cost.get("flops"),
+                  "bytes_accessed": cost.get("bytes accessed")},
+            hlo_stats=stats.to_dict(),
+            roofline=rl.to_dict(),
+        )
+        if verbose:
+            print(f"[{arch} x {shape_name} @ {rec['mesh']} rules={rules}] "
+                  f"compile={t_compile:.0f}s "
+                  f"mem/dev={per_dev_bytes/2**30:.2f}GiB "
+                  f"adj={adj_bytes/2**30:.2f}GiB "
+                  f"(arg={mem.argument_size_in_bytes/2**30:.2f} "
+                  f"out={mem.output_size_in_bytes/2**30:.2f} "
+                  f"tmp={mem.temp_size_in_bytes/2**30:.2f} "
+                  f"alias={mem.alias_size_in_bytes/2**30:.2f}) "
+                  f"fits={rec['memory']['fits_hbm']} "
+                  f"terms(c/m/k)={rl.compute_s:.3e}/{rl.memory_s:.3e}/"
+                  f"{rl.collective_s:.3e} dom={rl.dominant} "
+                  f"useful={rl.useful_ratio:.2f}")
+    except Exception as e:
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+        if verbose:
+            print(f"[{arch} x {shape_name} @ {rec['mesh']}] FAILED: "
+                  f"{rec['error']}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--rules", default=None,
+                    help="override the sharding-rule policy (perf runs)")
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg override key=value (e.g. kv_cache_dtype=int8)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            v = int(v)
+        except ValueError:
+            try:
+                v = float(v)
+            except ValueError:
+                pass
+        overrides[k] = v
+
+    cells = []
+    archs = cb.ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(cb.SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                cells.append((a, s, mp))
+
+    out = open(args.out, "a") if args.out else None
+    n_ok = n_fail = n_skip = 0
+    for a, s, mp in cells:
+        rec = run_cell(a, s, multi_pod=mp, rules=args.rules,
+                       cfg_overrides=overrides or None)
+        n_ok += rec["status"] == "ok"
+        n_fail += rec["status"] == "error"
+        n_skip += rec["status"] == "skip"
+        if out:
+            rec.pop("traceback", None) if rec["status"] != "error" else None
+            out.write(json.dumps(rec) + "\n")
+            out.flush()
+    print(f"dry-run: {n_ok} ok / {n_skip} skip / {n_fail} FAILED "
+          f"of {len(cells)}")
+    if out:
+        out.close()
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,442 @@
+"""Static analysis of post-optimization HLO text — the dry-run "profiler".
+
+``compiled.cost_analysis()`` on the CPU backend (a) reports *per-device*
+numbers and (b) counts ``while`` bodies **once**, ignoring trip counts
+(calibrated empirically). Scan-over-layers therefore under-reports FLOPs by
+~n_layers. This module re-derives the three roofline inputs from HLO text:
+
+  * dot FLOPs          — every ``dot`` op's 2*batch*M*K*N, x loop trip count
+  * HBM traffic        — operand+result bytes of top-level instructions
+                         (fusion internals excluded), x trip count
+  * collective bytes   — operand bytes of all-gather / all-reduce /
+                         reduce-scatter / all-to-all / collective-permute,
+                         x trip count, split by type
+
+Loop trip counts come from XLA's ``backend_config known_trip_count`` on
+``while`` ops (exact for scan), with a condition-constant fallback.
+All numbers are per-device (HLO here is the SPMD per-device program).
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+# ops that move no HBM bytes of their own (control flow passes by alias)
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "after-all", "add-dependency", "partition-id", "replica-id",
+             "iota", "while", "conditional", "call", "custom-call",
+             "optimization-barrier", "broadcast", "reshape"}
+
+
+def shape_dims(type_str: str):
+    """[(dtype, [dims])] for every array in an HLO type string."""
+    return [(dt, [int(d) for d in dims.split(",") if d])
+            for dt, dims in _SHAPE_RE.findall(type_str)]
+
+
+def _nbytes(dt: str, dims) -> int:
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims:
+        n *= d
+    return n * _DTYPE_BYTES[dt]
+
+
+def shape_bytes(type_str: str) -> int:
+    return sum(_nbytes(dt, dims) for dt, dims in shape_dims(type_str))
+
+
+@dataclass
+class Instr:
+    name: str
+    result_type: str
+    op: str
+    operands: list
+    raw: str
+
+
+@dataclass
+class HloStats:
+    dot_flops: float = 0.0
+    dot_bytes: float = 0.0
+    traffic_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_by_type: dict = field(default_factory=dict)
+    collective_count: int = 0
+    f32_upcast_carry_bytes: int = 0
+    top_collectives: list = field(default_factory=list)
+    top_dots: list = field(default_factory=list)
+
+    def to_dict(self):
+        return {
+            "dot_flops": self.dot_flops,
+            "dot_bytes": self.dot_bytes,
+            "traffic_bytes": self.traffic_bytes,
+            "collective_bytes": self.collective_bytes,
+            "collective_by_type": dict(self.collective_by_type),
+            "collective_count": self.collective_count,
+            "f32_upcast_carry_bytes": int(self.f32_upcast_carry_bytes),
+            "top_collectives": self.top_collectives[:12],
+            "top_dots": self.top_dots[:12],
+        }
+
+
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*")
+
+
+def _parse_instr(ln: str):
+    """Manual scan: '%name = <type> <op>(<operands>), attrs...'.
+    Handles tuple types containing /*index=N*/ comments and '='."""
+    m = _NAME_RE.match(ln)
+    if not m:
+        return None
+    name = m.group(1)
+    i = m.end()
+    # result type: either a (possibly nested) tuple or an array type token
+    if i < len(ln) and ln[i] == "(":
+        depth, j = 1, i + 1
+        while j < len(ln) and depth:
+            if ln[j] == "(":
+                depth += 1
+            elif ln[j] == ")":
+                depth -= 1
+            j += 1
+        rtype = ln[i:j]
+        i = j
+    else:
+        mt = re.match(r"[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?", ln[i:])
+        if not mt:
+            return None
+        rtype = mt.group(0)
+        i += mt.end()
+    mo = re.match(r"\s*([a-z][\w\-]*)\(", ln[i:])
+    if not mo:
+        return None
+    op = mo.group(1)
+    i += mo.end()
+    depth, j = 1, i
+    while j < len(ln) and depth:
+        if ln[j] == "(":
+            depth += 1
+        elif ln[j] == ")":
+            depth -= 1
+        j += 1
+    operands = [o.strip().lstrip("%") for o in ln[i:j - 1].split(",")
+                if o.strip()]
+    return Instr(name, rtype, op, operands, ln)
+
+
+def _parse_computations(hlo: str):
+    comps, name, lines = {}, None, []
+    for ln in hlo.splitlines():
+        if name is None:
+            m = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\{\s*$", ln)
+            if m:
+                name, lines = m.group(2), []
+                if m.group(1):
+                    comps["__entry__"] = m.group(2)
+            continue
+        if ln.startswith("}"):
+            comps[name] = lines
+            name = None
+            continue
+        lines.append(ln)
+    return comps
+
+
+def _instrs(lines):
+    out = []
+    for ln in lines:
+        ins = _parse_instr(ln)
+        if ins is not None:
+            out.append(ins)
+    return out
+
+
+def _trip_from_backend_config(ln: str) -> int | None:
+    m = re.search(r'known_trip_count[":{\s]+n["\s:]+(\d+)', ln)
+    return int(m.group(1)) if m else None
+
+
+def _trip_from_condition(cond_lines) -> int:
+    best = 1
+    for ln in cond_lines or []:
+        for m in re.finditer(r"constant\((\d+)\)", ln):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _dot_flops(instr: Instr, sym: dict) -> float:
+    """2 * prod(batch) * prod(lhs_free) * prod(K) * prod(rhs_free)."""
+    if len(instr.operands) < 2:
+        return 0.0
+    lhs_t = sym.get(instr.operands[0])
+    rhs_t = sym.get(instr.operands[1])
+    if not lhs_t or not rhs_t:
+        return 0.0
+    lhs = shape_dims(lhs_t)
+    rhs = shape_dims(rhs_t)
+    if not lhs or not rhs:
+        return 0.0
+    ldims, rdims = lhs[0][1], rhs[0][1]
+
+    def _get(attr):
+        m = re.search(attr + r"=\{([0-9,]*)\}", instr.raw)
+        return [int(x) for x in m.group(1).split(",") if x] if m else []
+
+    lc, rc = _get("lhs_contracting_dims"), _get("rhs_contracting_dims")
+    lb, rb = _get("lhs_batch_dims"), _get("rhs_batch_dims")
+    pb = 1
+    for d in lb:
+        pb *= ldims[d] if d < len(ldims) else 1
+    k = 1
+    for d in lc:
+        k *= ldims[d] if d < len(ldims) else 1
+    lf = 1
+    for i, d in enumerate(ldims):
+        if i not in lc and i not in lb:
+            lf *= d
+    rf = 1
+    for i, d in enumerate(rdims):
+        if i not in rc and i not in rb:
+            rf *= d
+    return 2.0 * pb * lf * k * rf
+
+
+def analyze(hlo: str) -> HloStats:
+    comps = _parse_computations(hlo)
+    entry = comps.pop("__entry__", None)
+    parsed = {c: _instrs(lines) for c, lines in comps.items()}
+    if entry is None:
+        entry = max(parsed, key=lambda c: len(parsed[c])) if parsed else None
+
+    # call graph with loop multipliers. Computations reached only through
+    # fusion/to_apply edges are "fused contexts": their instructions run
+    # inside a fused kernel and move no HBM bytes of their own (dots and
+    # collectives still count).
+    mult: dict = defaultdict(float)
+    mult[entry] = 1.0
+    real: set = {entry}
+    frontier = [entry]
+    visited = set()
+    while frontier:
+        c = frontier.pop()
+        if c in visited or c not in parsed:
+            continue
+        visited.add(c)
+        c_real = c in real
+        for ins in parsed[c]:
+            if ins.op == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", ins.raw)
+                mc = re.search(r"condition=%?([\w.\-]+)", ins.raw)
+                trip = _trip_from_backend_config(ins.raw)
+                if trip is None and mc:
+                    trip = _trip_from_condition(comps.get(mc.group(1)))
+                trip = trip or 1
+                for mm in (mb, mc):
+                    if mm:
+                        callee = mm.group(1)
+                        mult[callee] = max(mult[callee], mult[c] * trip)
+                        if c_real:
+                            real.add(callee)
+                        frontier.append(callee)
+            else:
+                is_fusion_edge = ins.op in ("fusion", "reduce", "sort", "map",
+                                            "scatter", "reduce-window",
+                                            "select-and-scatter", "all-reduce",
+                                            "reduce-scatter")
+                for attr in ("calls", "to_apply", "branch_computations"):
+                    for m in re.finditer(
+                            attr + r"=\{?%?([\w.\-]+(?:,\s*%[\w.\-]+)*)\}?",
+                            ins.raw):
+                        for callee in re.split(r",\s*%?", m.group(1)):
+                            callee = callee.lstrip("%")
+                            if callee in parsed:
+                                mult[callee] = max(mult[callee], mult[c])
+                                if c_real and not is_fusion_edge and \
+                                        attr != "to_apply":
+                                    real.add(callee)
+                                frontier.append(callee)
+
+    # per-computation root info for in-place fusion accounting:
+    # list of (elem_bytes, is_dus, update_bytes) per root tuple element.
+    fusion_root_info = {}
+    for cname, instrs in parsed.items():
+        by_name = {i.name: i for i in instrs}
+        root = next((i for i in instrs
+                     if i.raw.lstrip().startswith("ROOT")), None)
+        if root is None:
+            continue
+        elems = root.operands if root.op == "tuple" else [root.name]
+        info = []
+        for e in elems:
+            ins_e = by_name.get(e)
+            # look through bitcast/copy/convert wrappers
+            hops = 0
+            while ins_e is not None and ins_e.op in (
+                    "bitcast", "copy", "convert", "transpose") and hops < 4:
+                ins_e = by_name.get(ins_e.operands[0]) if ins_e.operands \
+                    else None
+                hops += 1
+            if ins_e is None:
+                info.append((0, False, 0))
+                continue
+            eb = shape_bytes(ins_e.result_type)
+            if ins_e.op == "dynamic-update-slice" and len(ins_e.operands) >= 2:
+                upd = by_name.get(ins_e.operands[1])
+                ub = shape_bytes(upd.result_type) if upd else 0
+                info.append((eb, True, ub))
+            else:
+                info.append((eb, False, 0))
+        fusion_root_info[cname] = info
+    stats = HloStats(collective_by_type=defaultdict(float))
+    dots, colls = [], []
+    for cname, instrs in parsed.items():
+        m_c = mult.get(cname, 0.0)
+        if m_c == 0.0:
+            continue  # unreachable (dead) computation
+        sym = {i.name: i.result_type for i in instrs}
+        # parameters appear as "%p = f32[..] parameter(0)" — already in sym
+        for ins in instrs:
+            base = ins.op.replace("-start", "")
+            if base in _COLL_KINDS and not ins.op.endswith("-done"):
+                b = sum(shape_bytes(sym.get(o, o)) for o in ins.operands)
+                stats.collective_bytes += b * m_c
+                stats.collective_by_type[base] += b * m_c
+                stats.collective_count += 1
+                colls.append((base, b, m_c, cname, ins.name))
+            if ins.op == "dot":
+                f = _dot_flops(ins, sym)
+                stats.dot_flops += f * m_c
+                # matmul-boundary HBM traffic: operands + result. On TPU
+                # elementwise chains fuse into dot prologues/epilogues, so
+                # this is the tight memory-roofline basis (weights +
+                # activations streamed per use); bf16-equivalent for f32
+                # operands the CPU backend upcast from bf16.
+                db = shape_bytes(ins.result_type)
+                by_name_local = {i.name: i for i in instrs}
+                for o in ins.operands[:2]:
+                    t = sym.get(o, "")
+                    b = shape_bytes(t)
+                    if t.startswith("f32"):
+                        b //= 2   # CPU float-normalization upcast
+                    # look through converts: an int8-sourced operand
+                    # streams from HBM at int8 width on TPU (the upcast
+                    # fuses into the matmul read)
+                    src = by_name_local.get(o)
+                    hops = 0
+                    while src is not None and hops < 5:
+                        if src.op in ("convert", "copy", "bitcast",
+                                      "transpose", "fusion", "reshape",
+                                      "get-tuple-element",
+                                      "optimization-barrier"):
+                            ot = [sym.get(x, "") for x in src.operands]
+                            if any(x.startswith(("s8", "u8")) for x in ot):
+                                b = min(b, shape_bytes(t) // 2)
+                                break
+                            src = by_name_local.get(src.operands[0]) \
+                                if src.operands else None
+                            hops += 1
+                        else:
+                            break
+                    db += b
+                stats.dot_bytes += db * m_c
+                dots.append((f, m_c, cname, ins.name))
+            # HBM traffic: top-level ops in *real* computations move
+            # operands + result. In-place patterns must not be charged at
+            # full buffer size (else scan accumulators blow up as O(L^2)):
+            #  - dynamic-update-slice reads/writes only the update region;
+            #  - fusions pass accumulated buffers through aliased
+            #    operand/result pairs (greedy size-match removal).
+            if cname in real and ins.op not in _FREE_OPS \
+                    and base not in _COLL_KINDS:
+                res_b = shape_bytes(ins.result_type)
+                op_bytes = [shape_bytes(sym.get(o, o)) for o in ins.operands]
+                if ins.op == "dynamic-update-slice":
+                    upd = shape_bytes(sym.get(ins.operands[1], "")) \
+                        if len(ins.operands) > 1 else 0
+                    b = 2 * upd
+                elif ins.op == "dynamic-slice":
+                    b = 2 * res_b
+                elif ins.op == "fusion":
+                    m = re.search(r"calls=%?([\w.\-]+)", ins.raw)
+                    info = fusion_root_info.get(m.group(1)) if m else None
+                    if info:
+                        op_rem = list(op_bytes)
+                        b = 0
+                        for eb, is_dus, ub in info:
+                            if is_dus:
+                                b += 2 * ub          # update region r/w
+                                if eb in op_rem:     # aliased accumulator
+                                    op_rem.remove(eb)
+                            else:
+                                b += eb              # fresh output write
+                        b += sum(op_rem)             # operand reads
+                    else:
+                        b = res_b + sum(op_bytes)
+                else:
+                    b = res_b + sum(op_bytes)
+                stats.traffic_bytes += b * m_c
+
+    # CPU-backend artifact: XLA-CPU float normalization upcasts bf16 loop
+    # state to f32 (CPU has no native bf16 ALU), doubling the carried KV
+    # cache / grad accumulators in memory_analysis. TPU executes bf16
+    # natively so these buffers would stay bf16. Detect: f32 while-carry
+    # elements >= 64 MiB whose init-tuple producer (within 3 hops) is a
+    # convert from bf16; report half their bytes (f32 -> bf16 delta).
+    for cname, instrs in parsed.items():
+        if cname not in real:
+            continue
+        by_name = {i.name: i for i in instrs}
+        for ins in instrs:
+            if ins.op != "while" or not ins.operands:
+                continue
+            init = by_name.get(ins.operands[0])
+            if init is None or init.op != "tuple":
+                continue
+            elems = shape_dims(ins.result_type)
+            for idx, (dt, dims) in enumerate(elems):
+                if dt != "f32" or idx >= len(init.operands):
+                    continue
+                b = _nbytes(dt, dims)
+                if b < 64 * 2**20:
+                    continue
+                src = by_name.get(init.operands[idx])
+                hops = 0
+                is_upcast = False
+                while src is not None and hops < 3:
+                    if src.op == "convert" or "convert" in src.name:
+                        ops_t = [
+                            by_name[o].result_type if o in by_name else ""
+                            for o in src.operands]
+                        if any(t.startswith("bf16") for t in ops_t):
+                            is_upcast = True
+                            break
+                    src = by_name.get(src.operands[0]) if src.operands \
+                        else None
+                    hops += 1
+                if is_upcast:
+                    stats.f32_upcast_carry_bytes += b // 2
+
+    colls.sort(key=lambda t: -t[1] * t[2])
+    dots.sort(key=lambda t: -t[0] * t[1])
+    stats.top_collectives = [
+        {"kind": k, "bytes": b, "mult": m, "comp": c, "name": n}
+        for k, b, m, c, n in colls[:20]]
+    stats.top_dots = [
+        {"flops": f, "mult": m, "comp": c, "name": n}
+        for f, m, c, n in dots[:20]]
+    stats.collective_by_type = dict(stats.collective_by_type)
+    return stats

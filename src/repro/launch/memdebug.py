@@ -1,0 +1,69 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Memory autopsy for a dry-run cell: compile it and list the largest
+result tensors in the optimized HLO (the buffers that dominate
+``memory_analysis().temp_size``), grouped by op and computation.
+
+Usage: python -m repro.launch.memdebug --arch X --shape Y [--rules R]
+"""
+import argparse
+from collections import defaultdict
+
+import jax
+
+from repro.configs import base as cb
+from repro.launch import dryrun as dr
+from repro.launch import steps as st
+import repro.launch.hlo_stats as H
+from repro.launch.mesh import make_production_mesh
+from repro.sharding import use_rules
+
+
+def autopsy(arch: str, shape_name: str, rules: str | None = None,
+            top: int = 30, min_bytes: float = 100e6):
+    cfg = cb.get(arch)
+    shape = cb.SHAPES[shape_name]
+    mesh = make_production_mesh()
+    rules = rules or dr.pick_rules(cfg, shape)
+    opt, args = dr.build_inputs(cfg, shape, mesh, rules)
+    fn, donate, nm = st.step_fn_for(cfg, shape, opt,
+                                    dr.batch_shard_count(mesh))
+    with use_rules(rules, mesh):
+        c = jax.jit(fn, donate_argnums=donate).lower(*args).compile()
+    ma = c.memory_analysis()
+    print(f"[{arch} x {shape_name} rules={rules}] "
+          f"arg={ma.argument_size_in_bytes/2**30:.2f} "
+          f"out={ma.output_size_in_bytes/2**30:.2f} "
+          f"tmp={ma.temp_size_in_bytes/2**30:.2f} GiB")
+    comps = H._parse_computations(c.as_text())
+    comps.pop("__entry__", None)
+    rows = []
+    for cname, lines in comps.items():
+        for ln in lines:
+            ins = H._parse_instr(ln)
+            if ins is None or ins.op == "parameter":
+                continue
+            b = H.shape_bytes(ins.result_type)
+            if b >= min_bytes:
+                rows.append((b, ins.op, ins.result_type.split("{")[0][:64],
+                             cname[:40], ins.name[:36]))
+    rows.sort(reverse=True)
+    print(f"{'GiB':>6} {'op':14s} type")
+    for b, op, t, cn, nm_ in rows[:top]:
+        print(f"{b/2**30:6.2f} {op:14s} {t:66s} {cn} {nm_}")
+    return c
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--rules", default=None)
+    ap.add_argument("--top", type=int, default=30)
+    args = ap.parse_args()
+    autopsy(args.arch, args.shape, args.rules, args.top)
+
+
+if __name__ == "__main__":
+    main()

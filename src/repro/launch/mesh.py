@@ -1,0 +1,26 @@
+"""Production mesh construction (function, not constant — importing this
+module must never touch jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """v5e pod mesh: (data=16, model=16) single-pod, (pod=2, ...) multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Single-device mesh for CPU smoke runs (axes exist, size 1)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+# --- v5e hardware constants (roofline) --------------------------------------
+PEAK_FLOPS_BF16 = 197e12  # per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link (~3 links usable per direction on v5e torus)
+DCN_BW = 25e9  # bytes/s per host effective cross-pod
+VMEM_BYTES = 128 * 1024 * 1024
+HBM_BYTES = 16e9  # v5e: 16 GB HBM per chip

@@ -1,0 +1,134 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(cfg, shape)`` returns the kwargs for the lowered step:
+  train:    {"batch": {tokens, labels [, patches | frames]}}
+  prefill:  {"batch": {tokens [, patches | frames]}}
+  decode:   {"token", "pos", "cache" [, extras inside cache]}
+
+With ``mesh``+``rules`` given, shardings are attached to each struct so
+``jax.jit(...).lower(**specs)`` picks them up directly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import model as mdl
+from repro.sharding import (RULE_SETS, Spec, logical_to_pspec, shape_dtype,
+                            spec_map)
+
+MODEL_DTYPE = jnp.bfloat16
+
+
+def _sds(shape, dtype, axes, mesh, rules):
+    if mesh is None or rules is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    spec = logical_to_pspec(axes, rules, mesh, shape)
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def batch_specs(cfg: ArchConfig, S: int, B: int, *, with_labels: bool,
+                mesh=None, rules=None):
+    if isinstance(rules, str):
+        rules = RULE_SETS[rules]
+    b = {"tokens": _sds((B, S), jnp.int32, ("batch", "seq"), mesh, rules)}
+    if with_labels:
+        b["labels"] = _sds((B, S), jnp.int32, ("batch", "seq"), mesh, rules)
+    if cfg.family == "vlm":
+        b["patches"] = _sds((B, cfg.n_patches, cfg.vit_dim), MODEL_DTYPE,
+                            ("batch", "seq", None), mesh, rules)
+    if cfg.family == "audio":
+        b["frames"] = _sds((B, cfg.encoder_len, cfg.d_model), MODEL_DTYPE,
+                           ("batch", "frames", "embed"), mesh, rules)
+    return b
+
+
+def param_structs(cfg: ArchConfig, mesh=None, rules=None):
+    specs = mdl.param_specs(cfg)
+    if mesh is None or rules is None:
+        return shape_dtype(specs, MODEL_DTYPE)
+    if isinstance(rules, str):
+        rules = RULE_SETS[rules]
+    return spec_map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, s.dtype or MODEL_DTYPE,
+            sharding=NamedSharding(
+                mesh, logical_to_pspec(s.axes, rules, mesh, s.shape))),
+        specs)
+
+
+def cache_structs(cfg: ArchConfig, B: int, T: int, mesh=None, rules=None):
+    specs = mdl.cache_specs(cfg, B, T)
+    if mesh is None or rules is None:
+        return shape_dtype(specs, MODEL_DTYPE)
+    if isinstance(rules, str):
+        rules = RULE_SETS[rules]
+    return spec_map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, s.dtype or MODEL_DTYPE,
+            sharding=NamedSharding(
+                mesh, logical_to_pspec(s.axes, rules, mesh, s.shape))),
+        specs)
+
+
+def decode_specs(cfg: ArchConfig, shape: ShapeSpec, mesh=None, rules=None):
+    if isinstance(rules, str):
+        rules = RULE_SETS[rules]
+    B, T = shape.global_batch, shape.seq_len
+    return {
+        "token": _sds((B, 1), jnp.int32, ("batch", "seq"), mesh, rules),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        "cache": cache_structs(cfg, B, T, mesh, rules),
+    }
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec, mesh=None, rules=None):
+    """Every model input for the step implied by ``shape.kind``."""
+    if shape.kind == "train":
+        return {"batch": batch_specs(cfg, shape.seq_len, shape.global_batch,
+                                     with_labels=True, mesh=mesh, rules=rules)}
+    if shape.kind == "prefill":
+        return {"batch": batch_specs(cfg, shape.seq_len, shape.global_batch,
+                                     with_labels=False, mesh=mesh, rules=rules)}
+    if shape.kind == "decode":
+        return decode_specs(cfg, shape, mesh, rules)
+    raise ValueError(shape.kind)
+
+
+# ---------------------------------------------------------------------------
+# Concrete batches (smoke tests / examples) — small shapes only
+# ---------------------------------------------------------------------------
+def make_batch(cfg: ArchConfig, S: int, B: int, key, with_labels=True):
+    ks = jax.random.split(key, 4)
+    b = {"tokens": jax.random.randint(ks[0], (B, S), 0, cfg.vocab_size, jnp.int32)}
+    if with_labels:
+        b["labels"] = jax.random.randint(ks[1], (B, S), 0, cfg.vocab_size,
+                                         jnp.int32)
+    if cfg.family == "vlm":
+        b["patches"] = jax.random.normal(ks[2], (B, cfg.n_patches, cfg.vit_dim),
+                                         MODEL_DTYPE)
+    if cfg.family == "audio":
+        b["frames"] = jax.random.normal(ks[3], (B, cfg.encoder_len, cfg.d_model),
+                                        MODEL_DTYPE)
+    return b
+
+
+def init_cache(cfg: ArchConfig, B: int, T: int):
+    """Fresh (empty) cache. Attention ``pos`` slots get a large sentinel so
+    unwritten entries are masked out (cpos <= pos fails)."""
+    specs = mdl.cache_specs(cfg, B, T)
+
+    def mk(path, s):
+        dt = s.dtype or MODEL_DTYPE
+        last = getattr(path[-1], "key", None) if path else None
+        if last == "pos":
+            return jnp.full(s.shape, 1 << 30, dt)
+        if last == "m" and dt == jnp.float32:
+            return jnp.full(s.shape, -1e30, dt)  # xlstm stabilizer
+        return jnp.zeros(s.shape, dt)
+
+    return jax.tree_util.tree_map_with_path(
+        mk, specs, is_leaf=lambda x: isinstance(x, Spec))

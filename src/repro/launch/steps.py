@@ -1,0 +1,115 @@
+"""Step functions lowered by the dry-run and executed by train.py/serve.py.
+
+``make_train_step`` builds a full production step: microbatched gradient
+accumulation (scan), global-norm clipping, optimizer update, metrics. The
+microbatch count is auto-chosen so the remat'd activation working set fits
+v5e HBM next to params + optimizer state.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import model as mdl
+from repro.optim import Optimizer, param_count
+from repro.launch.mesh import HBM_BYTES
+
+
+# ---------------------------------------------------------------------------
+# Microbatch policy
+# ---------------------------------------------------------------------------
+def auto_microbatches(cfg: ArchConfig, B: int, S: int, batch_shards: int,
+                      target_bytes: float = 3.0e9,
+                      seq_shards: int = 1) -> int:
+    """Smallest power-of-2 microbatch count s.t. the per-device scan-carry
+    activation footprint (B_local*S*d per layer, bf16) fits ``target_bytes``.
+
+    Capped so each microbatch still divides over the batch-sharded axis.
+    ``seq_shards`` > 1 models sequence-parallel carries (fsdp_sp rules).
+    """
+    n_micro, cap = 1, max(B // batch_shards, 1)
+    while n_micro < cap:
+        b_local = max(B // batch_shards // n_micro, 1)
+        act = cfg.n_layers * b_local * (S // seq_shards) \
+            * cfg.d_model * 2 * 1.5
+        if act <= target_bytes:
+            break
+        n_micro *= 2
+    return n_micro
+
+
+def grad_accum_dtype(cfg: ArchConfig):
+    """fp32 accumulation when it fits; bf16 for 100B+ giants (memory)."""
+    return jnp.bfloat16 if param_count(cfg) >= 100e9 else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+def make_train_step(cfg: ArchConfig, opt: Optimizer, *, n_micro: int = 1):
+    accum_dt = grad_accum_dtype(cfg)
+
+    def loss_fn(params, batch):
+        return mdl.loss_fn(params, cfg, batch)
+
+    def train_step(params, opt_state, batch, step):
+        if n_micro == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            mb = jax.tree.map(
+                lambda x: x.reshape((n_micro, x.shape[0] // n_micro)
+                                    + x.shape[1:]), batch)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dt), params)
+
+            def body(carry, micro):
+                acc, loss_acc = carry
+                (l, m), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, micro)
+                acc = jax.tree.map(
+                    lambda a, gi: a + gi.astype(accum_dt), acc, g)
+                return (acc, loss_acc + l), m
+
+            (grads, loss), ms = jax.lax.scan(body, (g0, 0.0), mb)
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            loss = loss / n_micro
+            metrics = jax.tree.map(lambda x: jnp.mean(x, axis=0), ms)
+
+        new_params, new_state, om = opt.update(grads, opt_state, params, step)
+        metrics = dict(metrics, loss=loss, **om)
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Serve steps
+# ---------------------------------------------------------------------------
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, batch):
+        return mdl.prefill(params, cfg, batch)
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    def serve_step(params, token, pos, cache):
+        return mdl.serve_step(params, cfg, token, pos, cache)
+    return serve_step
+
+
+def step_fn_for(cfg: ArchConfig, shape: ShapeSpec, opt: Optimizer | None,
+                batch_shards: int, seq_shards: int = 1):
+    """(callable, donate_argnums, n_micro) for the step ``shape.kind`` implies."""
+    if shape.kind == "train":
+        n_micro = auto_microbatches(cfg, shape.global_batch, shape.seq_len,
+                                    batch_shards, seq_shards=seq_shards)
+        return (make_train_step(cfg, opt, n_micro=n_micro), (0, 1), n_micro)
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg), (), 1
+    if shape.kind == "decode":
+        return make_serve_step(cfg), (3,), 1
+    raise ValueError(shape.kind)

@@ -1,0 +1,515 @@
+"""Attention variants: GQA (full / sliding-window / cross) and MLA.
+
+Modes:
+  fwd(..., cache=None)        train / prefill over a full sequence. When
+                              ``want_cache`` the per-layer cache is returned.
+  step(..., cache, pos)       single-token decode against a cache.
+
+Long sequences use a kv-chunked online-softmax ("flash") path whose body is
+checkpointed, so fwd+bwd memory stays O(S * chunk). Sliding-window layers use
+an exact banded (loop-free) path. MLA decode uses the absorbed-matmul trick
+(toggled by ``absorb``).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import Spec, shard
+from repro.models.layers import apply_rope, rms_norm
+
+NEG = -2.0e38
+FLASH_CHUNK = 1024
+
+
+def _auto_q_chunk(B, H, Sq, kc, budget=64 * 1024 * 1024):
+    """Largest power-of-two q chunk whose f32 score tile (B, H, qc, kc)
+    stays under ``budget`` bytes per device (mesh-aware)."""
+    from repro.sharding import current_mesh_and_rules
+    mesh, _ = current_mesh_and_rules()
+    devs = mesh.size if mesh is not None else 1
+    qc = Sq
+    while qc > 1024 and B * H * qc * kc * 4 // devs > budget:
+        qc //= 2
+    return qc if qc < Sq else 0
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+def gqa_specs(cfg, d=None):
+    d = d or cfg.d_model
+    dh, H, Kh = cfg.dh, cfg.n_heads, cfg.n_kv_heads
+    return {
+        "ln": Spec((d,), ("embed",), "zeros"),
+        "wq": Spec((d, H, dh), ("embed", "heads", "head_dim")),
+        "wk": Spec((d, Kh, dh), ("embed", "kv_heads", "head_dim")),
+        "wv": Spec((d, Kh, dh), ("embed", "kv_heads", "head_dim")),
+        "wo": Spec((H, dh, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def mla_specs(cfg):
+    d, H = cfg.d_model, cfg.n_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    return {
+        "ln": Spec((d,), ("embed",), "zeros"),
+        "wdq": Spec((d, qr), ("embed", "q_lora")),
+        "q_ln": Spec((qr,), ("q_lora",), "zeros"),
+        "wuq": Spec((qr, H, dn + dr), ("q_lora", "heads", "head_dim")),
+        "wdkv": Spec((d, kvr + dr), ("embed", "kv_lora")),
+        "kv_ln": Spec((kvr,), ("kv_lora",), "zeros"),
+        "wuk": Spec((kvr, H, dn), ("kv_lora", "heads", "head_dim")),
+        "wuv": Spec((kvr, H, dv), ("kv_lora", "heads", "head_dim")),
+        "wo": Spec((H, dv, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def cache_spec_gqa(cfg, B, T, window=0):
+    dh, Kh = cfg.dh, cfg.n_kv_heads
+    W = min(window, T) if window else T
+    ax = ("cache_batch", "cache_seq", "kv_heads", "head_dim")
+    sx = ("cache_batch", "cache_seq", "kv_heads")
+    if cfg.kv_cache_dtype == "int8":
+        # per-(token, head) symmetric int8 rows; scales fold into scores
+        # and probs at use, so the dequantized cache never materializes
+        return {
+            "k": Spec((B, W, Kh, dh), ax, "zeros", jnp.int8),
+            "k_s": Spec((B, W, Kh), sx, "zeros", jnp.float32),
+            "v": Spec((B, W, Kh, dh), ax, "zeros", jnp.int8),
+            "v_s": Spec((B, W, Kh), sx, "zeros", jnp.float32),
+            "pos": Spec((B, W), sx[:2], "zeros", jnp.int32),
+        }
+    return {
+        "k": Spec((B, W, Kh, dh), ax, "zeros"),
+        "v": Spec((B, W, Kh, dh), ax, "zeros"),
+        "pos": Spec((B, W), sx[:2], "zeros", jnp.int32),
+    }
+
+
+def cache_spec_mla(cfg, B, T):
+    if cfg.kv_cache_dtype == "int8":
+        return {
+            "ckv": Spec((B, T, cfg.kv_lora_rank),
+                        ("cache_batch", "cache_seq", "kv_lora"), "zeros",
+                        jnp.int8),
+            "ckv_s": Spec((B, T), ("cache_batch", "cache_seq"), "zeros",
+                          jnp.float32),
+            "krope": Spec((B, T, cfg.qk_rope_head_dim),
+                          ("cache_batch", "cache_seq", "head_dim"), "zeros"),
+            "pos": Spec((B, T), ("cache_batch", "cache_seq"), "zeros",
+                        jnp.int32),
+        }
+    return {
+        "ckv": Spec((B, T, cfg.kv_lora_rank), ("cache_batch", "cache_seq", "kv_lora"), "zeros"),
+        "krope": Spec((B, T, cfg.qk_rope_head_dim), ("cache_batch", "cache_seq", "head_dim"), "zeros"),
+        "pos": Spec((B, T), ("cache_batch", "cache_seq"), "zeros", jnp.int32),
+    }
+
+
+def _quant_rows(x):
+    """Symmetric int8 over the last axis. x: (..., D) -> (int8, f32 scale)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+# ---------------------------------------------------------------------------
+# Core attention math
+# ---------------------------------------------------------------------------
+def _grouped_scores(q, k, out_dtype=jnp.float32):
+    """q: (B,Sq,H,D), k: (B,Sk,Kh,D) -> (B, Kh, G, Sq, Sk) in f32.
+
+    ``out_dtype=bf16`` emits a bf16-result dot (still f32-accumulated on
+    the MXU) and upcasts after: decode uses it so the KV cache is consumed
+    by a bf16 op — otherwise XLA-CPU's float normalization upcasts the
+    *entire carried cache* to f32 across the layer scan (2x HBM).
+    """
+    B, Sq, H, D = q.shape
+    Kh = k.shape[2]
+    G = H // Kh
+    q = q.reshape(B, Sq, Kh, G, D)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q, k,
+                   preferred_element_type=out_dtype)
+    return s.astype(jnp.float32)
+
+
+def _apply_probs(p, v):
+    """p: (B,Kh,G,Sq,Sk) f32, v: (B,Sk,Kh,D) -> (B,Sq,H,D)."""
+    B, Kh, G, Sq, Sk = p.shape
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v)
+    return o.reshape(B, Sq, Kh * G, v.shape[-1])
+
+
+def plain_attention(q, k, v, mask, scale):
+    s = _grouped_scores(q, k) * scale
+    s = jnp.where(mask, s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    return _apply_probs(p, v)
+
+
+def flash_attention_jnp(q, k, v, scale, causal=True, chunk=FLASH_CHUNK,
+                        q_offset=0, q_chunk=0):
+    """kv- and q-chunked online-softmax attention.
+    q: (B,Sq,H,D), k/v: (B,Sk,Kh,D[v]).
+
+    Exact; executes the full Sq x Sk rectangle with masking (the causal
+    skip is a recorded perf-iteration). Body is checkpointed -> residency
+    O(q_chunk * chunk) per (batch, head) in fwd+bwd. q chunking runs as a
+    sequential lax.map so only one q block's score tile is ever live.
+    """
+    B, Sq, H, D = q.shape
+    if q_chunk == 0:
+        q_chunk = _auto_q_chunk(B, H, Sq, chunk)
+    if 0 < q_chunk < Sq and Sq % q_chunk == 0:
+        nq = Sq // q_chunk
+        qs = q.reshape(B, nq, q_chunk, H, D).transpose(1, 0, 2, 3, 4)
+
+        def one(args):
+            qi, off = args
+            return flash_attention_jnp(qi, k, v, scale, causal=causal,
+                                       chunk=chunk,
+                                       q_offset=off, q_chunk=-1)
+
+        offs = q_offset + q_chunk * jnp.arange(nq)
+        outs = jax.lax.map(one, (qs, offs))
+        return outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, v.shape[-1])
+    Sk0 = k.shape[1]
+    Kh = k.shape[2]
+    Dv = v.shape[-1]          # may differ from D (MLA: qk 192 vs v 128)
+    G = H // Kh
+    pad = (-Sk0) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sk = k.shape[1]
+    nc = Sk // chunk
+    qf = q.reshape(B, Sq, Kh, G, D)
+    kc = k.reshape(B, nc, chunk, Kh, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nc, chunk, Kh, Dv).transpose(1, 0, 2, 3, 4)
+    qpos = q_offset + jnp.arange(Sq)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kj, vj, j = xs
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qf, kj,
+                       preferred_element_type=jnp.float32) * scale
+        kpos = j * chunk + jnp.arange(chunk)
+        if causal:
+            s = jnp.where(qpos[:, None] >= kpos[None, :], s, NEG)
+        if pad:
+            s = jnp.where(kpos[None, :] < Sk0, s, NEG)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p.astype(vj.dtype), vj,
+            preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, Kh, G, Sq), NEG, jnp.float32)
+    l0 = jnp.zeros((B, Kh, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Kh, G, Sq, Dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(body), (m0, l0, a0),
+        (kc, vc, jnp.arange(nc)))
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, Dv)
+    return out.astype(q.dtype)
+
+
+def banded_attention(q, k, v, scale, window):
+    """Exact sliding-window causal attention, loop-free.
+
+    Chunks of size ``window``; each q-chunk attends [prev chunk | own chunk]
+    with the exact (q-k) < window band mask. q,k,v: (B,S,*,D), S % window == 0.
+    """
+    B, S, H, D = q.shape
+    Kh = k.shape[2]
+    W = window
+    nc = S // W
+    qc = q.reshape(B, nc, W, H, D)
+    kc = k.reshape(B, nc, W, Kh, D)
+    vc = v.reshape(B, nc, W, Kh, D)
+    zk = jnp.zeros_like(kc[:, :1])
+    kprev = jnp.concatenate([zk, kc[:, :-1]], axis=1)
+    vprev = jnp.concatenate([jnp.zeros_like(vc[:, :1]), vc[:, :-1]], axis=1)
+    k2 = jnp.concatenate([kprev, kc], axis=2)  # (B, nc, 2W, Kh, D)
+    v2 = jnp.concatenate([vprev, vc], axis=2)
+    G = H // Kh
+    qg = qc.reshape(B, nc, W, Kh, G, D)
+    s = jnp.einsum("bnqkgd,bnskd->bnkgqs", qg, k2,
+                   preferred_element_type=jnp.float32) * scale
+    qpos = jnp.arange(W)[:, None]
+    kpos = jnp.arange(2 * W)[None, :] - W
+    band = (qpos >= kpos) & (qpos - kpos < W)  # (W, 2W)
+    first = jnp.arange(nc) == 0  # first chunk has no prev
+    valid = band[None, :, :] & ((kpos[None] >= 0) | ~first[:, None, None])
+    s = jnp.where(valid[None, :, None, None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bnkgqs,bnskd->bnqkgd", p.astype(v2.dtype), v2)
+    return o.reshape(B, S, H, D)
+
+
+# ---------------------------------------------------------------------------
+# GQA layer
+# ---------------------------------------------------------------------------
+def _qkv(p, x, cfg, theta, pos):
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", h, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h, p["wv"])
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "kv_heads", None)
+    v = shard(v, "batch", "seq", "kv_heads", None)
+    if theta:
+        q = apply_rope(q, pos, theta)
+        k = apply_rope(k, pos, theta)
+    return q, k, v
+
+
+def gqa_fwd(p, x, cfg, *, theta, window=0, causal=True, want_cache=False):
+    B, S, _ = x.shape
+    pos = jnp.arange(S)
+    q, k, v = _qkv(p, x, cfg, theta, pos)
+    scale = cfg.dh ** -0.5
+    if window and S > window and S % window == 0:
+        o = banded_attention(q, k, v, scale, window)
+    elif causal and S >= 2048 and S % FLASH_CHUNK == 0:
+        o = flash_attention_jnp(q, k, v, scale, causal=True)
+    else:
+        if causal:
+            m = pos[:, None] >= pos[None, :]
+            if window:
+                m &= pos[:, None] - pos[None, :] < window
+            mask = m[None, None, None]
+        else:
+            mask = jnp.ones((1, 1, 1, S, S), bool)
+        o = plain_attention(q, k, v, mask, scale)
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    y = shard(y, "batch", "seq", "embed")
+    cache = None
+    if want_cache:
+        if window and window < S:
+            # keep the last `window` positions (ring layout, oldest first)
+            kk, vv = k[:, S - window:], v[:, S - window:]
+            cpos = jnp.broadcast_to(pos[S - window:], (B, window))
+            roll = (-S) % window  # align ring slot = position % window
+            kk = jnp.roll(kk, roll, axis=1)
+            vv = jnp.roll(vv, roll, axis=1)
+            cpos = jnp.roll(cpos, roll, axis=1)
+        else:
+            kk, vv = k, v
+            cpos = jnp.broadcast_to(pos, (B, S))
+        if cfg.kv_cache_dtype == "int8":
+            kq, ks = _quant_rows(kk)
+            vq, vs = _quant_rows(vv)
+            cache = {"k": kq, "k_s": ks, "v": vq, "v_s": vs,
+                     "pos": cpos.astype(jnp.int32)}
+        else:
+            cache = {"k": kk, "v": vv, "pos": cpos.astype(jnp.int32)}
+        # barrier: without it XLA keeps the rope'd keys in f32 (the flash
+        # dot's operand precision) and stacks the scan's cache output as a
+        # full-depth f32 buffer next to the bf16 one
+        cache = jax.lax.optimization_barrier(cache)
+    return y, cache
+
+
+def gqa_step(p, x, cfg, cache, pos, *, theta, window=0):
+    """x: (B,1,d). cache k/v: (B,T,Kh,D) (T=window for local layers)."""
+    # barrier: stops XLA hoisting a bf16->f32 convert of the *entire
+    # stacked* cache out of the decode layer scan (2x cache memory)
+    cache = jax.lax.optimization_barrier(cache)
+    B = x.shape[0]
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", h, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h, p["wv"])
+    posv = jnp.full((B, 1), pos, jnp.int32)
+    if theta:
+        q = apply_rope(q, posv, theta)
+        k = apply_rope(k, posv, theta)
+    T = cache["k"].shape[1]
+    slot = (pos % T) if window else jnp.minimum(pos, T - 1)
+    int8_kv = "k_s" in cache
+    if int8_kv:
+        kq, ks = _quant_rows(k)
+        vq, vs = _quant_rows(v)
+        ck = jax.lax.dynamic_update_slice(cache["k"], kq, (0, slot, 0, 0))
+        cks = jax.lax.dynamic_update_slice(cache["k_s"], ks, (0, slot, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], vq, (0, slot, 0, 0))
+        cvs = jax.lax.dynamic_update_slice(cache["v_s"], vs, (0, slot, 0))
+        new_cache = {"k": ck, "k_s": cks, "v": cv, "v_s": cvs}
+    else:
+        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+    cpos = jax.lax.dynamic_update_slice(cache["pos"], posv, (0, slot))
+    new_cache["pos"] = cpos
+    valid = (cpos <= pos)
+    if window:
+        valid &= cpos > pos - window
+    if int8_kv:
+        # int8 dot; per-row scale folds into scores: (q . k_q) * k_s
+        s = _grouped_scores(q, ck.astype(q.dtype), out_dtype=q.dtype)
+        s = s * cks.transpose(0, 2, 1)[:, :, None, None, :]
+    else:
+        s = _grouped_scores(q, ck, out_dtype=ck.dtype)
+    s = s * (cfg.dh ** -0.5)
+    # flash-decode: keep scores sharded along the cache time axis (decode
+    # rules put cache_seq on "model"; long-context rules put it on "data")
+    s = shard(s, "cache_batch", None, None, None, "cache_seq")
+    s = jnp.where(valid[:, None, None, None, :], s, NEG)
+    pr = jax.nn.softmax(s, axis=-1)
+    if int8_kv:
+        # fold v scales into the probabilities: sum_t (p_t v_s_t) v_q_t
+        prv = pr * cvs.transpose(0, 2, 1)[:, :, None, None, :]
+        o = _apply_probs(prv, cv.astype(q.dtype))
+    else:
+        o = _apply_probs(pr, cv)
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA layer (DeepSeek V2/V3)
+# ---------------------------------------------------------------------------
+def _mla_qkv_latent(p, x, cfg, pos):
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    cq = rms_norm(jnp.einsum("bsd,dr->bsr", h, p["wdq"]), p["q_ln"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["wuq"])  # (B,S,H,dn+dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+    ckv_full = jnp.einsum("bsd,dr->bsr", h, p["wdkv"])
+    ckv, k_rope = ckv_full[..., : cfg.kv_lora_rank], ckv_full[..., cfg.kv_lora_rank:]
+    ckv = rms_norm(ckv, p["kv_ln"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], pos, cfg.rope_theta)[:, :, 0, :]
+    return q_nope, q_rope, ckv, k_rope
+
+
+def mla_fwd(p, x, cfg, *, want_cache=False):
+    B, S, _ = x.shape
+    pos = jnp.arange(S)
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    q_nope, q_rope, ckv, k_rope = _mla_qkv_latent(p, x, cfg, pos)
+    k_nope = jnp.einsum("bsr,rhk->bshk", ckv, p["wuk"])
+    v = jnp.einsum("bsr,rhk->bshk", ckv, p["wuv"])
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, cfg.n_heads, dr))],
+        axis=-1)
+    scale = (dn + dr) ** -0.5
+    if S >= 2048 and S % FLASH_CHUNK == 0:
+        o = flash_attention_jnp(q, k, v, scale, causal=True)
+    else:
+        mask = (pos[:, None] >= pos[None, :])[None, None, None]
+        o = plain_attention(q, k, v, mask, scale)
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    y = shard(y, "batch", "seq", "embed")
+    cache = None
+    if want_cache:
+        if cfg.kv_cache_dtype == "int8":
+            cq, cs = _quant_rows(ckv)
+            cache = {"ckv": cq, "ckv_s": cs, "krope": k_rope,
+                     "pos": jnp.broadcast_to(pos, (B, S)).astype(jnp.int32)}
+        else:
+            cache = {"ckv": ckv, "krope": k_rope,
+                     "pos": jnp.broadcast_to(pos, (B, S)).astype(jnp.int32)}
+        cache = jax.lax.optimization_barrier(cache)  # see gqa_fwd
+    return y, cache
+
+
+def mla_step(p, x, cfg, cache, pos, *, absorb=True):
+    cache = jax.lax.optimization_barrier(cache)  # see gqa_step
+    B = x.shape[0]
+    posv = jnp.full((B, 1), pos, jnp.int32)
+    q_nope, q_rope, ckv, k_rope = _mla_qkv_latent(p, x, cfg, posv)
+    T = cache["ckv"].shape[1]
+    int8_kv = "ckv_s" in cache
+    if int8_kv:
+        cq, cs = _quant_rows(ckv)
+        cckv = jax.lax.dynamic_update_slice(cache["ckv"], cq, (0, pos, 0))
+        ccs = jax.lax.dynamic_update_slice(cache["ckv_s"], cs, (0, pos))
+    else:
+        cckv = jax.lax.dynamic_update_slice(cache["ckv"], ckv, (0, pos, 0))
+        ccs = None
+    ckr = jax.lax.dynamic_update_slice(cache["krope"], k_rope, (0, pos, 0))
+    cpos = jax.lax.dynamic_update_slice(cache["pos"], posv, (0, pos))
+    valid = cpos <= pos  # (B,T)
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    scale = (dn + dr) ** -0.5
+    if absorb:
+        # scores = (q_nope W_uk^T) . ckv + q_rope . k_rope
+        q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["wuk"])  # (B,1,H,kvr)
+        lat = cckv.astype(x.dtype) if int8_kv else cckv
+        # bf16-result dots keep the carried latent cache bf16 (see
+        # _grouped_scores); scores upcast to f32 for the softmax
+        s = jnp.einsum("bshr,btr->bhst", q_lat, lat,
+                       preferred_element_type=lat.dtype).astype(jnp.float32)
+        if int8_kv:
+            s = s * ccs[:, None, None, :]    # fold row scales into scores
+        s += jnp.einsum("bshk,btk->bhst", q_rope, ckr,
+                        preferred_element_type=ckr.dtype).astype(jnp.float32)
+        s = shard(s, "cache_batch", None, None, "cache_seq")  # flash-decode
+        s = jnp.where(valid[:, None, None, :], s * scale, NEG)
+        pr = jax.nn.softmax(s, axis=-1)
+        if int8_kv:
+            pr = pr * ccs[:, None, None, :]  # fold scales into the combine
+        ctx = jnp.einsum("bhst,btr->bshr", pr.astype(x.dtype),
+                         lat if int8_kv else cckv)
+        o = jnp.einsum("bshr,rhk->bshk", ctx, p["wuv"])  # (B,1,H,dv)
+    else:
+        lat = cckv.astype(x.dtype) * ccs[..., None].astype(x.dtype) \
+            if int8_kv else cckv
+        k_nope = jnp.einsum("btr,rhk->bthk", lat, p["wuk"])
+        v = jnp.einsum("btr,rhk->bthk", lat, p["wuv"])
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(ckr[:, :, None, :], k_nope.shape[:3] + (dr,))],
+            axis=-1)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        s = jnp.einsum("bshk,bthk->bhst", q, k, preferred_element_type=jnp.float32)
+        s = jnp.where(valid[:, None, None, :], s * scale, NEG)
+        pr = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhst,bthk->bshk", pr.astype(v.dtype), v)
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    new_cache = {"ckv": cckv, "krope": ckr, "pos": cpos}
+    if int8_kv:
+        new_cache["ckv_s"] = ccs
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (whisper decoder)
+# ---------------------------------------------------------------------------
+def cross_specs(cfg):
+    return gqa_specs(cfg)
+
+
+def cross_fwd(p, x, memory_kv, cfg):
+    """x: (B,S,d); memory_kv: dict k/v (B,Se,Kh,D) precomputed."""
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+    Sq, Sk = x.shape[1], memory_kv["k"].shape[1]
+    if Sq * Sk >= 1 << 21:
+        # chunked path: unblocked cross scores at 4k x 1.5k x B x H are
+        # multi-GiB f32 (the whisper-train memory hog)
+        o = flash_attention_jnp(q, memory_kv["k"], memory_kv["v"],
+                                cfg.dh ** -0.5, causal=False, chunk=512)
+    else:
+        mask = jnp.ones((1, 1, 1, Sq, Sk), bool)
+        o = plain_attention(q, memory_kv["k"], memory_kv["v"], mask,
+                            cfg.dh ** -0.5)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def cross_memory(p, memory, cfg):
+    k = jnp.einsum("bsd,dhk->bshk", memory, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", memory, p["wv"])
+    return {"k": k, "v": v}

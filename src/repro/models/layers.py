@@ -1,0 +1,180 @@
+"""Shared primitives: norms, RoPE, gated MLP, embeddings, loss."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import Spec, shard
+
+
+def rms_norm(x, w, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, w, b, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def group_norm_heads(x, w, eps=1e-6):
+    """Per-head group norm over the last dim. x: (..., H, D)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32)).astype(dt)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(dh: int, theta: float):
+    return theta ** (-jnp.arange(0, dh, 2, dtype=jnp.float32) / dh)
+
+
+def apply_rope(x, pos, theta: float):
+    """x: (B, S, H, D); pos: (B, S) or (S,) int positions."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)  # (D/2,)
+    angles = pos[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    if angles.ndim == 2:  # (S, D/2) -> broadcast batch
+        angles = angles[None]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoid_pos_emb(S: int, d: int, offset=0):
+    pos = jnp.arange(offset, offset + S, dtype=jnp.float32)[:, None]
+    inv = 1e4 ** (-jnp.arange(0, d, 2, dtype=jnp.float32) / d)
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP
+# ---------------------------------------------------------------------------
+def mlp_specs(d: int, ff: int):
+    return {
+        "ln": Spec((d,), ("embed",), "zeros"),
+        "w_gate": Spec((d, ff), ("embed", "mlp")),
+        "w_up": Spec((d, ff), ("embed", "mlp")),
+        "w_down": Spec((ff, d), ("mlp", "embed")),
+    }
+
+
+def mlp_fwd(p, x, act="silu", eps=1e-6):
+    h = rms_norm(x, p["ln"], eps)
+    g = jnp.einsum("bsd,df->bsf", h, p["w_gate"])
+    u = jnp.einsum("bsd,df->bsf", h, p["w_up"])
+    g = shard(act_fn(act)(g) * u, "batch", "seq", "mlp")
+    return shard(jnp.einsum("bsf,fd->bsd", g, p["w_down"]), "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head / loss
+# ---------------------------------------------------------------------------
+def embed_specs(vocab: int, d: int, tie: bool):
+    # the token table's model dim uses its own logical axis ("embed_table",
+    # never data-sharded): a token gather from a 2-axis-sharded table makes
+    # SPMD replicate the whole table per lookup. vocab-sharding alone keeps
+    # the table at V*d/model_parallel bytes with an efficient masked gather.
+    s = {"tok": Spec((vocab, d), ("vocab", "embed_table"))}
+    if not tie:
+        s["head"] = Spec((d, vocab), ("embed", "vocab"))
+    return s
+
+
+def embed(p, tokens, d):
+    x = jnp.take(p["tok"], tokens, axis=0) * jnp.sqrt(float(d)).astype(jnp.bfloat16)
+    return shard(x, "batch", "seq", "embed")
+
+
+def unembed(p, x):
+    w = p.get("head")
+    if w is None:
+        w = p["tok"].T
+    logits = jnp.einsum("bsd,dv->bsv", x, w)
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def softmax_xent(logits, labels, mask=None):
+    """Mean next-token CE in f32. logits: (B,S,V); labels: (B,S)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - ll
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def softmax_xent_fused(embed_p, x, labels, mask=None, chunk=512):
+    """Fused unembed + CE that never materializes (B, S, V) logits.
+
+    Scans over sequence chunks; per chunk computes logits (B, c, V_shard)
+    for logZ (vocab-sharded logsumexp) and the label log-likelihood via a
+    gather of label *columns* of the head matrix (an embedding-style
+    lookup — no full-vocab tensor is ever indexed). The chunk body is
+    checkpointed so backward recomputes chunk logits instead of storing
+    them. This is the big-vocab memory lever (129k-vocab models would
+    otherwise spend GBs/device on one logits tensor).
+    """
+    W = embed_p.get("head")
+    if W is None:
+        W = embed_p["tok"].T                       # (d, V)
+    B, S, d = x.shape
+    c = min(chunk, S)
+    nc = S // c
+    rem = S - nc * c
+
+    def chunk_loss(xc, lc, mc):
+        logits = jnp.einsum("bsd,dv->bsv", xc, W)
+        logits = shard(logits, "batch", "seq", "vocab").astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)          # (B, c)
+        # label log-likelihood via one-hot product on the chunk logits —
+        # SPMD-friendly on a vocab-sharded tensor (a take/gather on the
+        # 2D-sharded head matrix forces full rematerialization instead)
+        oh = jax.nn.one_hot(lc, logits.shape[-1], dtype=logits.dtype)
+        oh = shard(oh, "batch", "seq", "vocab")
+        ll = jnp.sum(logits * oh, axis=-1)
+        nll = logz - ll
+        m = mc.astype(jnp.float32)
+        return jnp.sum(nll * m), jnp.sum(m)
+
+    if mask is None:
+        mask = jnp.ones_like(labels)
+
+    tot = jnp.zeros((), jnp.float32)
+    cnt = jnp.zeros((), jnp.float32)
+    if nc:
+        xs = x[:, : nc * c].reshape(B, nc, c, d).swapaxes(0, 1)
+        ls = labels[:, : nc * c].reshape(B, nc, c).swapaxes(0, 1)
+        ms = mask[:, : nc * c].reshape(B, nc, c).swapaxes(0, 1)
+
+        def body(acc, args):
+            t, n = acc
+            dt, dn = jax.checkpoint(chunk_loss)(*args)
+            return (t + dt, n + dn), None
+
+        (tot, cnt), _ = jax.lax.scan(body, (tot, cnt), (xs, ls, ms))
+    if rem:
+        dt, dn = chunk_loss(x[:, nc * c:], labels[:, nc * c:],
+                            mask[:, nc * c:])
+        tot, cnt = tot + dt, cnt + dn
+    return tot / jnp.maximum(cnt, 1.0)

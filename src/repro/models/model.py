@@ -1,0 +1,538 @@
+"""Unified model: composes attention/MoE/SSM/xLSTM blocks per ArchConfig.
+
+Families and their superblock layouts (scan-over-superblocks everywhere):
+  dense   1 x {attn(GQA), mlp}                      tinyllama/codeqwen/starcoder2
+  gemma3  6 x {attn} + 6 x {mlp}  (5 local + 1 global per superblock)
+  moe     {attn(MLA), moe}; `first_dense_layers` unrolled prefix with dense mlp
+  hybrid  6 x {mamba} + one weight-tied shared {attn, mlp} applied per superblock
+  ssm     5 x {mlstm} + 1 x {slstm} per superblock
+  vlm     dense backbone + patch-embedding projector (frontend stub)
+  audio   enc-dec: encoder (bidir attn) + decoder (self + cross)
+
+Entry points (all pure functions of (params, cfg, ...)):
+  loss_fn        train loss (CE + MoE aux [+ MTP])
+  forward        logits over a full sequence (prefill path, optional caches)
+  prefill        run a prompt, return (last-token logits, cache)
+  decode_step    one token through the cache -> (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import Spec, shard, spec_map
+from repro.models import layers as L
+from repro.models import attention as A
+from repro.models import ssm as S
+from repro.models import xlstm as X
+from repro.models import moe as M
+
+
+# ---------------------------------------------------------------------------
+# Spec helpers
+# ---------------------------------------------------------------------------
+def stack_specs(tree, n: int):
+    """Prepend a scanned 'layers' axis of size n to every Spec leaf."""
+    return spec_map(
+        lambda s: Spec((n,) + s.shape, ("layers",) + s.axes, s.init, s.dtype), tree
+    )
+
+
+def _mlp_specs(cfg, d=None):
+    d = d or cfg.d_model
+    if cfg.mlp_gated:
+        return L.mlp_specs(d, cfg.d_ff)
+    # non-gated (starcoder2 / whisper style)
+    return {
+        "ln": Spec((d,), ("embed",), "zeros"),
+        "w_up": Spec((d, cfg.d_ff), ("embed", "mlp")),
+        "w_down": Spec((cfg.d_ff, d), ("mlp", "embed")),
+    }
+
+
+def _mlp_fwd(p, x, cfg):
+    if "w_gate" in p:
+        return L.mlp_fwd(p, x, cfg.act, cfg.norm_eps)
+    h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    u = L.act_fn(cfg.act)(jnp.einsum("bsd,df->bsf", h, p["w_up"]))
+    u = shard(u, "batch", "seq", "mlp")
+    return shard(jnp.einsum("bsf,fd->bsd", u, p["w_down"]), "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# Superblock param/cache specs
+# ---------------------------------------------------------------------------
+def _superblock_specs(cfg):
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        return {"attn": A.gqa_specs(cfg), "mlp": _mlp_specs(cfg)}
+    if fam == "gemma3":
+        return {
+            "attn": stack_specs(A.gqa_specs(cfg), cfg.superblock),
+            "mlp": stack_specs(_mlp_specs(cfg), cfg.superblock),
+        }
+    if fam == "moe":
+        return {"attn": A.mla_specs(cfg), "moe": M.moe_specs(cfg)}
+    if fam == "hybrid":
+        return {"mamba": stack_specs(S.mamba2_specs(cfg), cfg.superblock)}
+    if fam == "ssm":
+        return {
+            "m": stack_specs(X.mlstm_specs(cfg), cfg.superblock - 1),
+            "s": X.slstm_specs(cfg),
+        }
+    if fam == "audio":  # decoder superblock
+        return {
+            "self": A.gqa_specs(cfg),
+            "cross": A.cross_specs(cfg),
+            "mlp": _mlp_specs(cfg),
+        }
+    raise ValueError(fam)
+
+
+def param_specs(cfg) -> Any:
+    d = cfg.d_model
+    p = {"embed": L.embed_specs(cfg.vocab_size, d, cfg.tie_embeddings),
+         "final_ln": Spec((d,), ("embed",), "zeros")}
+    nsb = cfg.n_superblocks
+    p["blocks"] = stack_specs(_superblock_specs(cfg), nsb)
+    if cfg.family == "moe" and cfg.first_dense_layers:
+        p["prefix"] = {
+            f"l{i}": {"attn": A.mla_specs(cfg), "mlp": _mlp_specs(cfg)}
+            for i in range(cfg.first_dense_layers)
+        }
+    if cfg.family == "hybrid":
+        p["shared"] = {"attn": A.gqa_specs(cfg), "mlp": _mlp_specs(cfg)}
+    if cfg.family == "vlm":
+        dv = cfg.vit_dim
+        p["projector"] = {
+            "ln": Spec((dv,), ("embed",), "zeros"),
+            "w1": Spec((dv, d), ("embed", "embed2")),
+            "w2": Spec((d, d), ("embed", "embed2")),
+        }
+    if cfg.family == "audio":
+        enc = {"attn": A.gqa_specs(cfg), "mlp": _mlp_specs(cfg)}
+        p["encoder"] = stack_specs(enc, cfg.encoder_layers)
+        p["enc_ln"] = Spec((d,), ("embed",), "zeros")
+    if cfg.mtp:
+        p["mtp"] = {
+            "proj": Spec((2 * d, d), ("embed", "embed2")),
+            "attn": A.mla_specs(cfg),
+            "mlp": _mlp_specs(cfg),
+            "ln": Spec((d,), ("embed",), "zeros"),
+        }
+    return p
+
+
+def cache_specs(cfg, B: int, T: int) -> Any:
+    fam = cfg.family
+    nsb = cfg.n_superblocks
+    if fam in ("dense", "vlm"):
+        c = stack_specs({"attn": A.cache_spec_gqa(cfg, B, T)}, nsb)
+    elif fam == "gemma3":
+        c = stack_specs({
+            "local": stack_specs(
+                A.cache_spec_gqa(cfg, B, T, window=cfg.sliding_window),
+                cfg.superblock - 1),
+            "global": A.cache_spec_gqa(cfg, B, T),
+        }, nsb)
+    elif fam == "moe":
+        c = {"scan": stack_specs({"attn": A.cache_spec_mla(cfg, B, T)}, nsb)}
+        if cfg.first_dense_layers:
+            c["prefix"] = {
+                f"l{i}": A.cache_spec_mla(cfg, B, T)
+                for i in range(cfg.first_dense_layers)
+            }
+    elif fam == "hybrid":
+        c = stack_specs({
+            "mamba": stack_specs(S.mamba2_cache_spec(cfg, B), cfg.superblock),
+            "shared": A.cache_spec_gqa(cfg, B, T),
+        }, nsb)
+    elif fam == "ssm":
+        c = stack_specs({
+            "m": stack_specs(X.mlstm_cache_spec(cfg, B), cfg.superblock - 1),
+            "s": X.slstm_cache_spec(cfg, B),
+        }, nsb)
+    elif fam == "audio":
+        c = {
+            "dec": stack_specs({"self": A.cache_spec_gqa(cfg, B, T)}, nsb),
+            "cross": stack_specs(
+                {"k": Spec((B, cfg.encoder_len, cfg.n_kv_heads, cfg.dh),
+                           ("cache_batch", "cache_seq", "kv_heads", "head_dim"),
+                           "zeros"),
+                 "v": Spec((B, cfg.encoder_len, cfg.n_kv_heads, cfg.dh),
+                           ("cache_batch", "cache_seq", "kv_heads", "head_dim"),
+                           "zeros")}, nsb),
+        }
+    else:
+        raise ValueError(fam)
+    return c
+
+
+# ---------------------------------------------------------------------------
+# Superblock forward bodies
+# ---------------------------------------------------------------------------
+def _sb_fwd(cfg, x, bp, shared, want_cache):
+    """One superblock over a full sequence. Returns (x, cache, aux)."""
+    fam = cfg.family
+    aux = jnp.zeros((), jnp.float32)
+    if fam in ("dense", "vlm"):
+        y, c = A.gqa_fwd(bp["attn"], x, cfg, theta=cfg.rope_theta,
+                         window=cfg.sliding_window, want_cache=want_cache)
+        x = x + y
+        x = x + _mlp_fwd(bp["mlp"], x, cfg)
+        return x, ({"attn": c} if want_cache else None), aux
+    if fam == "gemma3":
+        locals_, glob = [], None
+        for i in range(cfg.superblock):
+            ap = jax.tree.map(lambda t: t[i], bp["attn"])
+            mp = jax.tree.map(lambda t: t[i], bp["mlp"])
+            is_global = i == cfg.superblock - 1
+            theta = cfg.rope_theta_global if is_global else cfg.rope_theta
+            win = 0 if is_global else cfg.sliding_window
+            y, c = A.gqa_fwd(ap, x, cfg, theta=theta, window=win,
+                             want_cache=want_cache)
+            x = x + y
+            x = x + _mlp_fwd(mp, x, cfg)
+            if want_cache:
+                (locals_.append(c) if not is_global else None)
+                glob = c if is_global else glob
+        cache = None
+        if want_cache:
+            cache = {"local": jax.tree.map(lambda *t: jnp.stack(t), *locals_),
+                     "global": glob}
+        return x, cache, aux
+    if fam == "moe":
+        y, c = A.mla_fwd(bp["attn"], x, cfg, want_cache=want_cache)
+        x = x + y
+        y, aux = M.moe_fwd(bp["moe"], x, cfg)
+        x = x + y
+        return x, ({"attn": c} if want_cache else None), aux
+    if fam == "hybrid":
+        mcs = []
+        for i in range(cfg.superblock):
+            mp = jax.tree.map(lambda t: t[i], bp["mamba"])
+            y, c = S.mamba2_fwd(mp, x, cfg, want_cache=want_cache)
+            x = x + y
+            if want_cache:
+                mcs.append(c)
+        y, c = A.gqa_fwd(shared["attn"], x, cfg, theta=cfg.rope_theta,
+                         want_cache=want_cache)
+        x = x + y
+        x = x + _mlp_fwd(shared["mlp"], x, cfg)
+        cache = None
+        if want_cache:
+            cache = {"mamba": jax.tree.map(lambda *t: jnp.stack(t), *mcs),
+                     "shared": c}
+        return x, cache, aux
+    if fam == "ssm":
+        mcs = []
+        for i in range(cfg.superblock - 1):
+            mp = jax.tree.map(lambda t: t[i], bp["m"])
+            y, c = X.mlstm_fwd(mp, x, cfg, want_cache=want_cache)
+            x = x + y
+            if want_cache:
+                mcs.append(c)
+        y, c = X.slstm_fwd(bp["s"], x, cfg, want_cache=want_cache)
+        x = x + y
+        cache = None
+        if want_cache:
+            cache = {"m": jax.tree.map(lambda *t: jnp.stack(t), *mcs), "s": c}
+        return x, cache, aux
+    if fam == "audio":
+        memory_kv = shared  # dict k/v per superblock (already sliced)
+        y, c = A.gqa_fwd(bp["self"], x, cfg, theta=0.0, want_cache=want_cache)
+        x = x + y
+        x = x + A.cross_fwd(bp["cross"], x, memory_kv, cfg)
+        x = x + _mlp_fwd(bp["mlp"], x, cfg)
+        return x, ({"self": c} if want_cache else None), aux
+    raise ValueError(fam)
+
+
+def _sb_step(cfg, x, bp, shared, cache, pos):
+    """One superblock for one decode token. Returns (x, new_cache)."""
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        y, c = A.gqa_step(bp["attn"], x, cfg, cache["attn"], pos,
+                          theta=cfg.rope_theta, window=cfg.sliding_window)
+        x = x + y
+        x = x + _mlp_fwd(bp["mlp"], x, cfg)
+        return x, {"attn": c}
+    if fam == "gemma3":
+        lc, gc = [], None
+        for i in range(cfg.superblock):
+            ap = jax.tree.map(lambda t: t[i], bp["attn"])
+            mp = jax.tree.map(lambda t: t[i], bp["mlp"])
+            is_global = i == cfg.superblock - 1
+            theta = cfg.rope_theta_global if is_global else cfg.rope_theta
+            win = 0 if is_global else cfg.sliding_window
+            ci = cache["global"] if is_global else jax.tree.map(
+                lambda t: t[i], cache["local"])
+            y, c = A.gqa_step(ap, x, cfg, ci, pos, theta=theta, window=win)
+            x = x + y
+            x = x + _mlp_fwd(mp, x, cfg)
+            (lc.append(c) if not is_global else None)
+            gc = c if is_global else gc
+        return x, {"local": jax.tree.map(lambda *t: jnp.stack(t), *lc),
+                   "global": gc}
+    if fam == "moe":
+        y, c = A.mla_step(bp["attn"], x, cfg, cache["attn"], pos)
+        x = x + y
+        y, _ = M.moe_fwd(bp["moe"], x, cfg)
+        x = x + y
+        return x, {"attn": c}
+    if fam == "hybrid":
+        mcs = []
+        for i in range(cfg.superblock):
+            mp = jax.tree.map(lambda t: t[i], bp["mamba"])
+            ci = jax.tree.map(lambda t: t[i], cache["mamba"])
+            y, c = S.mamba2_step(mp, x, cfg, ci)
+            x = x + y
+            mcs.append(c)
+        y, c = A.gqa_step(shared["attn"], x, cfg, cache["shared"], pos,
+                          theta=cfg.rope_theta)
+        x = x + y
+        x = x + _mlp_fwd(shared["mlp"], x, cfg)
+        return x, {"mamba": jax.tree.map(lambda *t: jnp.stack(t), *mcs),
+                   "shared": c}
+    if fam == "ssm":
+        mcs = []
+        for i in range(cfg.superblock - 1):
+            mp = jax.tree.map(lambda t: t[i], bp["m"])
+            ci = jax.tree.map(lambda t: t[i], cache["m"])
+            y, c = X.mlstm_step(mp, x, cfg, ci)
+            x = x + y
+            mcs.append(c)
+        y, c = X.slstm_step(bp["s"], x, cfg, cache["s"])
+        x = x + y
+        return x, {"m": jax.tree.map(lambda *t: jnp.stack(t), *mcs), "s": c}
+    if fam == "audio":
+        y, c = A.gqa_step(bp["self"], x, cfg, cache["self"], pos, theta=0.0)
+        x = x + y
+        x = x + A.cross_fwd(bp["cross"], x, shared, cfg)
+        x = x + _mlp_fwd(bp["mlp"], x, cfg)
+        return x, {"self": c}
+    raise ValueError(fam)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model forward
+# ---------------------------------------------------------------------------
+def _remat(fn, cfg):
+    if not cfg.remat:
+        return fn
+    policy = getattr(jax.checkpoint_policies, cfg.remat_policy, None)
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _inject_inputs(params, cfg, batch):
+    """Token embedding + modality stubs. Returns x (B,S,d) and pos offset."""
+    x = L.embed(params["embed"], batch["tokens"], cfg.d_model)
+    if cfg.family == "vlm" and "patches" in batch:
+        pp = params["projector"]
+        h = L.rms_norm(batch["patches"], pp["ln"], cfg.norm_eps)
+        h = jax.nn.gelu(jnp.einsum("bpd,de->bpe", h, pp["w1"]))
+        h = jnp.einsum("bpd,de->bpe", h, pp["w2"]).astype(x.dtype)
+        n = h.shape[1]
+        x = jnp.concatenate([h, x[:, n:]], axis=1)  # patches replace prefix
+    if cfg.family == "audio":
+        x = x + L.sinusoid_pos_emb(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+    return x
+
+
+def forward(params, cfg, batch, *, want_cache=False, return_hidden=False):
+    """Full-sequence forward. Returns (logits | hidden, aux, cache|None).
+
+    ``return_hidden`` skips the unembed projection — the train loss fuses
+    unembed+CE chunkwise (softmax_xent_fused) so (B,S,V) logits never
+    materialize.
+    """
+    x = _inject_inputs(params, cfg, batch)
+    cross_kv = None
+    if cfg.family == "audio":
+        frames = batch["frames"]
+        h = frames + L.sinusoid_pos_emb(frames.shape[1], cfg.d_model).astype(
+            frames.dtype)[None]
+
+        def ebody(h, ep):
+            y, _ = A.gqa_fwd(ep["attn"], h, cfg, theta=0.0, causal=False)
+            h = h + y
+            h = h + _mlp_fwd(ep["mlp"], h, cfg)
+            return h, None
+
+        h, _ = jax.lax.scan(_remat(ebody, cfg), h, params["encoder"])
+        memory = L.rms_norm(h, params["enc_ln"], cfg.norm_eps)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    if cfg.family == "moe" and cfg.first_dense_layers:
+        for i in range(cfg.first_dense_layers):
+            bp = params["prefix"][f"l{i}"]
+            y, _ = A.mla_fwd(bp["attn"], x, cfg, want_cache=False)
+            x = x + y
+            x = x + _mlp_fwd(bp["mlp"], x, cfg)
+
+    shared = params.get("shared")
+
+    def body(carry, bp):
+        x, aux = carry
+        sh = shared
+        if cfg.family == "audio":
+            sh = A.cross_memory(bp["cross"], memory, cfg)
+        x, cache, a = _sb_fwd(cfg, x, bp, sh, want_cache)
+        # sequence-parallel boundary: under "fsdp_sp" rules the carry (the
+        # dominant activation buffer) is seq-sharded over "model"
+        x = shard(x, "batch", "act_seq", "embed")
+        return (x, aux + a), cache
+
+    (x, aux_total), caches = jax.lax.scan(
+        _remat(body, cfg), (x, aux_total), params["blocks"])
+    x = L.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    logits = x if return_hidden else L.unembed(params["embed"], x)
+    cache = None
+    if want_cache:
+        if cfg.family == "moe":
+            cache = {"scan": caches}
+            if cfg.first_dense_layers:
+                # prefix caches: recompute cheaply (prefix is tiny)
+                pc = {}
+                xi = _inject_inputs(params, cfg, batch)
+                for i in range(cfg.first_dense_layers):
+                    bp = params["prefix"][f"l{i}"]
+                    y, c = A.mla_fwd(bp["attn"], xi, cfg, want_cache=True)
+                    xi = xi + y
+                    xi = xi + _mlp_fwd(bp["mlp"], xi, cfg)
+                    pc[f"l{i}"] = c
+                cache["prefix"] = pc
+        elif cfg.family == "audio":
+            def mk_kv(_, dp):
+                return None, A.cross_memory(dp["cross"], memory, cfg)
+            _, cross = jax.lax.scan(mk_kv, None, params["blocks"])
+            cache = {"dec": caches, "cross": cross}
+        else:
+            cache = caches
+    return logits, aux_total, cache
+
+
+def loss_fn(params, cfg, batch):
+    x, aux, _ = forward(params, cfg, batch, return_hidden=True)
+    mask = batch.get("mask")
+    ce = L.softmax_xent_fused(params["embed"], x[:, :-1],
+                              batch["labels"][:, 1:],
+                              None if mask is None else mask[:, 1:])
+    loss = ce + cfg.router_aux_coef * aux
+    metrics = {"ce": ce, "aux": aux}
+    if cfg.mtp:
+        mtp_loss = _mtp_loss(params, cfg, batch)
+        loss = loss + 0.3 * mtp_loss
+        metrics["mtp"] = mtp_loss
+    return loss, metrics
+
+
+def _mtp_loss(params, cfg, batch):
+    """DeepSeek-V3 multi-token prediction: depth-1 extra head."""
+    mp = params["mtp"]
+    x = L.embed(params["embed"], batch["tokens"], cfg.d_model)
+    # combine hidden (approximated by embedding of t_{s+1}) with stream
+    h = jnp.concatenate([x[:, :-1], x[:, 1:]], axis=-1)
+    h = jnp.einsum("bsd,de->bse", h, mp["proj"])
+    y, _ = A.mla_fwd(mp["attn"], h, cfg)
+    h = h + y
+    h = h + _mlp_fwd(mp["mlp"], h, cfg)
+    h = L.rms_norm(h, mp["ln"], cfg.norm_eps)
+    return L.softmax_xent_fused(params["embed"], h[:, :-1],
+                                batch["labels"][:, 2:])
+
+
+def prefill(params, cfg, batch):
+    # unembed ONLY the last position: full-sequence logits at 32k x 92k
+    # vocab would be tens of GiB of f32 that serving never reads
+    x, _, cache = forward(params, cfg, batch, want_cache=True,
+                          return_hidden=True)
+    logits = L.unembed(params["embed"], x[:, -1:])
+    return logits[:, -1], cache
+
+
+def decode_step(params, cfg, token, pos, cache):
+    """token: (B,1) int32; pos: scalar int32. Returns (logits (B,V), cache)."""
+    x = L.embed(params["embed"], token, cfg.d_model)
+    if cfg.family == "audio":
+        # learned-free sinusoid at position `pos`
+        d = cfg.d_model
+        inv = 1e4 ** (-jnp.arange(0, d, 2, dtype=jnp.float32) / d)
+        ang = pos.astype(jnp.float32) * inv
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])
+        x = x + pe.astype(x.dtype)[None, None]
+
+    if cfg.family == "moe" and cfg.first_dense_layers:
+        new_prefix = {}
+        for i in range(cfg.first_dense_layers):
+            bp = params["prefix"][f"l{i}"]
+            y, c = A.mla_step(bp["attn"], x, cfg, cache["prefix"][f"l{i}"], pos)
+            x = x + y
+            x = x + _mlp_fwd(bp["mlp"], x, cfg)
+            new_prefix[f"l{i}"] = c
+
+    shared = params.get("shared")
+    scan_cache = cache
+    if cfg.family == "moe":
+        scan_cache = cache["scan"]
+    elif cfg.family == "audio":
+        scan_cache = cache["dec"]
+
+    if cfg.family == "audio":
+        def abody(x, bp_ci_cr):
+            bp, ci, cr = bp_ci_cr
+            x, cnew = _sb_step(cfg, x, bp, cr, ci, pos)
+            return x, cnew
+        x, new_scan = jax.lax.scan(abody, x,
+                                   (params["blocks"], scan_cache, cache["cross"]))
+    else:
+        def body(x, bp_ci):
+            bp, ci = bp_ci
+            x, cnew = _sb_step(cfg, x, bp, shared, ci, pos)
+            return x, cnew
+        x, new_scan = jax.lax.scan(body, x, (params["blocks"], scan_cache))
+
+    x = L.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], x)[:, 0]
+    if cfg.family == "moe":
+        new_cache = {"scan": new_scan}
+        if cfg.first_dense_layers:
+            new_cache["prefix"] = new_prefix
+    elif cfg.family == "audio":
+        new_cache = {"dec": new_scan, "cross": cache["cross"]}
+    else:
+        new_cache = new_scan
+    return logits, new_cache
+
+
+def serve_step(params, cfg, token, pos, cache):
+    """Greedy decode of one token — the unit lowered for decode_* shapes."""
+    logits, cache = decode_step(params, cfg, token, pos, cache)
+    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    return nxt, cache
+
+
+class Model:
+    """Thin OO wrapper used by cartridges/runtime."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    def param_specs(self):
+        return param_specs(self.cfg)
+
+    def cache_specs(self, B, T):
+        return cache_specs(self.cfg, B, T)
+
+    def init(self, key):
+        from repro.sharding import init_params
+        return init_params(self.param_specs(), key, jnp.bfloat16)
+
+    loss_fn = staticmethod(loss_fn)
+    forward = staticmethod(forward)
+    prefill = staticmethod(prefill)
+    decode_step = staticmethod(decode_step)
+    serve_step = staticmethod(serve_step)

@@ -1,0 +1,181 @@
+"""Mamba2 (SSD) blocks — zamba2's backbone.
+
+Training/prefill uses the chunkwise SSD algorithm (quadratic within a chunk,
+linear state recurrence across chunks); decode is the O(1)-state recurrent
+step. State layout: h (B, H, P, N) with P=headdim, N=ssm_state.
+
+The cross-chunk state recurrence is the compute hot-spot the `ssd_scan`
+Pallas kernel targets; this module calls the jnp reference path (identical
+math) so the model is kernel-independent on CPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import Spec, shard
+from repro.models.layers import rms_norm, act_fn
+
+CHUNK = 256
+
+
+def mamba2_specs(cfg):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    H = di // cfg.ssm_headdim
+    N, K = cfg.ssm_state, cfg.ssm_conv
+    conv_ch = di + 2 * N  # x, B, C go through the causal conv
+    return {
+        "ln": Spec((d,), ("embed",), "zeros"),
+        # in_proj -> [z (di), xBC (conv_ch), dt (H)]
+        "w_in": Spec((d, 2 * di + 2 * N + H), ("embed", "inner")),
+        "conv_w": Spec((K, conv_ch), ("conv", "inner"), "small"),
+        "conv_b": Spec((conv_ch,), ("inner",), "zeros"),
+        "A_log": Spec((H,), ("ssm_heads",), "ones", jnp.float32),
+        "D": Spec((H,), ("ssm_heads",), "ones", jnp.float32),
+        "dt_bias": Spec((H,), ("ssm_heads",), "zeros", jnp.float32),
+        "out_ln": Spec((di,), ("inner",), "zeros"),
+        "w_out": Spec((di, d), ("inner", "embed")),
+    }
+
+
+def mamba2_cache_spec(cfg, B):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    H = di // cfg.ssm_headdim
+    N, K = cfg.ssm_state, cfg.ssm_conv
+    conv_ch = di + 2 * N
+    return {
+        "conv": Spec((B, K - 1, conv_ch), ("cache_batch", "conv", "inner"), "zeros"),
+        "h": Spec((B, H, cfg.ssm_headdim, N),
+                  ("cache_batch", "ssm_heads", "head_dim", "state"), "zeros",
+                  jnp.float32),
+    }
+
+
+def _split_in(p, x, cfg):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    H = di // cfg.ssm_headdim
+    N = cfg.ssm_state
+    zxbcdt = jnp.einsum("bsd,de->bse", rms_norm(x, p["ln"], cfg.norm_eps), p["w_in"])
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di: di + di + 2 * N]
+    dt = zxbcdt[..., di + di + 2 * N:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv. xbc: (B,S,C); w: (K,C). Returns (B,S,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for k in range(K):  # K=4: unrolled taps beat a conv op for this shape
+        out = out + pad[:, k: k + xbc.shape[1]] * w[k]
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, h0=None, chunk=CHUNK):
+    """Chunkwise SSD. xh:(B,S,H,P) dt:(B,S,H) A:(H,) Bm/Cm:(B,S,N).
+
+    Returns (y (B,S,H,P) same dtype as xh, h_final (B,H,P,N) f32).
+    """
+    Bsz, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    nc = S // chunk
+    assert S % chunk == 0, (S, chunk)
+    dtf = dt.astype(jnp.float32)
+    a = dtf * A  # (B,S,H) log-decay (A negative)
+    xc = (xh.astype(jnp.float32) * dtf[..., None]).reshape(Bsz, nc, chunk, H, P)
+    ac = a.reshape(Bsz, nc, chunk, H)
+    Bc = Bm.astype(jnp.float32).reshape(Bsz, nc, chunk, N)
+    Cc = Cm.astype(jnp.float32).reshape(Bsz, nc, chunk, N)
+
+    cum = jnp.cumsum(ac, axis=2)  # (B,nc,L,H)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Lq,Lk,H)
+    li = jnp.arange(chunk)
+    causal = li[:, None] >= li[None, :]
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+
+    # intra-chunk (quadratic in chunk)
+    sc = jnp.einsum("bnqc,bnkc->bnqk", Cc, Bc)
+    y_in = jnp.einsum("bnqk,bnqkh,bnkhp->bnqhp", sc, decay, xc)
+
+    # per-chunk input->state and chunk decays
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (B,nc,L,H)
+    chunk_states = jnp.einsum("bnkc,bnkh,bnkhp->bnhpc", Bc, decay_to_end, xc)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B,nc,H)
+
+    # inter-chunk state recurrence (the ssd_scan kernel target)
+    def step(h, xs):
+        st, dc = xs
+        h_new = h * dc[:, :, None, None] + st
+        return h_new, h
+
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    hN, h_prevs = jax.lax.scan(
+        step, h0,
+        (chunk_states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N) state entering chunk
+
+    # state -> output within each chunk
+    y_st = jnp.einsum("bnqc,bnqh,bnhpc->bnqhp", Cc, jnp.exp(cum), h_prevs)
+    y = (y_in + y_st).reshape(Bsz, S, H, P).astype(xh.dtype)
+    return y, hN
+
+
+def mamba2_fwd(p, x, cfg, *, want_cache=False):
+    B, S, d = x.shape
+    di = cfg.ssm_expand * d
+    H = di // cfg.ssm_headdim
+    P, N = cfg.ssm_headdim, cfg.ssm_state
+    z, xbc, dt = _split_in(p, x, cfg)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs, Bm, Cm = xbc[..., :di], xbc[..., di: di + N], xbc[..., di + N:]
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(B, S, H, P)
+    xh = shard(xh, "batch", "seq", "ssm_heads", None)
+    chunk = min(CHUNK, S)
+    y, hN = ssd_chunked(xh, dtf, A, Bm, Cm, chunk=chunk)
+    y = y + xh * p["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(B, S, di)
+    y = rms_norm(y * jax.nn.silu(z), p["out_ln"], cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, p["w_out"])
+    out = shard(out, "batch", "seq", "embed")
+    cache = None
+    if want_cache:
+        K = cfg.ssm_conv
+        conv_tail_in = jnp.einsum(
+            "bsd,de->bse", rms_norm(x[:, S - (K - 1):], p["ln"], cfg.norm_eps),
+            p["w_in"])[..., di: di + di + 2 * N]
+        cache = {"conv": conv_tail_in, "h": hN}
+    return out, cache
+
+
+def mamba2_step(p, x, cfg, cache):
+    """x: (B,1,d). cache: {conv (B,K-1,C), h (B,H,P,N)}."""
+    B = x.shape[0]
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    H = di // cfg.ssm_headdim
+    P, N, K = cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_conv
+    z, xbc_new, dt = _split_in(p, x, cfg)
+    window = jnp.concatenate([cache["conv"], xbc_new], axis=1)  # (B,K,C)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"])[:, None]
+    xs, Bm, Cm = conv_out[..., :di], conv_out[..., di: di + N], conv_out[..., di + N:]
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dtf * A)  # (B,H)
+    xh = xs.reshape(B, H, P).astype(jnp.float32)
+    Bv = Bm[:, 0].astype(jnp.float32)  # (B,N)
+    Cv = Cm[:, 0].astype(jnp.float32)
+    h = cache["h"] * a[:, :, None, None] + jnp.einsum(
+        "bhp,bn,bh->bhpn", xh, Bv, dtf)
+    y = jnp.einsum("bhpn,bn->bhp", h, Cv) + xh * p["D"][None, :, None]
+    y = y.reshape(B, 1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["out_ln"], cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, p["w_out"])
+    return out, {"conv": window[:, 1:], "h": h}

@@ -1,0 +1,305 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, block-diagonal recurrence) — xlstm-1.3b's backbone.
+
+mLSTM trains with a stabilized chunkwise linear-attention form (exponential
+input gate, sigmoid-in-log-space forget gate, running max stabilizer m).
+Decode is the O(1) recurrent update on C (B,H,K,V) / n (B,H,K) / m (B,H).
+
+sLSTM is inherently sequential: a lax.scan over time with per-head
+block-diagonal recurrent weights, exponential gating and the same m
+stabilizer. Cache is (c, n, m, h_prev).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import Spec, shard
+from repro.models.layers import rms_norm, group_norm_heads, act_fn
+
+CHUNK = 256
+PROJ = 2  # mLSTM up-projection factor
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def mlstm_specs(cfg):
+    d = cfg.d_model
+    di = PROJ * d
+    H = cfg.n_heads
+    dh = di // H
+    return {
+        "ln": Spec((d,), ("embed",), "zeros"),
+        "w_up": Spec((d, 2 * di), ("embed", "inner")),  # -> [x_path, z_gate]
+        "wq": Spec((di, H, dh), ("inner", "heads", "head_dim")),
+        "wk": Spec((di, H, dh), ("inner", "heads", "head_dim")),
+        "wv": Spec((di, H, dh), ("inner", "heads", "head_dim")),
+        "w_if": Spec((di, 2 * H), ("inner", "heads"), "small"),  # i,f pre-acts
+        "b_if": Spec((2 * H,), ("heads",), "zeros", jnp.float32),
+        "out_gn": Spec((H, dh), ("heads", "head_dim"), "ones"),
+        "w_down": Spec((di, d), ("inner", "embed")),
+    }
+
+
+def mlstm_cache_spec(cfg, B):
+    di = PROJ * cfg.d_model
+    H = cfg.n_heads
+    dh = di // H
+    return {
+        "C": Spec((B, H, dh, dh), ("cache_batch", "ssm_heads", "head_dim", "state"),
+                  "zeros", jnp.float32),
+        "n": Spec((B, H, dh), ("cache_batch", "ssm_heads", "head_dim"), "zeros",
+                  jnp.float32),
+        "m": Spec((B, H), ("cache_batch", "ssm_heads"), "zeros", jnp.float32),
+    }
+
+
+def _mlstm_qkvif(p, x, cfg):
+    B, S, d = x.shape
+    di = PROJ * d
+    H = cfg.n_heads
+    dh = di // H
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    up = jnp.einsum("bsd,de->bse", h, p["w_up"])
+    xp, z = up[..., :di], up[..., di:]
+    q = jnp.einsum("bsi,ihk->bshk", xp, p["wq"]) * (dh ** -0.5)
+    k = jnp.einsum("bsi,ihk->bshk", xp, p["wk"])
+    v = jnp.einsum("bsi,ihk->bshk", xp, p["wv"])
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "heads", None)
+    v = shard(v, "batch", "seq", "heads", None)
+    gates = jnp.einsum("bsi,ig->bsg", xp, p["w_if"]).astype(jnp.float32) + p["b_if"]
+    ig, fg = gates[..., :H], gates[..., H:]  # (B,S,H) log-space pre-acts
+    logf = -jax.nn.softplus(-fg)  # log sigmoid(f)
+    return xp, z, q, k, v, ig, logf
+
+
+def mlstm_chunked(q, k, v, ig, logf, state=None, chunk=CHUNK):
+    """Stabilized chunkwise mLSTM. q/k/v: (B,S,H,D); ig/logf: (B,S,H) f32.
+
+    Returns (y (B,S,H,D), (C,n,m) final state). Matches the recurrent form:
+      m_t = max(logf_t + m_{t-1}, ig_t)
+      C_t = exp(logf_t + m_{t-1} - m_t) C_{t-1} + exp(ig_t - m_t) k_t v_t^T
+      n_t likewise; y_t = C_t^T q_t / max(|n_t.q_t|, 1)
+    """
+    B, S, H, D = q.shape
+    nc = S // chunk
+    assert S % chunk == 0
+    qc = q.astype(jnp.float32).reshape(B, nc, chunk, H, D)
+    kc = k.astype(jnp.float32).reshape(B, nc, chunk, H, D)
+    vc = v.astype(jnp.float32).reshape(B, nc, chunk, H, D)
+    igc = ig.reshape(B, nc, chunk, H)
+    lfc = logf.reshape(B, nc, chunk, H)
+    cumf = jnp.cumsum(lfc, axis=2)  # (B,nc,L,H) sum of logf up to & incl t
+
+    if state is None:
+        C0 = jnp.zeros((B, H, D, D), jnp.float32)
+        n0 = jnp.zeros((B, H, D), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    li = jnp.arange(chunk)
+    causal = li[:, None] >= li[None, :]
+
+    def body(carry, xs):
+        C, n, m = carry
+        qj, kj, vj, igj, cfj, lfj = xs  # (B,L,H,*) / (B,L,H)
+        # per-step stabilizer: m_t = cf_t + max(m_in, max_{s<=t}(ig_s - cf_s))
+        m_t = cfj + jnp.maximum(
+            m[:, None],
+            jax.lax.cummax(igj - cfj, axis=1))  # (B,L,H)
+        # intra-chunk weights: exp(cf_t - cf_s + ig_s - m_t), causal
+        logw = (cfj[:, :, None] - cfj[:, None, :] + igj[:, None, :]
+                - m_t[:, :, None])  # (B,Lq,Ls,H)
+        w = jnp.where(causal[None, :, :, None], jnp.exp(logw), 0.0)
+        s = jnp.einsum("bqhd,bshd->bqsh", qj, kj)
+        y_in = jnp.einsum("bqsh,bqsh,bshd->bqhd", s, w, vj)
+        # carry contribution: exp(cf_t + m_in - m_t) * (q_t . C_in)
+        wc = jnp.exp(cfj + m[:, None] - m_t)  # (B,L,H)
+        y_c = jnp.einsum("bqhd,bhdk->bqhk", qj, C) * wc[..., None]
+        # normalizer n_t = sum_s w k_s + wc * n_in ; denom = max(|n.q|, e^-m)
+        n_t = jnp.einsum("bqsh,bshd->bqhd", w, kj) + n[:, None] * wc[..., None]
+        denom = jnp.maximum(
+            jnp.abs(jnp.einsum("bqhd,bqhd->bqh", n_t, qj)), jnp.exp(-m_t))
+        y = (y_in + y_c) / denom[..., None]
+        # chunk-end state: m_end = cf_L + max(m_in, max_s(ig_s - cf_s))
+        m_end = cfj[:, -1] + jnp.maximum(m, jnp.max(igj - cfj, axis=1))
+        wk_end = jnp.exp(cfj[:, -1][:, None] - cfj + igj - m_end[:, None])
+        fw = jnp.exp(cfj[:, -1] + m - m_end)
+        C_new = (C * fw[..., None, None]
+                 + jnp.einsum("blh,blhd,blhk->bhdk", wk_end, kj, vj))
+        n_new = n * fw[..., None] + jnp.einsum("blh,blhd->bhd", wk_end, kj)
+        return (C_new, n_new, m_end), y
+
+    xs = (qc.transpose(1, 0, 2, 3, 4), kc.transpose(1, 0, 2, 3, 4),
+          vc.transpose(1, 0, 2, 3, 4), igc.transpose(1, 0, 2, 3),
+          cumf.transpose(1, 0, 2, 3), lfc.transpose(1, 0, 2, 3))
+    (C, n, m), ys = jax.lax.scan(body, (C0, n0, m0), xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, D)
+    return y.astype(q.dtype), (C, n, m)
+
+
+def mlstm_fwd(p, x, cfg, *, want_cache=False):
+    B, S, d = x.shape
+    di = PROJ * d
+    xp, z, q, k, v, ig, logf = _mlstm_qkvif(p, x, cfg)
+    chunk = min(CHUNK, S)
+    y, (C, n, m) = mlstm_chunked(q, k, v, ig, logf, chunk=chunk)
+    y = group_norm_heads(y, p["out_gn"], cfg.norm_eps)
+    y = y.reshape(B, S, di) * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, p["w_down"])
+    out = shard(out, "batch", "seq", "embed")
+    cache = {"C": C, "n": n, "m": m} if want_cache else None
+    return out, cache
+
+
+def mlstm_step(p, x, cfg, cache):
+    B = x.shape[0]
+    d = cfg.d_model
+    di = PROJ * d
+    xp, z, q, k, v, ig, logf = _mlstm_qkvif(p, x, cfg)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]  # (B,H,D)
+    ig, logf = ig[:, 0], logf[:, 0]  # (B,H)
+    C, n, m = cache["C"].astype(jnp.float32), cache["n"], cache["m"]
+    m_new = jnp.maximum(logf + m, ig)
+    fw = jnp.exp(logf + m - m_new)
+    iw = jnp.exp(ig - m_new)
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    C = C * fw[..., None, None] + jnp.einsum("bhd,bhk->bhdk", kf, vf) * iw[..., None, None]
+    n = n * fw[..., None] + kf * iw[..., None]
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, qf)), jnp.exp(-m_new))
+    y = jnp.einsum("bhd,bhdk->bhk", qf, C) / denom[..., None]
+    y = y[:, None].astype(x.dtype)  # (B,1,H,D)
+    y = group_norm_heads(y, p["out_gn"], cfg.norm_eps)
+    y = y.reshape(B, 1, di) * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, p["w_down"])
+    return out, {"C": C, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def slstm_specs(cfg):
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    return {
+        "ln": Spec((d,), ("embed",), "zeros"),
+        "w_gates": Spec((d, 4 * d), ("embed", "inner")),  # i,f,z,o inputs
+        "r_gates": Spec((H, dh, 4 * dh), ("ssm_heads", "head_dim", "inner"), "small"),
+        "b_gates": Spec((4 * d,), ("inner",), "zeros", jnp.float32),
+        "out_gn": Spec((H, dh), ("heads", "head_dim"), "ones"),
+        # post-block gated FFN (4/3 factor, GELU) per xLSTM paper
+        "ffn_ln": Spec((d,), ("embed",), "zeros"),
+        "ffn_up": Spec((d, (4 * d) // 3 * 2), ("embed", "mlp")),
+        "ffn_down": Spec(((4 * d) // 3, d), ("mlp", "embed")),
+    }
+
+
+def slstm_cache_spec(cfg, B):
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    zz = lambda shp, ax: Spec(shp, ax, "zeros", jnp.float32)
+    return {
+        "c": zz((B, H, dh), ("cache_batch", "ssm_heads", "head_dim")),
+        "n": zz((B, H, dh), ("cache_batch", "ssm_heads", "head_dim")),
+        "m": zz((B, H, dh), ("cache_batch", "ssm_heads", "head_dim")),
+        "hp": zz((B, H, dh), ("cache_batch", "ssm_heads", "head_dim")),
+    }
+
+
+def _slstm_cell(p, xg, state, H, dh):
+    """One timestep. xg: (B, 4d) input pre-acts; state: (c,n,m,hp) (B,H,dh)."""
+    c, n, m, hp = state
+    B = xg.shape[0]
+    rec = jnp.einsum("bhd,hdg->bhg", hp.astype(p["r_gates"].dtype), p["r_gates"])
+    g = xg.reshape(B, H, 4 * dh).astype(jnp.float32) + rec.astype(jnp.float32)
+    ii, ff, zz, oo = jnp.split(g, 4, axis=-1)  # (B,H,dh) each
+    m_new = jnp.maximum(ff + m, ii)  # exp forget gating, stabilized
+    iw = jnp.exp(ii - m_new)
+    fw = jnp.exp(ff + m - m_new)
+    c = fw * c + iw * jnp.tanh(zz)
+    n = fw * n + iw
+    h = jax.nn.sigmoid(oo) * c / jnp.maximum(n, 1.0)
+    return (c, n, m_new, h)
+
+
+def _slstm_scan(xg, r_gates, H, dh):
+    """The sequential recurrence over time. xg: (B,S,4d) f32 pre-acts."""
+    B = xg.shape[0]
+    z0 = jnp.zeros((B, H, dh), jnp.float32)
+    state0 = (z0, z0, jnp.full_like(z0, -1e30), z0)
+
+    def step(st, xt):
+        st2 = _slstm_cell({"r_gates": r_gates}, xt, st, H, dh)
+        return st2, st2[3]
+
+    return jax.lax.scan(step, state0, xg.transpose(1, 0, 2))
+
+
+def slstm_fwd(p, x, cfg, *, want_cache=False):
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    hn = rms_norm(x, p["ln"], cfg.norm_eps)
+    xg = jnp.einsum("bsd,dg->bsg", hn, p["w_gates"]).astype(jnp.float32) + p["b_gates"]
+
+    from repro.sharding import current_mesh_and_rules, logical_to_pspec
+    mesh, rules = current_mesh_and_rules()
+    if mesh is not None and rules is not None:
+        # run the whole recurrence as one batch-parallel shard_map region:
+        # the region is per-sample independent, and crucially the
+        # cotangent psum for the (replicated) recurrent weights happens
+        # ONCE at the region boundary — not once per timestep, which is
+        # what an unannotated scan compiles to (a ~1 MB all-reduce per
+        # step x 4096 steps x n_micro was xlstm's dominant roofline term).
+        from jax.sharding import PartitionSpec as P
+        xg_spec = logical_to_pspec(("batch", "seq", None), rules, mesh,
+                                   xg.shape)
+        st_spec = logical_to_pspec(("batch", None, None), rules, mesh,
+                                   (B, H, dh))
+        hs_spec = logical_to_pspec((None, "batch", None, None), rules, mesh,
+                                   (S, B, H, dh))
+        (c, n, m, hp), hs = jax.shard_map(
+            lambda a, r: _slstm_scan(a, r, H, dh),
+            mesh=mesh,
+            in_specs=(xg_spec, P()),
+            out_specs=((st_spec,) * 4, hs_spec),
+            check_vma=False,
+        )(xg, p["r_gates"])
+    else:
+        (c, n, m, hp), hs = _slstm_scan(xg, p["r_gates"], H, dh)
+    y = hs.transpose(1, 0, 2, 3)  # (B,S,H,dh)
+    y = group_norm_heads(y.astype(x.dtype), p["out_gn"], cfg.norm_eps)
+    y = y.reshape(B, S, d)
+    # gated FFN
+    f = rms_norm(x + y, p["ffn_ln"], cfg.norm_eps)
+    up = jnp.einsum("bsd,df->bsf", f, p["ffn_up"])
+    half = up.shape[-1] // 2
+    y2 = jnp.einsum("bsf,fd->bsd", jax.nn.gelu(up[..., :half]) * up[..., half:],
+                    p["ffn_down"])
+    out = y + y2
+    cache = {"c": c, "n": n, "m": m, "hp": hp} if want_cache else None
+    return out, cache
+
+
+def slstm_step(p, x, cfg, cache):
+    B = x.shape[0]
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    hn = rms_norm(x, p["ln"], cfg.norm_eps)
+    xg = jnp.einsum("bsd,dg->bsg", hn, p["w_gates"]).astype(jnp.float32) + p["b_gates"]
+    st = (cache["c"], cache["n"], cache["m"], cache["hp"])
+    c, n, m, h = _slstm_cell(p, xg[:, 0], st, H, dh)
+    y = group_norm_heads(h[:, None].astype(x.dtype), p["out_gn"], cfg.norm_eps)
+    y = y.reshape(B, 1, d)
+    f = rms_norm(x + y, p["ffn_ln"], cfg.norm_eps)
+    up = jnp.einsum("bsd,df->bsf", f, p["ffn_up"])
+    half = up.shape[-1] // 2
+    y2 = jnp.einsum("bsf,fd->bsd", jax.nn.gelu(up[..., :half]) * up[..., half:],
+                    p["ffn_down"])
+    return y + y2, {"c": c, "n": n, "m": m, "hp": h}

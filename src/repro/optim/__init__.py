@@ -1,0 +1,5 @@
+from repro.optim.optimizers import (Optimizer, adamw, adafactor, for_config,
+                                    clip_by_global_norm, global_norm,
+                                    param_count)
+from repro.optim.schedules import cosine_warmup, constant
+from repro.optim.quant import QTensor, quantize, dequantize

@@ -1,0 +1,45 @@
+"""Int8 error-feedback gradient compression for the cross-``data`` reduce.
+
+At 1000-node scale the gradient all-reduce over DCN is the dominant wire
+cost; compressing to int8 with an error-feedback residual (1-bit SGD /
+Deep-Gradient-Compression family) cuts it 2x vs bf16 while keeping
+convergence (the residual re-injects quantization error next step).
+
+Usage inside a train step (grads already averaged within a pod):
+    cg, new_resid = compress_with_feedback(grads, resid)
+    # ship cg across pods (the dry-run measures these bytes), then
+    g = decompress(cg)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.quant import QTensor, dequantize, quantize
+
+
+def init_residual(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16), params)
+
+
+def compress_with_feedback(grads, resid):
+    """Returns (quantized grads pytree, new residual pytree)."""
+    def leaf(g, r):
+        gf = g.astype(jnp.float32) + r.astype(jnp.float32)
+        q = quantize(gf)
+        err = gf - dequantize(q)
+        return q, err.astype(jnp.bfloat16)
+
+    out = jax.tree.map(leaf, grads, resid)
+    is2 = lambda x: isinstance(x, tuple) and len(x) == 2
+    qs = jax.tree.map(lambda t: t[0], out, is_leaf=is2)
+    rs = jax.tree.map(lambda t: t[1], out, is_leaf=is2)
+    return qs, rs
+
+
+def decompress(qgrads):
+    return jax.tree.map(
+        lambda q: dequantize(q),
+        qgrads,
+        is_leaf=lambda x: isinstance(x, QTensor),
+    )

@@ -1,0 +1,251 @@
+"""Optimizers as (init, update) pairs over param pytrees.
+
+Self-contained (no optax). Three memory tiers for 1000-node-scale training:
+  adamw        fp32 m/v                         (< ~30 B params)
+  adamw8       blockwise-int8 m/v               (mid-size, 4x state cut)
+  adafactor    factored second moment, no mom.  (200 B+ giants)
+
+All states mirror the param pytree so shardings propagate leaf-by-leaf
+(ZeRO-style: state shards exactly like its param).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.quant import QTensor, dequantize, quantize, zeros_like_q
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], tuple]  # (g, st, p, step)
+
+
+def _tree_zeros(params, dtype):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, dtype), params)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    n = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), n
+
+
+def _layer_mapped(core, *args):
+    """Run a per-leaf update over axis 0 of stacked scanned-layer leaves.
+
+    Optimizer math runs in f32; on a (L, E, d, f) stacked-MoE leaf the f32
+    temporaries between reduction barriers would occupy several GiB per
+    device. ``lax.map`` over the layer axis caps the live f32 working set
+    at one layer slice (identical results — the update is layerwise).
+    """
+    p = args[-1]
+    if getattr(p, "ndim", 0) >= 3 and p.shape[0] > 1 and not any(
+            isinstance(a, QTensor) for a in args):
+        return jax.lax.map(lambda xs: core(*xs), args)
+    return core(*args)
+
+
+# ---------------------------------------------------------------------------
+# AdamW (fp32 or blockwise-int8 state)
+# ---------------------------------------------------------------------------
+def adamw(lr: Callable[[jax.Array], jax.Array], *, b1=0.9, b2=0.95, eps=1e-8,
+          weight_decay=0.1, clip=1.0, int8_state=False) -> Optimizer:
+    def init(params):
+        if int8_state:
+            z = lambda p: zeros_like_q(p)
+        else:
+            z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+    def update(grads, state, params, step):
+        if clip:
+            grads, gn = clip_by_global_norm(grads, clip)
+        else:
+            gn = global_norm(grads)
+        t = step.astype(jnp.float32) + 1.0
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+        lr_t = lr(step)
+
+        def core(g, mf, vf, p):
+            g = g.astype(jnp.float32)
+            mf = b1 * mf + (1 - b1) * g
+            vf = b2 * vf + (1 - b2) * g * g
+            upd = (mf / c1) / (jnp.sqrt(vf / c2) + eps)
+            upd = upd + weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr_t * upd).astype(p.dtype)
+            return new_p, mf, vf
+
+        def leaf(g, m, v, p):
+            mf = dequantize(m) if isinstance(m, QTensor) else m
+            vf = dequantize(v) if isinstance(v, QTensor) else v
+            new_p, mf, vf = _layer_mapped(core, g, mf, vf, p)
+            if isinstance(m, QTensor):
+                mf, vf = quantize(mf), quantize(vf)
+            return new_p, mf, vf
+
+        out = jax.tree.map(leaf, grads, state["m"], state["v"], params,
+                           is_leaf=lambda x: isinstance(x, QTensor))
+        is3 = lambda x: isinstance(x, tuple) and len(x) == 3
+        new_p = jax.tree.map(lambda t3: t3[0], out, is_leaf=is3)
+        new_m = jax.tree.map(lambda t3: t3[1], out, is_leaf=is3)
+        new_v = jax.tree.map(lambda t3: t3[2], out, is_leaf=is3)
+        return new_p, {"m": new_m, "v": new_v}, {"grad_norm": gn, "lr": lr_t}
+
+    return Optimizer("adamw8" if int8_state else "adamw", init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored 2nd moment, momentum-free) — giants' memory tier
+# ---------------------------------------------------------------------------
+def adafactor(lr: Callable[[jax.Array], jax.Array], *, decay=0.99, eps=1e-30,
+              clip=1.0, weight_decay=0.0) -> Optimizer:
+    """Factored AdamW-style update. 2-D+ leaves keep row/col second-moment
+    factors (O(n+m) memory); 0/1-D leaves keep a full fp32 second moment."""
+
+    def init(params):
+        def z(p):
+            if p.ndim >= 2:
+                return {
+                    "r": jnp.zeros(p.shape[:-1], jnp.float32),      # row sums
+                    "c": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"f": jax.tree.map(z, params)}
+
+    def update(grads, state, params, step):
+        if clip:
+            grads, gn = clip_by_global_norm(grads, clip)
+        else:
+            gn = global_norm(grads)
+        lr_t = lr(step)
+        t = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - t ** -0.8          # increasing-decay schedule
+        beta = jnp.minimum(beta, decay)
+
+        def core(g, f, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if p.ndim >= 2:
+                r = beta * f["r"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                c = beta * f["c"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                rc = r / jnp.maximum(
+                    jnp.mean(r, axis=-1, keepdims=True), 1e-30)
+                vhat = rc[..., None] * c[..., None, :]
+                nf = {"r": r, "c": c}
+            else:
+                v = beta * f["v"] + (1 - beta) * g2
+                vhat = v
+                nf = {"v": v}
+            upd = g / jnp.sqrt(vhat + 1e-30)
+            # update clipping (Adafactor RMS trick)
+            rms = jnp.sqrt(jnp.mean(jnp.square(upd)) + 1e-30)
+            upd = upd / jnp.maximum(1.0, rms)
+            upd = upd + weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr_t * upd).astype(p.dtype)
+            return new_p, nf
+
+        def leaf(g, f, p):
+            return _layer_mapped(core, g, f, p)
+
+        out = jax.tree.map(leaf, grads, state["f"], params,
+                           is_leaf=lambda x: isinstance(x, dict)
+                           and set(x) <= {"r", "c", "v"})
+        is2 = lambda x: isinstance(x, tuple) and len(x) == 2
+        new_p = jax.tree.map(lambda t2: t2[0], out, is_leaf=is2)
+        new_f = jax.tree.map(lambda t2: t2[1], out, is_leaf=is2)
+        return new_p, {"f": new_f}, {"grad_norm": gn, "lr": lr_t}
+
+    return Optimizer("adafactor", init, update)
+
+
+def state_specs(opt: Optimizer, param_specs):
+    """Spec pytree for the optimizer state (drives AOT structs + shardings).
+
+    State leaves shard exactly like their parameter (ZeRO): same logical
+    axes, reduced for adafactor's factored moments.
+    """
+    from repro.sharding import Spec, spec_map
+
+    if opt.name in ("adamw", "adamw8"):
+        f32 = lambda s: Spec(s.shape, s.axes, "zeros", jnp.float32)
+        return {"m": spec_map(f32, param_specs), "v": spec_map(f32, param_specs)}
+    if opt.name == "adafactor":
+        def fact(s):
+            if len(s.shape) >= 2:
+                return {
+                    "r": Spec(s.shape[:-1], s.axes[:-1], "zeros", jnp.float32),
+                    "c": Spec(s.shape[:-2] + s.shape[-1:],
+                              s.axes[:-2] + s.axes[-1:], "zeros", jnp.float32),
+                }
+            return {"v": Spec(s.shape, s.axes, "zeros", jnp.float32)}
+        return {"f": spec_map(fact, param_specs)}
+    raise ValueError(opt.name)
+
+
+def for_config(cfg, lr_fn=None) -> Optimizer:
+    """Memory-tier policy: giants get adafactor, the rest AdamW."""
+    from repro.optim.schedules import cosine_warmup
+    lr_fn = lr_fn or cosine_warmup(3e-4, warmup=100, total=10_000)
+    n = param_count(cfg)
+    if n >= 100e9:
+        return adafactor(lr_fn)
+    return adamw(lr_fn)
+
+
+def param_count(cfg) -> float:
+    """Closed-form parameter count from an ArchConfig (approximate, for
+    policy decisions and MODEL_FLOPS)."""
+    d, L, V = cfg.d_model, cfg.n_layers, cfg.vocab_size
+    emb = V * d * (1 if cfg.tie_embeddings else 2)
+    if cfg.family == "moe":
+        attn = L * _mla_params(cfg)
+        dense_ff = cfg.first_dense_layers * 3 * d * cfg.d_ff
+        moe_layers = L - cfg.first_dense_layers
+        per_exp = 3 * d * cfg.moe_d_ff
+        routed = moe_layers * cfg.n_experts * per_exp
+        shared = moe_layers * cfg.n_shared_experts * per_exp
+        router = moe_layers * d * cfg.n_experts
+        return emb + attn + dense_ff + routed + shared + router
+    if cfg.family == "hybrid":
+        # mamba blocks + one shared attn/mlp block (weight-tied)
+        din = cfg.ssm_expand * d
+        per_mamba = d * (2 * din + 2 * cfg.ssm_state) + din * d + din
+        n_attn = 1
+        attn = n_attn * (4 * d * d + 3 * d * cfg.d_ff)
+        return emb + L * per_mamba + attn
+    if cfg.family == "ssm":
+        din = 2 * d
+        per = d * din * 4 + din * d  # qkv/gates + out
+        return emb + L * per
+    dh = cfg.dh
+    attn_p = d * (cfg.n_heads * dh) * 2 + d * (cfg.n_kv_heads * dh) * 2
+    ff_mult = 3 if cfg.mlp_gated else 2
+    ff = ff_mult * d * cfg.d_ff
+    enc = 0
+    if cfg.family == "audio":
+        enc = cfg.encoder_layers * (attn_p + ff)
+    return emb + L * (attn_p + ff) + enc
+
+
+def _mla_params(cfg):
+    d, H = cfg.d_model, cfg.n_heads
+    qn, qr, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    q = (d * cfg.q_lora_rank + cfg.q_lora_rank * H * (qn + qr)
+         if cfg.q_lora_rank else d * H * (qn + qr))
+    kv = d * (cfg.kv_lora_rank + qr) + cfg.kv_lora_rank * H * (qn + vd)
+    o = H * vd * d
+    return q + kv + o

@@ -1,0 +1,66 @@
+"""Blockwise-int8 quantized tensors for optimizer state / gradient compression.
+
+A ``QTensor`` stores int8 values plus one fp32 scale per block of
+``BLOCK`` elements along the flattened last axis — the standard 8-bit
+optimizer-state layout (Dettmers et al.) adapted to pytrees: QTensor is a
+registered pytree node, so it flows through jit/scan/sharding like an array.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 128
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class QTensor:
+    q: jax.Array                     # int8, shape = orig padded to BLOCK
+    scale: jax.Array                 # f32, shape = (*lead, n_blocks)
+    shape: tuple = dataclasses.field(metadata=dict(static=True), default=())
+
+    @property
+    def dtype(self):
+        return jnp.int8
+
+
+def _pad_len(n: int) -> int:
+    return (-n) % BLOCK
+
+
+def quantize(x: jax.Array) -> QTensor:
+    """Symmetric blockwise int8 quantization of an arbitrary-shape tensor."""
+    shape = x.shape
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = _pad_len(flat.shape[0])
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    amax = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return QTensor(q=q.reshape(-1), scale=scale[:, 0], shape=tuple(shape))
+
+
+def dequantize(t: QTensor) -> jax.Array:
+    blocks = t.q.reshape(-1, BLOCK).astype(jnp.float32) * t.scale[:, None]
+    n = 1
+    for s in t.shape:
+        n *= s
+    return blocks.reshape(-1)[:n].reshape(t.shape)
+
+
+def zeros_like_q(x) -> QTensor:
+    """Quantized zeros matching ``x``'s shape (x may be Spec-like w/ .shape)."""
+    n = 1
+    for s in x.shape:
+        n *= s
+    npad = n + _pad_len(n)
+    return QTensor(
+        q=jnp.zeros((npad,), jnp.int8),
+        scale=jnp.zeros((npad // BLOCK,), jnp.float32),
+        shape=tuple(x.shape),
+    )

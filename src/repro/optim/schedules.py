@@ -1,0 +1,21 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_warmup(peak: float, *, warmup: int, total: int, floor: float = 0.1):
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = peak * (s + 1.0) / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor * peak + (1 - floor) * peak * 0.5 * (
+            1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, cos)
+    return lr
+
+
+def constant(v: float):
+    def lr(step):
+        return jnp.full((), v, jnp.float32)
+    return lr

@@ -1,0 +1,4 @@
+from repro.runtime.registry import CapabilityRegistry, SlotRecord
+from repro.runtime.engine import StreamEngine, EngineReport, validate_chain
+from repro.runtime.health import HealthMonitor
+from repro.runtime.elastic import ElasticController, largest_mesh

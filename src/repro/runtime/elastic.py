@@ -1,0 +1,86 @@
+"""Elastic training controller: node failure == cartridge removal.
+
+The CHAMP insight applied to training scale: membership changes are
+routine events, not crashes. The controller owns the (data, model) mesh
+factorization over however many *healthy* hosts exist; on failure or join
+it (1) pauses, (2) re-factorizes the mesh to the largest supported shape,
+(3) restores params/optimizer state from the latest committed checkpoint
+re-sharded onto the new mesh, (4) replays the data stream from the
+restored step (deterministic step-indexed pipeline => no sample loss or
+duplication), exactly like VDiSK's pause -> reconfigure -> replay cycle.
+
+Device counts are simulated (CPU container); everything above the mesh
+construction is the production logic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+import jax
+import numpy as np
+
+
+@dataclass
+class ElasticEvent:
+    t_step: int
+    kind: str           # "fail" | "join" | "remesh" | "restore"
+    detail: str = ""
+
+
+def largest_mesh(n_devices: int, model_parallel: int) -> tuple:
+    """(data, model) for the largest usable power-of-two data axis."""
+    model = min(model_parallel, n_devices)
+    data = n_devices // model
+    data = 2 ** int(math.log2(data)) if data else 1
+    return (data, model)
+
+
+class ElasticController:
+    def __init__(self, devices: List, *, model_parallel: int = 1,
+                 checkpoint_store=None):
+        self.all_devices = list(devices)
+        self.healthy = set(range(len(devices)))
+        self.model_parallel = model_parallel
+        self.store = checkpoint_store
+        self.events: List[ElasticEvent] = []
+        self.mesh = None
+        self.remesh(step=0)
+
+    # -- membership -------------------------------------------------------------
+    def fail(self, idx: int, step: int):
+        self.healthy.discard(idx)
+        self.events.append(ElasticEvent(step, "fail", f"device {idx}"))
+
+    def join(self, idx: int, step: int):
+        self.healthy.add(idx)
+        self.events.append(ElasticEvent(step, "join", f"device {idx}"))
+
+    # -- re-meshing ---------------------------------------------------------------
+    def remesh(self, step: int):
+        devs = [self.all_devices[i] for i in sorted(self.healthy)]
+        data, model = largest_mesh(len(devs), self.model_parallel)
+        use = devs[: data * model]
+        arr = np.array(use).reshape(data, model)
+        self.mesh = jax.sharding.Mesh(arr, ("data", "model"))
+        self.events.append(ElasticEvent(
+            step, "remesh", f"{data}x{model} over {len(use)} devices"))
+        return self.mesh
+
+    # -- recovery ----------------------------------------------------------------
+    def recover(self, like, step_hint: Optional[int] = None):
+        """Restore latest committed state onto the *current* mesh.
+
+        ``like`` is a pytree of ShapeDtypeStructs/arrays with shardings for
+        the new mesh; returns (step, state) re-laid-out via device_put.
+        """
+        assert self.store is not None
+        step, state = self.store.restore(like, step_hint)
+        def put(x, l):
+            sh = getattr(l, "sharding", None)
+            return jax.device_put(x, sh) if sh is not None else x
+        state = jax.tree.map(put, state, like)
+        self.events.append(ElasticEvent(step, "restore", f"step {step}"))
+        return step, state

@@ -1,0 +1,342 @@
+"""VDiSK streaming engine: discrete-event execution of cartridge pipelines.
+
+This is the CHAMP fork of VDiSK's core loop, §2.3/§3.3 of the paper:
+
+  * pub/sub message routing between chained cartridges over the shared bus
+  * bounded inter-stage queues with backpressure ("if a cartridge's
+    processing time is slower than the input rate, it can signal upstream
+    modules ... to throttle the data flow")
+  * hot-swap events: removal pauses the pipeline ~0.5 s, buffers in-flight
+    frames, bridges the gap (PassThrough) when types allow or raises an
+    operator alert; insertion pauses ~2 s (dominated by model re-load)
+  * zero message loss across swaps (buffered frames replay afterward)
+  * per-stage utilization -> the §4.3 power model
+
+Timing is virtual (deterministic, calibrated DeviceModels); payload compute
+is optionally real JAX (``execute_payloads=True``) so correctness tests can
+assert data flows through reconfigurations unchanged.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable, List, Optional
+
+from repro.bus.simulator import BusParams, SharedBus
+from repro.core.cartridge import Cartridge, PassThrough
+from repro.core import messages as msg
+from repro.runtime.registry import CapabilityRegistry
+
+HANDSHAKE_S = 0.35       # detection + addressing + capability handshake
+REMOVE_PAUSE_S = 0.5     # paper §4.2: ~0.5 s reconfiguration on removal
+
+
+@dataclass
+class StageStats:
+    processed: int = 0
+    busy_s: float = 0.0
+    blocked_s: float = 0.0
+
+
+@dataclass
+class EngineReport:
+    frames_in: int = 0
+    frames_out: int = 0
+    latencies: list = field(default_factory=list)
+    downtime: list = field(default_factory=list)  # (t0, t1, reason)
+    alerts: list = field(default_factory=list)
+    stage_stats: dict = field(default_factory=dict)
+    bus_bytes: int = 0
+    sim_time: float = 0.0
+
+    @property
+    def lost(self) -> int:
+        return self.frames_in - self.frames_out
+
+    def throughput(self) -> float:
+        return self.frames_out / self.sim_time if self.sim_time else 0.0
+
+    def mean_latency(self) -> float:
+        return sum(self.latencies) / len(self.latencies) if self.latencies \
+            else 0.0
+
+    def total_downtime(self) -> float:
+        return sum(t1 - t0 for t0, t1, _ in self.downtime)
+
+
+class _Stage:
+    def __init__(self, cart: Cartridge, queue_cap: int):
+        self.cart = cart
+        self.queue: deque = deque()
+        self.queue_cap = queue_cap
+        self.busy = False
+        self.held: Optional[msg.Message] = None   # done but downstream full
+        self.stats = StageStats()
+        self.pos = 0                              # last known chain position
+
+
+class StreamEngine:
+    """Chain topology engine. Stages are rebuilt on registry events."""
+
+    def __init__(self, registry: CapabilityRegistry, bus: SharedBus,
+                 *, queue_cap: int = 8, execute_payloads: bool = False):
+        self.registry = registry
+        self.bus = bus
+        self.queue_cap = queue_cap
+        self.execute_payloads = execute_payloads
+        self.now = 0.0
+        self.paused_until = 0.0
+        self.halted_since: Optional[float] = None   # missing capability
+        self._in_swap = False
+        self.report = EngineReport()
+        self._events: list = []
+        self._eseq = itertools.count()
+        self._stages: List[_Stage] = []
+        self._hold_buffer: deque = deque()   # frames buffered during pauses
+        self._frame_seq = itertools.count()
+        self._source_exhausted = False
+        registry.subscribe(self._on_registry_event)
+        self._rebuild()
+
+    # -- pipeline construction ------------------------------------------------
+    def _rebuild(self):
+        old_list = self._stages
+        old = {s.cart: s for s in old_list}
+        chain = self.registry.chain()
+        validate_chain(chain)
+        self._stages = []
+        for i, cart in enumerate(chain):
+            st = old.get(cart) or _Stage(cart, self.queue_cap)
+            st.pos = i
+            self._stages.append(st)
+        # rescue queued/held frames of stages that left the chain
+        kept = set(id(s) for s in self._stages)
+        for s in old_list:
+            if id(s) not in kept:
+                for m in s.queue:
+                    self._hold_buffer.append((s.pos, m))
+                s.queue.clear()
+                if s.held is not None:
+                    self._hold_buffer.append((s.pos, s.held))
+                    s.held = None
+
+    def _on_registry_event(self, kind: str, rec):
+        # engine-driven swaps rebuild once at the end of their transaction;
+        # direct registry edits (tests) get a safe rebuild here.
+        if not self._in_swap:
+            self._rebuild()
+
+    # -- event queue ----------------------------------------------------------
+    def _push_event(self, t: float, fn: Callable, *args):
+        heapq.heappush(self._events, (t, next(self._eseq), fn, args))
+
+    def run(self, until: float) -> EngineReport:
+        while self._events and self._events[0][0] <= until:
+            t, _, fn, args = heapq.heappop(self._events)
+            self.now = max(self.now, t)
+            fn(*args)
+        # sim_time = when work actually finished (not the horizon)
+        self.report.sim_time = self.now
+        self.report.bus_bytes = self.bus.bytes_moved
+        for st in self._stages:
+            self.report.stage_stats[st.cart.name] = st.stats
+        return self.report
+
+    # -- source ---------------------------------------------------------------
+    def feed(self, n_frames: int, interval_s: float, payload_fn=None,
+             frame_bytes: int = 150528, t0: float = 0.0):
+        for i in range(n_frames):
+            self._push_event(t0 + i * interval_s, self._frame_arrival,
+                             payload_fn(i) if payload_fn else None,
+                             frame_bytes)
+
+    def _frame_arrival(self, payload, frame_bytes):
+        m = msg.Message(kind=msg.IMAGE_FRAME, seq=next(self._frame_seq),
+                        payload=payload, t_created=self.now,
+                        meta={"bytes": frame_bytes})
+        self.report.frames_in += 1
+        if self.now < self.paused_until or self.halted_since is not None \
+                or not self._stages:
+            self._hold_buffer.append((0, m))  # paper: buffered, not dropped
+            return
+        self._enqueue(0, m)
+
+    # -- stage machinery ------------------------------------------------------
+    # Events reference _Stage objects, not indices: hot-swap rebuilds the
+    # stage list mid-flight, so positions are resolved at event time and a
+    # message whose stage vanished is re-buffered (zero loss).
+    def _enqueue(self, idx: int, m: msg.Message):
+        if idx >= len(self._stages):
+            self._complete(m)
+            return
+        st = self._stages[idx]
+        st.queue.append(m)
+        self._try_start(st)
+
+    def _try_start(self, st: _Stage):
+        if st not in self._stages or self.halted_since is not None:
+            return
+        if st.busy or st.held is not None or not st.queue:
+            return
+        if self.now < self.paused_until:
+            self._push_event(self.paused_until, self._try_start, st)
+            return
+        m = st.queue.popleft()
+        st.busy = True
+        svc = st.cart.device.service_s
+        if self.execute_payloads and m.payload is not None:
+            m = st.cart.process(m)
+        st.stats.busy_s += svc
+        self._push_event(self.now + svc, self._stage_done, st, m)
+
+    def _stage_done(self, st: _Stage, m: msg.Message):
+        st.stats.processed += 1
+        st.busy = False
+        self._handoff(st, m)
+
+    def _handoff(self, st: _Stage, m: msg.Message):
+        """Bus transfer to the next stage, honoring backpressure."""
+        try:
+            idx = self._stages.index(st)
+        except ValueError:
+            # stage removed mid-flight: its output re-enters at the slot
+            # that shifted into its old position (= downstream of the gap)
+            self._hold_buffer.append((st.pos, m))
+            return
+        nxt = idx + 1
+        if nxt < len(self._stages) and \
+                len(self._stages[nxt].queue) >= self.queue_cap:
+            # downstream full: hold (upstream throttles automatically since
+            # this stage won't start its next frame while holding)
+            st.held = m
+            self._push_event(self.now + 1e-3, self._retry_handoff, st)
+            return
+        nbytes = m.meta.get("bytes", m.nbytes() if m.payload is not None
+                            else 0)
+        done = self.bus.transfer(self.now, nbytes, len(self._stages))
+        nxt_stage = self._stages[nxt] if nxt < len(self._stages) else None
+        self._push_event(done, self._arrive_next, nxt_stage, m)
+        self._try_start(st)
+
+    def _retry_handoff(self, st: _Stage):
+        if st.held is None:
+            return
+        m, st.held = st.held, None
+        st.stats.blocked_s += 1e-3
+        self._handoff(st, m)
+
+    def _arrive_next(self, nxt_stage, m: msg.Message):
+        if nxt_stage is None:
+            self._complete(m)
+            return
+        if nxt_stage not in self._stages:
+            # target vanished between transfer start and arrival
+            self._hold_buffer.append((nxt_stage.pos, m))
+            return
+        nxt_stage.queue.append(m)
+        self._try_start(nxt_stage)
+
+    def _complete(self, m: msg.Message):
+        self.report.frames_out += 1
+        self.report.latencies.append(self.now - m.t_created)
+
+    # -- hot-swap (paper §3.2/§4.2) -------------------------------------------
+    def schedule_remove(self, t: float, slot: int):
+        self._push_event(t, self._do_remove, slot)
+
+    def schedule_insert(self, t: float, slot: int, cart: Cartridge):
+        self._push_event(t, self._do_insert, slot, cart)
+
+    def _pause(self, dur: float, reason: str):
+        t1 = max(self.paused_until, self.now + dur)
+        self.report.downtime.append((self.now, t1, reason))
+        self.paused_until = t1
+        self._push_event(t1, self._resume)
+
+    def _resume(self):
+        if self.now < self.paused_until:
+            return
+        while self._hold_buffer:
+            idx, m = self._hold_buffer.popleft()
+            self._enqueue(min(idx, len(self._stages)), m)
+        for st in list(self._stages):
+            self._try_start(st)
+
+    def _do_remove(self, slot: int):
+        rec = self.registry.slots.get(slot)
+        if rec is None:
+            return
+        idx = sorted(self.registry.slots).index(slot)
+        up = self._stages[idx - 1].cart if idx > 0 else None
+        down = self._stages[idx + 1].cart if idx + 1 < len(self._stages) \
+            else None
+        # re-buffer frames queued at the removed stage (zero loss); they
+        # re-enter at this position, i.e. at the bridge or next stage
+        victim = self._stages[idx]
+        for m in victim.queue:
+            self._hold_buffer.append((idx, m))
+        victim.queue.clear()
+        if victim.held is not None:
+            self._hold_buffer.append((idx, victim.held))
+            victim.held = None
+        self._in_swap = True
+        try:
+            self.registry.remove(slot, self.now)
+            upspec = up.produces if up else None
+            downspec = down.consumes if down else None
+            compatible = (up is None or down is None
+                          or downspec.accepts(upspec))
+            if compatible:
+                # paper: 'bridge the gap if the pipeline can continue
+                # without that function' — chain shortens (pass-through)
+                self._rebuild()
+                self._pause(REMOVE_PAUSE_S, f"remove slot {slot}")
+            else:
+                # paper: 'triggers an alert for operator intervention' —
+                # halt; frames buffer (zero loss) until a compatible
+                # cartridge is inserted
+                self.halted_since = self.now
+                self.report.alerts.append(
+                    (self.now, f"capability '{rec.cartridge.name}' missing;"
+                               f" pipeline halted for operator"))
+        finally:
+            self._in_swap = False
+
+    def _do_insert(self, slot: int, cart: Cartridge):
+        self._in_swap = True
+        try:
+            # clear any bridge occupying this slot
+            if slot in self.registry.slots and isinstance(
+                    self.registry.slots[slot].cartridge, PassThrough):
+                self.registry.remove(slot, self.now)
+            load_s = cart.device.load_s
+            self.registry.insert(slot, cart, self.now)
+            if not cart._loaded:
+                if self.execute_payloads:
+                    cart.load()
+                else:
+                    cart._loaded = True
+                    cart._fn = lambda p, x: x
+            self._rebuild()
+        finally:
+            self._in_swap = False
+        if self.halted_since is not None:
+            # operator supplied the missing capability: close the halt
+            # window and resume
+            t0 = self.halted_since
+            self.halted_since = None
+            self.report.downtime.append(
+                (t0, self.now, f"halted awaiting capability (slot {slot})"))
+        self._pause(HANDSHAKE_S + load_s, f"insert slot {slot}")
+
+
+def validate_chain(chain: List[Cartridge]):
+    """Type-check consume/produce contracts along the chain (registration-
+    time validation, paper §3.2)."""
+    for a, b in zip(chain, chain[1:]):
+        if not b.consumes.accepts(a.produces):
+            raise msg.TypeError_(
+                f"{a.name} produces {a.produces.describe()} but "
+                f"{b.name} consumes {b.consumes.describe()}")

@@ -1,0 +1,81 @@
+"""Health monitoring + straggler mitigation for serving pipelines.
+
+VDiSK's health daemon, generalized to datacenter scale: every stage (or
+data-parallel worker) posts heartbeats; a worker whose in-flight request
+exceeds ``straggler_factor x`` the stage's trailing latency percentile gets
+its request *backup-dispatched* to a healthy peer (tied-request / hedged
+execution — the standard tail-latency mitigation), and a worker that
+misses ``dead_after_s`` of heartbeats is declared failed, which triggers
+the same path as a cartridge removal (bypass / re-mesh).
+"""
+from __future__ import annotations
+
+import math
+from collections import defaultdict, deque
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+
+@dataclass
+class WorkerState:
+    last_heartbeat: float = 0.0
+    inflight_since: Optional[float] = None
+    inflight_id: Optional[int] = None
+    done: int = 0
+    backup_dispatches: int = 0
+    alive: bool = True
+
+
+class HealthMonitor:
+    def __init__(self, *, dead_after_s: float = 3.0,
+                 straggler_factor: float = 3.0, window: int = 64):
+        self.dead_after_s = dead_after_s
+        self.straggler_factor = straggler_factor
+        self.workers: Dict[str, WorkerState] = defaultdict(WorkerState)
+        self.latencies: deque = deque(maxlen=window)
+        self.events: List[tuple] = []
+
+    def heartbeat(self, worker: str, t: float):
+        w = self.workers[worker]
+        w.last_heartbeat = t
+        if not w.alive:
+            w.alive = True
+            self.events.append((t, "rejoin", worker))
+
+    def start_request(self, worker: str, req_id: int, t: float):
+        w = self.workers[worker]
+        w.inflight_since, w.inflight_id = t, req_id
+        w.last_heartbeat = t
+
+    def finish_request(self, worker: str, t: float):
+        w = self.workers[worker]
+        if w.inflight_since is not None:
+            self.latencies.append(t - w.inflight_since)
+        w.inflight_since = w.inflight_id = None
+        w.done += 1
+        w.last_heartbeat = t
+
+    def _p90(self) -> float:
+        if not self.latencies:
+            return float("inf")
+        xs = sorted(self.latencies)
+        return xs[min(int(math.ceil(0.9 * len(xs))) - 1, len(xs) - 1)]
+
+    def check(self, t: float):
+        """Returns (dead_workers, straggler (worker, req_id) pairs)."""
+        dead, stragglers = [], []
+        thresh = self.straggler_factor * self._p90()
+        for name, w in self.workers.items():
+            if not w.alive:
+                continue
+            if t - w.last_heartbeat > self.dead_after_s:
+                w.alive = False
+                dead.append(name)
+                self.events.append((t, "dead", name))
+                continue
+            if w.inflight_since is not None and \
+                    t - w.inflight_since > thresh:
+                stragglers.append((name, w.inflight_id))
+                w.backup_dispatches += 1
+                self.events.append((t, "straggler", name))
+        return dead, stragglers

@@ -1,0 +1,58 @@
+"""Capability registry — VDiSK's view of what is plugged into the bus.
+
+Mirrors the paper's §3.2 handshake: on insertion a cartridge reports its
+capability ID and data format; the registry records it and notifies
+listeners (the engine rebuilds its pipeline routing on these events, the
+way VDiSK reacts to USB attach/detach + Zeroconf announcements).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from repro.core.cartridge import Cartridge
+
+
+@dataclass
+class SlotRecord:
+    slot: int
+    cartridge: Cartridge
+    handshake: dict
+    inserted_at: float = 0.0
+
+
+class CapabilityRegistry:
+    def __init__(self):
+        self.slots: Dict[int, SlotRecord] = {}
+        self._listeners: List[Callable[[str, SlotRecord], None]] = []
+
+    # -- discovery events ----------------------------------------------------
+    def insert(self, slot: int, cart: Cartridge, t: float = 0.0) -> SlotRecord:
+        if slot in self.slots:
+            raise ValueError(f"slot {slot} occupied by "
+                             f"{self.slots[slot].cartridge.name}")
+        rec = SlotRecord(slot, cart, cart.handshake(), inserted_at=t)
+        self.slots[slot] = rec
+        for fn in self._listeners:
+            fn("insert", rec)
+        return rec
+
+    def remove(self, slot: int, t: float = 0.0) -> SlotRecord:
+        rec = self.slots.pop(slot)
+        for fn in self._listeners:
+            fn("remove", rec)
+        return rec
+
+    def subscribe(self, fn: Callable[[str, SlotRecord], None]):
+        self._listeners.append(fn)
+
+    # -- queries --------------------------------------------------------------
+    def chain(self) -> List[Cartridge]:
+        """Cartridges in physical slot order (the paper's default pipeline)."""
+        return [self.slots[s].cartridge for s in sorted(self.slots)]
+
+    def find(self, capability_id: int) -> Optional[Cartridge]:
+        for rec in self.slots.values():
+            if rec.handshake["capability_id"] == capability_id:
+                return rec.cartridge
+        return None

@@ -1,0 +1,248 @@
+"""Logical-axis sharding: rules map logical tensor axes -> mesh axes.
+
+MaxText-style indirection: model code annotates tensors with *logical* axis
+names ("embed", "heads", ...); a rule set picks the physical mesh axes. This
+lets the same model run under tensor-parallel (TP), fully-sharded (FSDP), or
+single-host rules without touching model code.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Mapping, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Logical axis vocabulary
+# ---------------------------------------------------------------------------
+#   layers     scan dimension over (super)blocks       -> never sharded
+#   batch      global batch                            -> (pod, data)
+#   seq        sequence (activations)                  -> None (or "data" SP)
+#   cache_seq  KV-cache time axis                      -> None / "data"
+#   embed      d_model                                 -> None (TP) / fsdp
+#   vocab      vocabulary                              -> model
+#   heads      query heads                             -> model
+#   kv_heads   kv heads                                -> model (capped)
+#   head_dim   per-head dim                            -> None
+#   mlp        ffn hidden                              -> model
+#   experts    MoE experts                             -> model (EP)
+#   expert_mlp per-expert ffn hidden                   -> None
+#   q_lora / kv_lora   MLA latents                     -> None
+#   conv, state, ssm_heads, inner  SSM internals       -> model where safe
+
+Rules = Mapping[str, Any]
+
+TP_RULES: Rules = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "act_seq": None,   # residual-stream seq axis at superblock boundaries
+    "cache_seq": None,
+    "cache_batch": ("pod", "data"),
+    "embed": None,
+    "embed_table": None,
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "experts": "model",
+    "expert_mlp": None,
+    "q_lora": None,
+    "kv_lora": None,
+    "conv": None,
+    "state": None,
+    "ssm_heads": "model",
+    "inner": "model",
+    "layers": None,
+    "frames": None,
+}
+
+# FSDP: weights additionally sharded along their "embed"/"expert_mlp" axis over
+# the data axis (ZeRO-3); XLA inserts per-layer all-gathers inside the scan.
+FSDP_RULES: Rules = dict(
+    TP_RULES,
+    embed="data",
+    expert_mlp="data",
+    q_lora="data",
+    kv_lora="data",
+    head_dim=None,
+)
+
+# Long-context serving: shard the KV-cache time axis over "data" (sequence
+# parallelism over the cache) because batch=1 cannot use the data axis.
+LONG_CONTEXT_RULES: Rules = dict(
+    TP_RULES,
+    cache_seq="data",
+    cache_batch=None,
+    batch=None,
+)
+
+# Decode serving (32k context): the KV-cache time axis shards over "model"
+# (flash-decode style: each model shard scores its cache chunk; softmax
+# stats + context psum are tiny) so 128 concurrent 32k caches fit HBM.
+DECODE_RULES: Rules = dict(
+    TP_RULES,
+    cache_seq="model",
+)
+
+# MoE decode serving: additionally spread routed experts over ("pod","data")
+# (EP) with the per-expert ffn hidden dim over "model" (intra-expert TP).
+# Token batch stays on ("pod","data") too; moe_fwd gathers tokens across EP
+# shards and reduce-scatters outputs back (the TPU analogue of the GPU
+# all-to-all).
+DECODE_MOE_RULES: Rules = dict(
+    DECODE_RULES,
+    experts=("pod", "data"),
+    expert_mlp="model",
+)
+
+# Sequence-parallel training: the residual stream (and therefore the
+# scan-over-layers carry that dominates activation memory) shards its seq
+# axis over "model" between superblocks; blocks gather what they need
+# (Megatron-SP adapted to scan + logical axes). Attention/MoE internals
+# keep their existing annotations ("seq" -> None), so XLA inserts the
+# boundary gathers automatically.
+FSDP_SP_RULES: Rules = dict(FSDP_RULES, act_seq="model")
+
+RULE_SETS = {
+    "tp": TP_RULES,
+    "fsdp": FSDP_RULES,
+    "fsdp_sp": FSDP_SP_RULES,
+    "long": LONG_CONTEXT_RULES,
+    "decode": DECODE_RULES,
+    "decode_moe": DECODE_MOE_RULES,
+}
+
+_state = threading.local()
+
+
+def _current_rules() -> Rules | None:
+    return getattr(_state, "rules", None)
+
+
+def _current_mesh() -> Mesh | None:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Rules | str, mesh: Mesh | None = None):
+    """Activate a rule set for model code traced inside this context."""
+    if isinstance(rules, str):
+        rules = RULE_SETS[rules]
+    prev = (_current_rules(), _current_mesh())
+    _state.rules, _state.mesh = rules, mesh
+    try:
+        yield
+    finally:
+        _state.rules, _state.mesh = prev
+
+
+def mesh_axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def logical_to_pspec(
+    axes: Sequence[str | None],
+    rules: Rules,
+    mesh: Mesh | None = None,
+    shape: Sequence[int] | None = None,
+) -> P:
+    """Map logical axes -> PartitionSpec. Drops mesh axes that do not exist in
+    ``mesh`` and shardings that do not divide ``shape`` evenly."""
+    parts = []
+    used: set = set()
+    names = set(mesh.axis_names) if mesh is not None else None
+    for i, ax in enumerate(axes):
+        m = rules.get(ax) if ax is not None else None
+        flat = [a for a in (m if isinstance(m, (tuple, list)) else (m,)) if a is not None]
+        if names is not None:
+            flat = [a for a in flat if a in names]
+        # never map two logical axes onto the same mesh axis in one pspec
+        flat = [a for a in flat if a not in used]
+        if flat and shape is not None and mesh is not None:
+            sz = int(np.prod([mesh.shape[a] for a in flat]))
+            if shape[i] % sz != 0:
+                flat = []
+        if not flat:
+            parts.append(None)
+        else:
+            used.update(flat)
+            parts.append(tuple(flat) if len(flat) > 1 else flat[0])
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def shard(x: jax.Array, *axes: str | None) -> jax.Array:
+    """Constrain activation sharding by logical axes. No-op w/o active rules."""
+    rules, mesh = _current_rules(), _current_mesh()
+    if rules is None or mesh is None:
+        return x
+    spec = logical_to_pspec(axes, rules, mesh, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def current_mesh_and_rules():
+    return _current_mesh(), _current_rules()
+
+
+# ---------------------------------------------------------------------------
+# Param specs: shape/dtype/logical-axes triples driving init, AOT and sharding
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class Spec:
+    shape: tuple
+    axes: tuple  # logical axis names, len == len(shape)
+    init: str = "normal"  # normal | zeros | ones | small
+    dtype: Any = None  # default: model dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def spec_map(fn, tree):
+    return jax.tree.map(fn, tree, is_leaf=lambda x: isinstance(x, Spec))
+
+
+def shape_dtype(tree, default_dtype) -> Any:
+    return spec_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype or default_dtype), tree
+    )
+
+
+def shardings(tree, mesh: Mesh, rules: Rules | str):
+    if isinstance(rules, str):
+        rules = RULE_SETS[rules]
+    return spec_map(
+        lambda s: NamedSharding(mesh, logical_to_pspec(s.axes, rules, mesh, s.shape)),
+        tree,
+    )
+
+
+def init_params(tree, key: jax.Array, default_dtype) -> Any:
+    leaves, treedef = jax.tree.flatten(
+        tree, is_leaf=lambda x: isinstance(x, Spec)
+    )
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for spec, k in zip(leaves, keys):
+        dt = spec.dtype or default_dtype
+        if spec.init == "zeros":
+            out.append(jax.numpy.zeros(spec.shape, dt))
+        elif spec.init == "ones":
+            out.append(jax.numpy.ones(spec.shape, dt))
+        else:
+            scale = 0.02 if spec.init == "normal" else 0.006
+            fan_in_axis = 0
+            out.append(
+                (jax.random.normal(k, spec.shape, jax.numpy.float32) * scale).astype(dt)
+            )
+    return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,146 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+forward/train step on CPU, asserting output shapes + finite values."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import base as cb
+from repro.launch import specs as sp
+from repro.models import model as mdl
+from repro.optim import adamw, constant
+from repro.sharding import init_params
+
+S, B = 16, 2
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", cb.ARCH_IDS)
+def test_forward_and_loss(arch, rng):
+    cfg = cb.smoke(arch)
+    params = init_params(mdl.param_specs(cfg), rng, jnp.bfloat16)
+    batch = sp.make_batch(cfg, S, B, rng)
+    logits, aux, _ = jax.jit(
+        lambda p, b: mdl.forward(p, cfg, b))(params, batch)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    loss, metrics = jax.jit(lambda p, b: mdl.loss_fn(p, cfg, b))(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss))
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "deepseek-v3-671b",
+                                  "xlstm-1.3b"])
+def test_train_step_descends(arch, rng):
+    """One optimizer step lowers the loss on the same batch."""
+    cfg = cb.smoke(arch)
+    params = init_params(mdl.param_specs(cfg), rng, jnp.float32)
+    batch = sp.make_batch(cfg, S, B, rng)
+    opt = adamw(constant(3e-3), weight_decay=0.0)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(p, s, i):
+        (l, m), g = jax.value_and_grad(
+            lambda p: mdl.loss_fn(p, cfg, batch), has_aux=True)(p)
+        p2, s2, _ = opt.update(g, s, p, i)
+        return p2, s2, l
+
+    losses = []
+    for i in range(5):
+        params, state, l = step(params, state, jnp.int32(i))
+        losses.append(float(l))
+    assert losses[-1] < losses[0], losses
+
+
+@pytest.mark.parametrize("arch", ["codeqwen1.5-7b", "deepseek-v2-236b",
+                                  "zamba2-2.7b", "whisper-base"])
+def test_decode_matches_forward(arch, rng):
+    """prefill + one decode step == full forward at position S."""
+    cfg = cb.smoke(arch)
+    params = init_params(mdl.param_specs(cfg), rng, jnp.bfloat16)
+    batch = sp.make_batch(cfg, S, B, rng, with_labels=False)
+    last, cache = jax.jit(lambda p, b: mdl.prefill(p, cfg, b))(params, batch)
+    tok = jnp.argmax(last, -1).astype(jnp.int32)[:, None]
+
+    cache_t = sp.init_cache(cfg, B, S + 4)
+
+    def put(dst, src):
+        if src.ndim == 0 or dst.shape == src.shape:
+            return src.astype(dst.dtype)
+        ax = [i for i, (a, b) in enumerate(zip(dst.shape, src.shape))
+              if a != b]
+        sl = [slice(None)] * dst.ndim
+        sl[ax[0]] = slice(0, src.shape[ax[0]])
+        return dst.at[tuple(sl)].set(src.astype(dst.dtype))
+
+    cache2 = jax.tree.map(put, cache_t, cache)
+    got, _ = jax.jit(lambda p, t, c: mdl.decode_step(
+        p, cfg, t, jnp.int32(S), c))(params, tok, cache2)
+
+    b2 = dict(batch, tokens=jnp.concatenate([batch["tokens"], tok], axis=1))
+    ref, _, _ = jax.jit(lambda p, b: mdl.forward(p, cfg, b))(params, b2)
+    ref = ref[:, -1].astype(jnp.float32)
+    err = float(jnp.max(jnp.abs(ref - got.astype(jnp.float32)))
+                / (jnp.max(jnp.abs(ref)) + 1e-6))
+    assert err < 2e-2, (arch, err)
+
+
+def test_all_full_configs_resolve():
+    for arch in cb.ARCH_IDS:
+        cfg = cb.get(arch)
+        assert cfg.n_layers > 0 and cfg.d_model > 0
+        assert mdl.param_specs(cfg) is not None
+
+
+@pytest.mark.parametrize("arch", ["codeqwen1.5-7b", "deepseek-v2-236b"])
+def test_int8_kv_cache_decode_parity(arch, rng):
+    """Quantized serving cache: decode matches full forward within 2%."""
+    cfg = cb.smoke(arch).replace(kv_cache_dtype="int8")
+    params = init_params(mdl.param_specs(cfg), rng, jnp.bfloat16)
+    batch = sp.make_batch(cfg, S, B, rng, with_labels=False)
+    last, cache = jax.jit(lambda p, b: mdl.prefill(p, cfg, b))(params, batch)
+    tok = jnp.argmax(last, -1).astype(jnp.int32)[:, None]
+    ct = sp.init_cache(cfg, B, S + 4)
+
+    def put(dst, src):
+        if src.ndim == 0 or dst.shape == src.shape:
+            return src.astype(dst.dtype)
+        ax = [i for i, (a, b) in enumerate(zip(dst.shape, src.shape))
+              if a != b][0]
+        sl = [slice(None)] * dst.ndim
+        sl[ax] = slice(0, src.shape[ax])
+        return dst.at[tuple(sl)].set(src.astype(dst.dtype))
+
+    cache2 = jax.tree.map(put, ct, cache)
+    got, _ = jax.jit(lambda p, t, c: mdl.decode_step(
+        p, cfg, t, jnp.int32(S), c))(params, tok, cache2)
+    b2 = dict(batch, tokens=jnp.concatenate([batch["tokens"], tok], axis=1))
+    ref, _, _ = jax.jit(lambda p, b: mdl.forward(p, cfg, b))(params, b2)
+    ref = ref[:, -1].astype(jnp.float32)
+    err = float(jnp.max(jnp.abs(ref - got.astype(jnp.float32)))
+                / (jnp.max(jnp.abs(ref)) + 1e-6))
+    assert err < 2e-2, (arch, err)
+
+
+def test_int8_expert_weights_parity(rng):
+    """Weight-only quantized MoE matches the bf16 expert output closely."""
+    import numpy as np
+    from repro.models import moe as M
+
+    cfg = cb.smoke("deepseek-v3-671b")
+    cfg8 = cfg.replace(expert_weights_dtype="int8")
+    p = init_params(M.moe_specs(cfg), rng, jnp.bfloat16)
+    p8 = dict(p, **M.quantize_expert_weights(
+        {k: p[k] for k in ("w_gate", "w_up", "w_down")}))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model),
+                          jnp.bfloat16) * 0.5
+    y_ref, _ = M.moe_fwd(p, x, cfg)
+    y_q, _ = M.moe_fwd(p8, x, cfg8)
+    ref = np.asarray(y_ref, np.float32)
+    got = np.asarray(y_q, np.float32)
+    denom = np.max(np.abs(ref)) + 1e-6
+    assert np.max(np.abs(ref - got)) / denom < 3e-2

@@ -1,0 +1,120 @@
+"""Pallas kernel sweeps: shapes x dtypes vs the pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops as K
+from repro.kernels import ref as R
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.gallery_match import gallery_match_pallas
+from repro.kernels.mamba2_ssd import mamba2_ssd_pallas
+
+
+# ---------------------------------------------------------------------------
+# gallery_match
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("Q,N,D,k", [
+    (1, 16, 32, 1),
+    (7, 100, 64, 5),
+    (37, 1000, 128, 5),
+    (128, 2048, 256, 10),
+    (5, 513, 64, 8),       # non-multiple gallery vs block
+])
+def test_gallery_match_matches_ref(Q, N, D, k):
+    kq = jax.random.PRNGKey(Q * 1000 + N)
+    q = jax.random.normal(kq, (Q, D), jnp.float32)
+    g = jax.random.normal(jax.random.PRNGKey(1), (N, D), jnp.float32)
+    qn = q / jnp.linalg.norm(q, axis=-1, keepdims=True)
+    gn = g / jnp.linalg.norm(g, axis=-1, keepdims=True)
+    s, i = gallery_match_pallas(qn, gn, k=k, interpret=True)
+    sr, ir = R.gallery_match_ref(qn, gn, k=k)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), atol=1e-5)
+    # indices may differ on exact ties; scores must agree
+    agree = np.asarray(i) == np.asarray(ir)
+    tie_ok = np.isclose(np.asarray(s), np.asarray(sr), atol=1e-5)
+    assert np.all(agree | tie_ok)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gallery_match_dtypes(dtype):
+    q = jax.random.normal(jax.random.PRNGKey(0), (9, 64)).astype(dtype)
+    g = jax.random.normal(jax.random.PRNGKey(1), (257, 64)).astype(dtype)
+    s, i = K.gallery_match(q, g, k=3)
+    assert s.shape == (9, 3) and i.shape == (9, 3)
+    assert bool(jnp.all(jnp.diff(s, axis=1) <= 1e-6))
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,H,Kh,S,D,causal,window", [
+    (1, 2, 2, 128, 64, True, 0),
+    (2, 4, 2, 256, 64, True, 0),       # GQA group 2
+    (1, 8, 1, 512, 128, True, 0),      # MQA
+    (2, 2, 2, 256, 64, False, 0),      # bidirectional
+    (1, 4, 4, 512, 64, True, 128),     # sliding window
+    (1, 2, 2, 384, 32, True, 0),       # non-multiple of block
+])
+def test_flash_matches_ref(B, H, Kh, S, D, causal, window):
+    kq = jax.random.PRNGKey(S + H)
+    q = jax.random.normal(kq, (B, H, S, D), jnp.float32) * 0.3
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, Kh, S, D),
+                          jnp.float32) * 0.3
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, Kh, S, D), jnp.float32)
+    o = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                               bq=128, bk=128, interpret=True)
+    orf = R.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(orf),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_flash_mla_asymmetric_head_dims():
+    """qk dim 192 vs v dim 128 (the MLA layout)."""
+    B, H, S = 1, 2, 256
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, H, S, 192)) * 0.2
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, H, S, 192)) * 0.2
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, H, S, 128))
+    o = flash_attention_pallas(q, k, v, causal=True, bq=128, bk=128,
+                               interpret=True)
+    orf = R.flash_attention_ref(q, k, v, causal=True, scale=192 ** -0.5)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(orf),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_flash_bf16():
+    B, H, S, D = 1, 2, 256, 64
+    q = (jax.random.normal(jax.random.PRNGKey(0), (B, H, S, D)) * 0.3
+         ).astype(jnp.bfloat16)
+    k = (jax.random.normal(jax.random.PRNGKey(1), (B, H, S, D)) * 0.3
+         ).astype(jnp.bfloat16)
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, H, S, D)
+                          ).astype(jnp.bfloat16)
+    o = flash_attention_pallas(q, k, v, interpret=True)
+    orf = R.flash_attention_ref(q, k, v)
+    assert float(jnp.max(jnp.abs(o.astype(jnp.float32) - orf))) < 0.05
+
+
+# ---------------------------------------------------------------------------
+# mamba2 ssd
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("Bt,L,H,P,N,chunk", [
+    (1, 128, 1, 16, 8, 64),
+    (2, 256, 3, 32, 16, 128),
+    (1, 512, 2, 64, 32, 256),
+    (2, 64, 4, 8, 8, 64),              # single chunk
+])
+def test_ssd_matches_sequential_ref(Bt, L, H, P, N, chunk):
+    key = jax.random.PRNGKey(L + P)
+    x = jax.random.normal(key, (Bt, L, H, P), jnp.float32)
+    dt = jax.nn.softplus(
+        jax.random.normal(jax.random.PRNGKey(1), (Bt, L, H))) * 0.1
+    A = -jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(2), (H,)))
+    B = jax.random.normal(jax.random.PRNGKey(3), (Bt, L, N)) * 0.3
+    C = jax.random.normal(jax.random.PRNGKey(4), (Bt, L, N)) * 0.3
+    y, st = mamba2_ssd_pallas(x, dt, A, B, C, chunk=chunk, interpret=True)
+    yr, str_ = R.mamba2_ssd_ref(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=2e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(str_),
+                               atol=2e-4, rtol=1e-3)

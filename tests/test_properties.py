@@ -1,0 +1,96 @@
+"""Hypothesis property tests over the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as stn
+
+from repro.bus import BusParams, SharedBus
+from repro.core import messages as msg
+from repro.core.cartridge import DeviceModel, FnCartridge
+from repro.crypto import KeyedRotation, decrypt_bytes, encrypt_bytes
+from repro.optim import dequantize, quantize
+from repro.runtime import CapabilityRegistry, StreamEngine
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+# -- quantization -------------------------------------------------------------
+@given(stn.lists(stn.floats(-1e4, 1e4, allow_nan=False, width=32),
+                 min_size=1, max_size=400))
+def test_quantize_bounded_error(xs):
+    x = jnp.asarray(np.array(xs, np.float32))
+    err = jnp.abs(dequantize(quantize(x)) - x)
+    bound = jnp.max(jnp.abs(x)) / 127.0 + 1e-5
+    assert float(jnp.max(err)) <= float(bound)
+
+
+@given(stn.integers(1, 5000))
+def test_quantize_preserves_shape(n):
+    x = jnp.ones((n,), jnp.float32)
+    assert dequantize(quantize(x)).shape == (n,)
+
+
+# -- cipher ---------------------------------------------------------------------
+@given(stn.binary(min_size=0, max_size=512), stn.integers(0, 2**31 - 1))
+def test_cipher_roundtrip(data, seed):
+    key = jax.random.PRNGKey(seed)
+    assert decrypt_bytes(key, encrypt_bytes(key, data)) == data
+
+
+# -- template rotation ----------------------------------------------------------
+@given(stn.integers(0, 1000))
+def test_rotation_is_isometry(seed):
+    rot = KeyedRotation(16, seed=seed)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (8, 16))
+    nx = jnp.linalg.norm(x, axis=-1)
+    np_ = jnp.linalg.norm(rot.protect(x), axis=-1)
+    np.testing.assert_allclose(np.asarray(nx), np.asarray(np_), rtol=1e-4)
+
+
+# -- message specs ----------------------------------------------------------------
+kind_st = stn.sampled_from([msg.IMAGE_FRAME, msg.BBOXES, msg.EMBEDDING])
+shape_st = stn.one_of(stn.none(), stn.tuples(
+    stn.one_of(stn.none(), stn.integers(1, 64)),
+    stn.one_of(stn.none(), stn.integers(1, 64))))
+
+
+@given(kind_st, shape_st)
+def test_spec_accepts_reflexive(kind, shape):
+    s = msg.MessageSpec(kind, shape)
+    assert s.accepts(s)
+
+
+@given(kind_st, kind_st, shape_st)
+def test_spec_kind_mismatch_rejected(k1, k2, shape):
+    if k1 != k2:
+        assert not msg.MessageSpec(k1, shape).accepts(msg.MessageSpec(k2, shape))
+
+
+# -- engine conservation -----------------------------------------------------------
+@given(stn.integers(1, 4), stn.integers(1, 60),
+       stn.floats(0.001, 0.05), stn.integers(0, 1))
+def test_engine_never_loses_frames(n_stages, n_frames, service_s, do_swap):
+    reg = CapabilityRegistry()
+    spec = msg.MessageSpec(msg.IMAGE_FRAME)
+    for i in range(n_stages):
+        reg.insert(i, FnCartridge(f"s{i}", lambda p, x: x, spec, spec,
+                                  device=DeviceModel(service_s=service_s)))
+    eng = StreamEngine(reg, SharedBus(BusParams("t", base_overhead_s=1e-4)))
+    eng.feed(n_frames, interval_s=0.01)
+    if do_swap and n_stages >= 2:
+        eng.schedule_remove(0.2, slot=1)
+    rep = eng.run(until=120)
+    assert rep.frames_out == n_frames
+    assert sorted(rep.latencies) is not None
+    assert all(l >= 0 for l in rep.latencies)
+
+
+# -- bus monotonicity ---------------------------------------------------------------
+@given(stn.integers(1, 5), stn.integers(1, 5))
+def test_bus_fps_decreases_with_contention(n1, n2):
+    from repro.bus import calibrated, simulate_broadcast_fps
+    p = calibrated("ncs2")
+    f1 = simulate_broadcast_fps(p, min(n1, n2))
+    f2 = simulate_broadcast_fps(p, max(n1, n2))
+    assert f2 <= f1 + 1e-6

@@ -1,0 +1,167 @@
+"""VDiSK runtime behaviour: typed chaining, hot-swap, backpressure,
+zero-loss buffering — validated against the paper's §4.2 numbers."""
+import numpy as np
+import pytest
+
+from repro.bus import BusParams, SharedBus, calibrated
+from repro.core import messages as msg
+from repro.core.cartridge import Cartridge, DeviceModel, FnCartridge, PassThrough
+from repro.runtime import CapabilityRegistry, StreamEngine, validate_chain
+from repro.runtime.engine import REMOVE_PAUSE_S
+
+
+def _cart(name, service_s=0.03, consumes=None, produces=None, load_s=1.5):
+    return FnCartridge(
+        name, lambda p, x: x,
+        consumes or msg.MessageSpec(msg.IMAGE_FRAME),
+        produces or msg.MessageSpec(msg.IMAGE_FRAME),
+        device=DeviceModel(service_s=service_s, load_s=load_s),
+    )
+
+
+def _engine(n_stages=3, service_s=0.03, queue_cap=8):
+    reg = CapabilityRegistry()
+    for i in range(n_stages):
+        reg.insert(i, _cart(f"stage{i}", service_s))
+    bus = SharedBus(BusParams("test", bandwidth=400e6,
+                              base_overhead_s=1e-4, arbitration_s=2e-4))
+    return StreamEngine(reg, bus, queue_cap=queue_cap), reg
+
+
+# -- typed chaining -----------------------------------------------------------
+def test_type_mismatch_rejected():
+    reg = CapabilityRegistry()
+    reg.insert(0, _cart("det", produces=msg.MessageSpec(msg.BBOXES)))
+    reg.insert(1, _cart("ocr", consumes=msg.MessageSpec(msg.TOKENS)))
+    bus = SharedBus(BusParams("t"))
+    with pytest.raises(msg.TypeError_):
+        StreamEngine(reg, bus)
+
+
+def test_chain_in_slot_order():
+    reg = CapabilityRegistry()
+    reg.insert(2, _cart("c"))
+    reg.insert(0, _cart("a"))
+    reg.insert(1, _cart("b"))
+    assert [c.name for c in reg.chain()] == ["a", "b", "c"]
+
+
+# -- pipeline latency (paper: sum of stages + ~5% handoff) ---------------------
+def test_pipeline_latency_sum_plus_small_overhead():
+    eng, _ = _engine(3, service_s=0.03)
+    eng.feed(50, interval_s=0.2)  # slow feed: no queueing
+    rep = eng.run(until=30)
+    assert rep.frames_out == 50
+    lat = rep.mean_latency()
+    assert 0.09 <= lat <= 0.105, lat  # 3 x 30ms + <= ~5-10% handoff
+
+
+def test_pipelined_throughput_not_sum():
+    """Paper §4.1: '500% more compute only slows down by 50%' — a 5-stage
+    chain streams at ~stage rate, not 1/(5 x service)."""
+    eng, _ = _engine(5, service_s=0.03)
+    eng.feed(200, interval_s=0.03)
+    rep = eng.run(until=60)
+    thr = rep.frames_out / (rep.latencies and max(1e-9, rep.sim_time) or 1)
+    assert rep.frames_out == 200
+    # serial processing would take 200 * 0.15s = 30s; pipelined ~6s
+    assert rep.sim_time < 12.0, rep.sim_time
+
+
+# -- hot-swap ------------------------------------------------------------------
+def test_remove_bypasses_and_buffers_zero_loss():
+    """Same-type neighbors: the chain simply shortens (paper: 'bridge the
+    gap if the pipeline can continue without that function')."""
+    eng, reg = _engine(3, service_s=0.02)
+    eng.feed(100, interval_s=0.05)
+    eng.schedule_remove(1.0, slot=1)
+    rep = eng.run(until=30)
+    assert rep.frames_out == 100, f"lost {rep.lost}"
+    assert any("remove" in r for _, _, r in rep.downtime)
+    # paper: ~0.5 s pause on removal
+    d = rep.total_downtime()
+    assert REMOVE_PAUSE_S <= d <= REMOVE_PAUSE_S + 0.2, d
+    assert 1 not in reg.slots
+    assert [c.name for c in reg.chain()] == ["stage0", "stage2"]
+
+
+def test_remove_incompatible_halts_alerts_and_recovers_on_insert():
+    """Type-incompatible gap: engine halts with an operator alert, buffers
+    everything, and resumes (zero loss) once a compatible cartridge is
+    inserted (paper: 'triggers an alert for operator intervention')."""
+    reg = CapabilityRegistry()
+    reg.insert(0, _cart("det", produces=msg.MessageSpec(msg.BBOXES)))
+    reg.insert(1, _cart("embed", consumes=msg.MessageSpec(msg.BBOXES),
+                        produces=msg.MessageSpec(msg.EMBEDDING)))
+    reg.insert(2, _cart("match", consumes=msg.MessageSpec(msg.EMBEDDING),
+                        produces=msg.MessageSpec(msg.MATCH_RESULT)))
+    bus = SharedBus(BusParams("t", base_overhead_s=1e-4))
+    eng = StreamEngine(reg, bus)
+    eng.feed(60, interval_s=0.05)
+    eng.schedule_remove(1.0, slot=1)
+    replacement = _cart("embed2", consumes=msg.MessageSpec(msg.BBOXES),
+                        produces=msg.MessageSpec(msg.EMBEDDING))
+    eng.schedule_insert(3.0, slot=1, cart=replacement)
+    rep = eng.run(until=40)
+    assert rep.alerts and "embed" in rep.alerts[0][1]
+    assert rep.frames_out == 60, f"lost {rep.lost}"
+    # the halt window (~2 s) is recorded as downtime
+    halts = [d for d in rep.downtime if "halted" in d[2]]
+    assert halts and 1.8 <= halts[0][1] - halts[0][0] <= 2.2
+    assert [c.name for c in reg.chain()] == ["det", "embed2", "match"]
+
+
+def test_insert_pause_dominated_by_model_load():
+    eng, reg = _engine(2, service_s=0.02)
+    eng.feed(100, interval_s=0.05)
+    cart = _cart("quality", 0.02, load_s=1.5)
+    eng.schedule_insert(1.5, slot=5, cart=cart)
+    rep = eng.run(until=30)
+    assert rep.frames_out == 100
+    d = rep.total_downtime()
+    # paper: ~2 s reintegration (handshake + model reload)
+    assert 1.5 <= d <= 2.5, d
+    assert reg.slots[5].cartridge is cart
+
+
+def test_remove_then_reinsert_roundtrip():
+    eng, reg = _engine(3, service_s=0.02)
+    eng.feed(150, interval_s=0.04)
+    victim = reg.slots[1].cartridge
+    eng.schedule_remove(1.0, slot=1)
+    eng.schedule_insert(3.0, slot=1, cart=_cart("stage1b", 0.02))
+    rep = eng.run(until=30)
+    assert rep.frames_out == 150
+    assert len(rep.downtime) == 2
+    assert [c.name for c in reg.chain()] == ["stage0", "stage1b", "stage2"]
+
+
+# -- flow control / backpressure ----------------------------------------------
+def test_backpressure_bounds_queues():
+    """Slow stage 2: queues must stay bounded (no unbounded buffering)."""
+    reg = CapabilityRegistry()
+    reg.insert(0, _cart("fast", 0.005))
+    reg.insert(1, _cart("slow", 0.05))
+    bus = SharedBus(BusParams("t", base_overhead_s=1e-4))
+    eng = StreamEngine(reg, bus, queue_cap=4)
+    eng.feed(100, interval_s=0.005)
+    rep = eng.run(until=60)
+    assert rep.frames_out == 100
+    slow = rep.stage_stats["slow"]
+    fast = rep.stage_stats["fast"]
+    assert slow.processed == 100
+    # fast stage must have been throttled (blocked time accrued)
+    assert fast.blocked_s > 0
+
+
+# -- paper power model (§4.3) ---------------------------------------------------
+def test_power_model_order_of_magnitude():
+    eng, _ = _engine(5, service_s=1 / 15.0)
+    eng.feed(50, interval_s=1 / 15.0)
+    rep = eng.run(until=20)
+    total_w = 0.0
+    for name, st in rep.stage_stats.items():
+        util = st.busy_s / rep.sim_time
+        total_w += util * 1.8 + (1 - util) * 0.3
+    host_w = 3.0
+    assert 3.0 <= total_w + host_w <= 15.0  # paper: ~10 W system
