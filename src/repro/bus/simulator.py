@@ -46,32 +46,56 @@ def calibrate_from_fps(name: str, fps1: float, fps2: float, fps5: float,
 
 
 class SharedBus:
-    """FIFO shared bus: transfers serialize; cost grows with contention."""
+    """FIFO shared bus: transfers serialize; cost grows with contention.
+
+    Contention is accounted explicitly so schedulers can see where bus
+    time goes: ``wait_s`` is time transfers spent queued behind the bus
+    (FIFO serialization), ``arbitration_s_total`` is protocol overhead
+    attributable to the number of endpoints sharing the hub, and
+    ``wire_s`` is pure payload time at the calibrated bandwidth.
+    """
 
     def __init__(self, params: BusParams):
         self.p = params
-        self.free_at = 0.0
-        self.bytes_moved = 0
-        self.transfers = 0
-        self.busy_s = 0.0
+        self.reset()
 
     def reset(self):
         self.free_at = 0.0
         self.bytes_moved = 0
         self.transfers = 0
         self.busy_s = 0.0
+        self.wait_s = 0.0
+        self.arbitration_s_total = 0.0
+        self.wire_s = 0.0
+        self.max_endpoints = 0
 
     def transfer(self, t_req: float, nbytes: int, n_endpoints: int = 1) -> float:
         """Schedule a transfer requested at ``t_req``; returns completion."""
         start = max(t_req, self.free_at)
-        dur = (self.p.base_overhead_s
-               + self.p.arbitration_s * max(n_endpoints - 1, 0)
-               + nbytes / self.p.bandwidth)
+        arb = self.p.arbitration_s * max(n_endpoints - 1, 0)
+        wire = nbytes / self.p.bandwidth
+        dur = self.p.base_overhead_s + arb + wire
         self.free_at = start + dur
         self.bytes_moved += nbytes
         self.transfers += 1
         self.busy_s += dur
+        self.wait_s += start - t_req
+        self.arbitration_s_total += arb
+        self.wire_s += wire
+        self.max_endpoints = max(self.max_endpoints, n_endpoints)
         return self.free_at
+
+    def stats(self) -> dict:
+        """Contention breakdown of everything moved so far."""
+        return {
+            "bytes_moved": self.bytes_moved,
+            "transfers": self.transfers,
+            "busy_s": round(self.busy_s, 6),
+            "wait_s": round(self.wait_s, 6),
+            "arbitration_s": round(self.arbitration_s_total, 6),
+            "wire_s": round(self.wire_s, 6),
+            "max_endpoints": self.max_endpoints,
+        }
 
 
 # ---------------------------------------------------------------------------

@@ -10,6 +10,8 @@ dominates the 2 s re-insert pause).
 """
 from __future__ import annotations
 
+import copy
+import itertools
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
@@ -29,6 +31,11 @@ class DeviceModel:
     power_w: float = 1.8  # draw while running (paper §4.3: 1-2 W)
     idle_w: float = 0.3
     load_s: float = 1.5  # model (re)load on insert — bulk of the 2 s pause
+    # Marginal service cost of each extra frame in a micro-batch, as a
+    # fraction of service_s (activations stream through the on-stick model
+    # back-to-back, so per-frame dispatch overhead amortizes).  1.0 = no
+    # batching benefit.
+    batch_marginal: float = 0.7
 
 
 class Cartridge:
@@ -73,6 +80,21 @@ class Cartridge:
             return None
         dt = self.consumes.dtype or np.float32
         return np.zeros(sh, dt)
+
+    # -- replication ---------------------------------------------------------
+    _replica_seq = itertools.count(1)
+
+    def clone(self, name: Optional[str] = None) -> "Cartridge":
+        """A replica of this cartridge on another physical device.
+
+        Shares the (immutable) params, compiled fn and device model — the
+        same bitstream flashed onto a second stick — but carries its own
+        identity and runtime stats so the scheduler can track per-lane load.
+        """
+        rep = copy.copy(self)
+        rep.stats = {"processed": 0, "busy_s": 0.0}
+        rep.name = name or f"{self.name}#r{next(Cartridge._replica_seq)}"
+        return rep
 
     # -- compute ------------------------------------------------------------
     def fn(self, params, x):  # override

@@ -1,4 +1,9 @@
 from repro.runtime.registry import CapabilityRegistry, SlotRecord
 from repro.runtime.engine import StreamEngine, EngineReport, validate_chain
+from repro.runtime.replication import (build_replicated_engine,
+                                       engine_broadcast_fps,
+                                       engine_shard_fps,
+                                       make_inference_cartridge,
+                                       run_replicated)
 from repro.runtime.health import HealthMonitor
 from repro.runtime.elastic import ElasticController, largest_mesh

@@ -12,6 +12,30 @@ This is the CHAMP fork of VDiSK's core loop, §2.3/§3.3 of the paper:
   * zero message loss across swaps (buffered frames replay afterward)
   * per-stage utilization -> the §4.3 power model
 
+Replicated stages (paper §4.1, Table 1).  A capability slot is a *lane
+group*: it may hold N replica cartridges (N identical sticks on the hub).
+Dispatch over a group follows the slot's mode:
+
+  * ``shard``     — each frame goes to the least-loaded replica; the group
+                    streams at ~N× a single device (modulo shared-bus
+                    contention).  Pulling one replica of a multi-lane group
+                    degrades throughput instead of pausing the pipeline.
+  * ``broadcast`` — every frame is transferred to every replica (serially
+                    on the shared bus) and completes when the slowest
+                    finishes: the Table 1 redundant-inference experiment.
+                    With a single broadcast group the engine reproduces the
+                    published 1→5-device FPS curve exactly.
+
+Adaptive micro-batching: when a shard lane falls behind (≥2 frames
+queued) it drains up to ``queue_cap`` frames in one service cycle at
+``DeviceModel.batch_marginal`` marginal cost per extra frame, and the
+batch crosses the bus as one transfer (amortized base overhead).
+
+Final-stage outputs cross the bus back to the host like any other hop —
+except in broadcast mode, where the per-replica result fetch (a few score
+bytes) overlaps the next frame's compute window, matching how §4.1
+measures pure inference FPS.
+
 Timing is virtual (deterministic, calibrated DeviceModels); payload compute
 is optionally real JAX (``execute_payloads=True``) so correctness tests can
 assert data flows through reconfigurations unchanged.
@@ -27,7 +51,7 @@ from typing import Any, Callable, List, Optional
 from repro.bus.simulator import BusParams, SharedBus
 from repro.core.cartridge import Cartridge, PassThrough
 from repro.core import messages as msg
-from repro.runtime.registry import CapabilityRegistry
+from repro.runtime.registry import CapabilityRegistry, SlotRecord
 
 HANDSHAKE_S = 0.35       # detection + addressing + capability handshake
 REMOVE_PAUSE_S = 0.5     # paper §4.2: ~0.5 s reconfiguration on removal
@@ -38,6 +62,8 @@ class StageStats:
     processed: int = 0
     busy_s: float = 0.0
     blocked_s: float = 0.0
+    batches: int = 0
+    max_batch: int = 0
 
 
 @dataclass
@@ -47,7 +73,10 @@ class EngineReport:
     latencies: list = field(default_factory=list)
     downtime: list = field(default_factory=list)  # (t0, t1, reason)
     alerts: list = field(default_factory=list)
-    stage_stats: dict = field(default_factory=dict)
+    stage_stats: dict = field(default_factory=dict)   # lane name -> StageStats
+    groups: dict = field(default_factory=dict)        # slot -> group summary
+    swap_log: list = field(default_factory=list)      # (t, kind, detail)
+    bus: dict = field(default_factory=dict)           # SharedBus.stats()
     bus_bytes: int = 0
     sim_time: float = 0.0
 
@@ -66,26 +95,63 @@ class EngineReport:
         return sum(t1 - t0 for t0, t1, _ in self.downtime)
 
 
-class _Stage:
+class _Lane:
+    """One physical replica device inside a lane group."""
+
     def __init__(self, cart: Cartridge, queue_cap: int):
         self.cart = cart
         self.queue: deque = deque()
         self.queue_cap = queue_cap
         self.busy = False
-        self.held: Optional[msg.Message] = None   # done but downstream full
+        self.held: Optional[list] = None   # finished batch, downstream full
+        self.ready_at = 0.0                # handshake+load gate for live adds
         self.stats = StageStats()
-        self.pos = 0                              # last known chain position
+        self.pos = 0                       # last known chain position
+        self.slot = -1                     # last known capability slot
+
+
+class _LaneGroup:
+    """All replicas of one capability slot, plus broadcast-mode state."""
+
+    def __init__(self, rec: SlotRecord, queue_cap: int):
+        self.slot = rec.slot
+        self.mode = rec.mode
+        self.lanes: List[_Lane] = []
+        self.queue_cap = queue_cap
+        self.bqueue: deque = deque()       # broadcast: group-level queue
+        self.bbusy = False
+        self.bheld: Optional[msg.Message] = None
+        self.pos = 0
+
+    @property
+    def name(self) -> str:
+        return self.lanes[0].cart.name if self.lanes else f"slot{self.slot}"
+
+    def free_capacity(self) -> int:
+        if self.mode == "broadcast":
+            return max(self.queue_cap - len(self.bqueue), 0)
+        return sum(max(self.queue_cap - len(l.queue), 0) for l in self.lanes)
+
+    def pick_lane(self, now: float) -> Optional[_Lane]:
+        """Least-loaded dispatch; prefer lanes past their handshake gate."""
+        if not self.lanes:
+            return None
+        ready = [l for l in self.lanes if l.ready_at <= now]
+        pool = ready or self.lanes
+        return min(pool, key=lambda l: (len(l.queue) + (1 if l.busy else 0)))
 
 
 class StreamEngine:
-    """Chain topology engine. Stages are rebuilt on registry events."""
+    """Lane-group topology engine. Groups are rebuilt on registry events."""
 
     def __init__(self, registry: CapabilityRegistry, bus: SharedBus,
-                 *, queue_cap: int = 8, execute_payloads: bool = False):
+                 *, queue_cap: int = 8, execute_payloads: bool = False,
+                 microbatch: bool = True):
         self.registry = registry
         self.bus = bus
         self.queue_cap = queue_cap
         self.execute_payloads = execute_payloads
+        self.microbatch = microbatch
         self.now = 0.0
         self.paused_until = 0.0
         self.halted_since: Optional[float] = None   # missing capability
@@ -93,40 +159,94 @@ class StreamEngine:
         self.report = EngineReport()
         self._events: list = []
         self._eseq = itertools.count()
-        self._stages: List[_Stage] = []
+        self._groups: List[_LaneGroup] = []
+        self._group_by_slot: dict = {}       # slot -> _LaneGroup
+        self._lane_by_cart: dict = {}        # id(cart) -> _Lane (live lanes)
+        self._retired_stats: dict = {}       # name -> StageStats (unplugged)
         self._hold_buffer: deque = deque()   # frames buffered during pauses
         self._frame_seq = itertools.count()
-        self._source_exhausted = False
         registry.subscribe(self._on_registry_event)
         self._rebuild()
 
     # -- pipeline construction ------------------------------------------------
     def _rebuild(self):
-        old_list = self._stages
-        old = {s.cart: s for s in old_list}
-        chain = self.registry.chain()
-        validate_chain(chain)
-        self._stages = []
-        for i, cart in enumerate(chain):
-            st = old.get(cart) or _Stage(cart, self.queue_cap)
-            st.pos = i
-            self._stages.append(st)
-        # rescue queued/held frames of stages that left the chain
-        kept = set(id(s) for s in self._stages)
-        for s in old_list:
-            if id(s) not in kept:
-                for m in s.queue:
-                    self._hold_buffer.append((s.pos, m))
-                s.queue.clear()
-                if s.held is not None:
-                    self._hold_buffer.append((s.pos, s.held))
-                    s.held = None
+        """Re-derive lane groups from the registry.  Group and lane objects
+        are *reused* (keyed by slot / cartridge identity) so in-flight
+        events referencing them stay valid across hot-swaps."""
+        old_groups = self._groups
+        # snapshot lane membership NOW: group objects are reused below, so
+        # their .lanes lists get overwritten before the rescue pass runs
+        old_membership = [(g, list(g.lanes)) for g in old_groups]
+        old_group_by_slot = {g.slot: g for g in old_groups}
+        records = self.registry.records()
+        validate_chain([r.cartridge for r in records])
+        self._groups = []
+        kept_lanes = set()
+        for i, rec in enumerate(records):
+            g = old_group_by_slot.get(rec.slot) or _LaneGroup(
+                rec, self.queue_cap)
+            g.mode = rec.mode
+            g.pos = i
+            g.lanes = []
+            for cart in rec.replicas:
+                lane = self._lane_by_cart.get(id(cart)) or _Lane(
+                    cart, self.queue_cap)
+                self._lane_by_cart[id(cart)] = lane
+                lane.pos = i
+                lane.slot = rec.slot
+                g.lanes.append(lane)
+                kept_lanes.add(id(lane))
+            self._groups.append(g)
+        # rescue queued/held frames of lanes and groups that left the chain.
+        # A held batch has already been serviced: when the lane's slot
+        # survives (replica detach) it must re-enter DOWNSTREAM of the
+        # group, not through it again; when the whole slot vanished, its
+        # old position already maps to the stage that shifted into the gap.
+        kept_slots = {g.slot for g in self._groups}
+        for g, lanes in old_membership:
+            held_off = 1 if g.slot in kept_slots else 0
+            for l in lanes:
+                if id(l) not in kept_lanes:
+                    self._rescue_lane(l, l.pos, held_off)
+            if g.slot not in kept_slots:
+                for m in g.bqueue:
+                    self._hold_buffer.append((g.pos, m))
+                g.bqueue.clear()
+                if g.bheld is not None:
+                    self._hold_buffer.append((g.pos, g.bheld))
+                    g.bheld = None
+        # prune unplugged lanes (no unbounded growth across swaps) but keep
+        # a handle on their stats — the StageStats object is shared with any
+        # still-in-flight batch, so late updates remain visible in reports
+        for key, lane in list(self._lane_by_cart.items()):
+            if id(lane) not in kept_lanes:
+                self._retired_stats[lane.cart.name] = lane.stats
+                del self._lane_by_cart[key]
+        self._group_by_slot = {g.slot: g for g in self._groups}
+
+    def _rescue_lane(self, lane: _Lane, pos: int, held_off: int = 0):
+        for m in lane.queue:
+            self._hold_buffer.append((pos, m))
+        lane.queue.clear()
+        if lane.held is not None:
+            for m in lane.held:
+                self._hold_buffer.append((pos + held_off, m))
+            lane.held = None
 
     def _on_registry_event(self, kind: str, rec):
         # engine-driven swaps rebuild once at the end of their transaction;
         # direct registry edits (tests) get a safe rebuild here.
         if not self._in_swap:
             self._rebuild()
+
+    def _group_of_lane(self, lane: _Lane) -> Optional[_LaneGroup]:
+        g = self._group_by_slot.get(lane.slot)
+        if g is not None and lane in g.lanes:
+            return g
+        return None
+
+    def _n_endpoints(self) -> int:
+        return self.registry.n_endpoints() or 1
 
     # -- event queue ----------------------------------------------------------
     def _push_event(self, t: float, fn: Callable, *args):
@@ -140,8 +260,16 @@ class StreamEngine:
         # sim_time = when work actually finished (not the horizon)
         self.report.sim_time = self.now
         self.report.bus_bytes = self.bus.bytes_moved
-        for st in self._stages:
-            self.report.stage_stats[st.cart.name] = st.stats
+        self.report.bus = self.bus.stats()
+        self.report.stage_stats.update(self._retired_stats)
+        for lane in self._lane_by_cart.values():
+            self.report.stage_stats[lane.cart.name] = lane.stats
+        for g in self._groups:
+            self.report.groups[g.slot] = {
+                "mode": g.mode,
+                "lanes": [l.cart.name for l in g.lanes],
+                "processed": sum(l.stats.processed for l in g.lanes),
+            }
         return self.report
 
     # -- source ---------------------------------------------------------------
@@ -158,96 +286,218 @@ class StreamEngine:
                         meta={"bytes": frame_bytes})
         self.report.frames_in += 1
         if self.now < self.paused_until or self.halted_since is not None \
-                or not self._stages:
+                or not self._groups:
             self._hold_buffer.append((0, m))  # paper: buffered, not dropped
             return
         self._enqueue(0, m)
 
     # -- stage machinery ------------------------------------------------------
-    # Events reference _Stage objects, not indices: hot-swap rebuilds the
-    # stage list mid-flight, so positions are resolved at event time and a
-    # message whose stage vanished is re-buffered (zero loss).
+    # Events reference _Lane/_LaneGroup objects, not indices: hot-swap
+    # rebuilds the topology mid-flight, so positions are resolved at event
+    # time and a message whose lane vanished is re-buffered (zero loss).
     def _enqueue(self, idx: int, m: msg.Message):
-        if idx >= len(self._stages):
+        if idx >= len(self._groups):
             self._complete(m)
             return
-        st = self._stages[idx]
-        st.queue.append(m)
-        self._try_start(st)
-
-    def _try_start(self, st: _Stage):
-        if st not in self._stages or self.halted_since is not None:
+        g = self._groups[idx]
+        if g.mode == "broadcast":
+            g.bqueue.append(m)
+            self._try_start_broadcast(g)
             return
-        if st.busy or st.held is not None or not st.queue:
+        lane = g.pick_lane(self.now)
+        if lane is None:
+            self._hold_buffer.append((idx, m))
+            return
+        lane.queue.append(m)
+        self._try_start_lane(lane)
+
+    def _serviced_orphan_target(self, slot: int, pos: int) -> int:
+        """Where an already-serviced message of a vanished lane/group goes:
+        past its slot's current position if the slot still exists, else the
+        old position (which the downstream neighbor shifted into)."""
+        slots = sorted(self.registry.slots)
+        if slot in slots:
+            return slots.index(slot) + 1
+        return pos
+
+    def _reinject(self, pos: int, m: msg.Message):
+        """Put an orphaned in-flight message back into the pipeline at the
+        slot that shifted into its old position.  During a pause/halt it
+        waits in the hold buffer (drained by ``_resume``); otherwise — e.g.
+        after a pauseless replica detach — it re-enters immediately."""
+        if self.now < self.paused_until or self.halted_since is not None \
+                or not self._groups:
+            self._hold_buffer.append((pos, m))
+            return
+        self._enqueue(min(pos, len(self._groups)), m)
+
+    def _try_start_lane(self, lane: _Lane):
+        g = self._group_of_lane(lane)
+        if g is None or self.halted_since is not None:
+            return
+        if lane.busy or lane.held is not None or not lane.queue:
             return
         if self.now < self.paused_until:
-            self._push_event(self.paused_until, self._try_start, st)
+            self._push_event(self.paused_until, self._try_start_lane, lane)
             return
-        m = st.queue.popleft()
-        st.busy = True
-        svc = st.cart.device.service_s
-        if self.execute_payloads and m.payload is not None:
-            m = st.cart.process(m)
-        st.stats.busy_s += svc
-        self._push_event(self.now + svc, self._stage_done, st, m)
-
-    def _stage_done(self, st: _Stage, m: msg.Message):
-        st.stats.processed += 1
-        st.busy = False
-        self._handoff(st, m)
-
-    def _handoff(self, st: _Stage, m: msg.Message):
-        """Bus transfer to the next stage, honoring backpressure."""
-        try:
-            idx = self._stages.index(st)
-        except ValueError:
-            # stage removed mid-flight: its output re-enters at the slot
-            # that shifted into its old position (= downstream of the gap)
-            self._hold_buffer.append((st.pos, m))
+        if lane.ready_at > self.now:         # replica still handshaking
+            self._push_event(lane.ready_at, self._try_start_lane, lane)
             return
+        # adaptive micro-batch: drain the backlog in one service cycle
+        b = 1
+        if self.microbatch and len(lane.queue) >= 2:
+            b = min(len(lane.queue), self.queue_cap)
+        batch = [lane.queue.popleft() for _ in range(b)]
+        lane.busy = True
+        dev = lane.cart.device
+        svc = dev.service_s * (1.0 + (b - 1) * dev.batch_marginal)
+        if self.execute_payloads:
+            batch = [lane.cart.process(m) if m.payload is not None else m
+                     for m in batch]
+        lane.stats.busy_s += svc
+        lane.stats.batches += 1
+        lane.stats.max_batch = max(lane.stats.max_batch, b)
+        self._push_event(self.now + svc, self._lane_done, lane, batch)
+
+    def _lane_done(self, lane: _Lane, batch: list):
+        lane.stats.processed += len(batch)
+        lane.busy = False
+        self._handoff(lane, batch)
+
+    def _handoff(self, lane: _Lane, batch: list):
+        """Bus transfer of a (micro-)batch to the next group, honoring
+        backpressure."""
+        g = self._group_of_lane(lane)
+        if g is None:
+            # lane removed mid-flight: the batch is already serviced, so it
+            # re-enters downstream — at pos+1 while the slot survives
+            # (replica detach), or at the old pos when the whole slot
+            # vanished (the next stage shifted into the gap)
+            tgt = self._serviced_orphan_target(lane.slot, lane.pos)
+            for m in batch:
+                self._reinject(tgt, m)
+            return
+        idx = self._groups.index(g)
         nxt = idx + 1
-        if nxt < len(self._stages) and \
-                len(self._stages[nxt].queue) >= self.queue_cap:
+        if nxt < len(self._groups) and \
+                self._groups[nxt].free_capacity() < len(batch):
             # downstream full: hold (upstream throttles automatically since
-            # this stage won't start its next frame while holding)
-            st.held = m
-            self._push_event(self.now + 1e-3, self._retry_handoff, st)
+            # this lane won't start its next frame while holding)
+            lane.held = batch
+            self._push_event(self.now + 1e-3, self._retry_handoff, lane)
             return
-        nbytes = m.meta.get("bytes", m.nbytes() if m.payload is not None
-                            else 0)
-        done = self.bus.transfer(self.now, nbytes, len(self._stages))
-        nxt_stage = self._stages[nxt] if nxt < len(self._stages) else None
-        self._push_event(done, self._arrive_next, nxt_stage, m)
-        self._try_start(st)
+        nbytes = sum(self._msg_bytes(m) for m in batch)
+        done = self.bus.transfer(self.now, nbytes, self._n_endpoints())
+        nxt_group = self._groups[nxt] if nxt < len(self._groups) else None
+        self._push_event(done, self._arrive_next, nxt_group, batch)
+        self._try_start_lane(lane)
 
-    def _retry_handoff(self, st: _Stage):
-        if st.held is None:
-            return
-        m, st.held = st.held, None
-        st.stats.blocked_s += 1e-3
-        self._handoff(st, m)
+    @staticmethod
+    def _msg_bytes(m: msg.Message) -> int:
+        return m.meta.get("bytes", m.nbytes() if m.payload is not None else 0)
 
-    def _arrive_next(self, nxt_stage, m: msg.Message):
-        if nxt_stage is None:
-            self._complete(m)
+    def _retry_handoff(self, lane: _Lane):
+        if lane.held is None:
             return
-        if nxt_stage not in self._stages:
+        batch, lane.held = lane.held, None
+        lane.stats.blocked_s += 1e-3
+        self._handoff(lane, batch)
+
+    def _arrive_next(self, nxt_group: Optional[_LaneGroup], batch: list):
+        if nxt_group is None:               # sink: results reached the host
+            for m in batch:
+                self._complete(m)
+            return
+        if nxt_group not in self._groups:
             # target vanished between transfer start and arrival
-            self._hold_buffer.append((nxt_stage.pos, m))
+            for m in batch:
+                self._reinject(nxt_group.pos, m)
             return
-        nxt_stage.queue.append(m)
-        self._try_start(nxt_stage)
+        idx = self._groups.index(nxt_group)
+        for m in batch:
+            self._enqueue(idx, m)
 
     def _complete(self, m: msg.Message):
         self.report.frames_out += 1
         self.report.latencies.append(self.now - m.t_created)
 
+    # -- broadcast lanes (paper §4.1, Table 1) --------------------------------
+    def _try_start_broadcast(self, g: _LaneGroup):
+        if g not in self._groups or self.halted_since is not None:
+            return
+        if g.bbusy or g.bheld is not None or not g.bqueue:
+            return
+        if self.now < self.paused_until:
+            self._push_event(self.paused_until, self._try_start_broadcast, g)
+            return
+        lanes = [l for l in g.lanes if l.ready_at <= self.now]
+        if not lanes:
+            self._push_event(min(l.ready_at for l in g.lanes),
+                             self._try_start_broadcast, g)
+            return
+        m = g.bqueue.popleft()
+        g.bbusy = True
+        if self.execute_payloads and m.payload is not None:
+            m = lanes[0].cart.process(m)   # replicas compute identically
+        nbytes = self._msg_bytes(m)
+        n_end = self._n_endpoints()
+        finish = self.now
+        for lane in lanes:
+            arr = self.bus.transfer(self.now, nbytes, n_end)
+            svc = lane.cart.device.service_s
+            lane.stats.busy_s += svc
+            lane.stats.processed += 1
+            lane.stats.batches += 1
+            lane.stats.max_batch = max(lane.stats.max_batch, 1)
+            finish = max(finish, arr + svc)
+        self._push_event(finish, self._broadcast_done, g, m)
+
+    def _broadcast_done(self, g: _LaneGroup, m: msg.Message):
+        g.bbusy = False
+        self._broadcast_handoff(g, m)
+
+    def _broadcast_handoff(self, g: _LaneGroup, m: msg.Message):
+        if g not in self._groups:
+            self._reinject(self._serviced_orphan_target(g.slot, g.pos), m)
+            return
+        idx = self._groups.index(g)
+        nxt = idx + 1
+        if nxt >= len(self._groups):
+            # broadcast results (a few score bytes per replica) are fetched
+            # during the NEXT frame's compute window — the §4.1 FPS
+            # measurement does not charge them to the cycle
+            self._complete(m)
+            self._try_start_broadcast(g)
+            return
+        if self._groups[nxt].free_capacity() < 1:
+            g.bheld = m
+            self._push_event(self.now + 1e-3, self._retry_broadcast, g)
+            return
+        done = self.bus.transfer(self.now, self._msg_bytes(m),
+                                 self._n_endpoints())
+        self._push_event(done, self._arrive_next, self._groups[nxt], [m])
+        self._try_start_broadcast(g)
+
+    def _retry_broadcast(self, g: _LaneGroup):
+        if g.bheld is None:
+            return
+        m, g.bheld = g.bheld, None
+        self._broadcast_handoff(g, m)
+
     # -- hot-swap (paper §3.2/§4.2) -------------------------------------------
     def schedule_remove(self, t: float, slot: int):
         self._push_event(t, self._do_remove, slot)
 
-    def schedule_insert(self, t: float, slot: int, cart: Cartridge):
-        self._push_event(t, self._do_insert, slot, cart)
+    def schedule_insert(self, t: float, slot: int, cart: Cartridge,
+                        mode: str = "shard"):
+        self._push_event(t, self._do_insert, slot, cart, mode)
+
+    def schedule_add_replica(self, t: float, slot: int, cart: Cartridge):
+        self._push_event(t, self._do_add_replica, slot, cart)
+
+    def schedule_remove_replica(self, t: float, slot: int,
+                                cart: Optional[Cartridge] = None):
+        self._push_event(t, self._do_remove_replica, slot, cart)
 
     def _pause(self, dur: float, reason: str):
         t1 = max(self.paused_until, self.now + dur)
@@ -255,32 +505,43 @@ class StreamEngine:
         self.paused_until = t1
         self._push_event(t1, self._resume)
 
-    def _resume(self):
-        if self.now < self.paused_until:
+    def _drain_hold_buffer(self):
+        if self.now < self.paused_until or self.halted_since is not None:
             return
         while self._hold_buffer:
             idx, m = self._hold_buffer.popleft()
-            self._enqueue(min(idx, len(self._stages)), m)
-        for st in list(self._stages):
-            self._try_start(st)
+            self._enqueue(min(idx, len(self._groups)), m)
+
+    def _resume(self):
+        if self.now < self.paused_until:
+            return
+        self._drain_hold_buffer()
+        for g in list(self._groups):
+            if g.mode == "broadcast":
+                self._try_start_broadcast(g)
+            else:
+                for l in list(g.lanes):
+                    self._try_start_lane(l)
 
     def _do_remove(self, slot: int):
         rec = self.registry.slots.get(slot)
         if rec is None:
             return
         idx = sorted(self.registry.slots).index(slot)
-        up = self._stages[idx - 1].cart if idx > 0 else None
-        down = self._stages[idx + 1].cart if idx + 1 < len(self._stages) \
-            else None
-        # re-buffer frames queued at the removed stage (zero loss); they
+        chain = self.registry.chain()
+        up = chain[idx - 1] if idx > 0 else None
+        down = chain[idx + 1] if idx + 1 < len(chain) else None
+        # re-buffer frames queued at the removed group (zero loss); they
         # re-enter at this position, i.e. at the bridge or next stage
-        victim = self._stages[idx]
-        for m in victim.queue:
+        victim = self._groups[idx]
+        for lane in victim.lanes:
+            self._rescue_lane(lane, idx)
+        for m in victim.bqueue:
             self._hold_buffer.append((idx, m))
-        victim.queue.clear()
-        if victim.held is not None:
-            self._hold_buffer.append((idx, victim.held))
-            victim.held = None
+        victim.bqueue.clear()
+        if victim.bheld is not None:
+            self._hold_buffer.append((idx, victim.bheld))
+            victim.bheld = None
         self._in_swap = True
         try:
             self.registry.remove(slot, self.now)
@@ -288,6 +549,8 @@ class StreamEngine:
             downspec = down.consumes if down else None
             compatible = (up is None or down is None
                           or downspec.accepts(upspec))
+            self.report.swap_log.append(
+                (self.now, "remove", f"slot {slot} ({rec.cartridge.name})"))
             if compatible:
                 # paper: 'bridge the gap if the pipeline can continue
                 # without that function' — chain shortens (pass-through)
@@ -304,7 +567,7 @@ class StreamEngine:
         finally:
             self._in_swap = False
 
-    def _do_insert(self, slot: int, cart: Cartridge):
+    def _do_insert(self, slot: int, cart: Cartridge, mode: str = "shard"):
         self._in_swap = True
         try:
             # clear any bridge occupying this slot
@@ -312,16 +575,13 @@ class StreamEngine:
                     self.registry.slots[slot].cartridge, PassThrough):
                 self.registry.remove(slot, self.now)
             load_s = cart.device.load_s
-            self.registry.insert(slot, cart, self.now)
-            if not cart._loaded:
-                if self.execute_payloads:
-                    cart.load()
-                else:
-                    cart._loaded = True
-                    cart._fn = lambda p, x: x
+            self.registry.insert(slot, cart, self.now, mode=mode)
+            self._stub_load(cart)
             self._rebuild()
         finally:
             self._in_swap = False
+        self.report.swap_log.append(
+            (self.now, "insert", f"slot {slot} ({cart.name})"))
         if self.halted_since is not None:
             # operator supplied the missing capability: close the halt
             # window and resume
@@ -330,6 +590,59 @@ class StreamEngine:
             self.report.downtime.append(
                 (t0, self.now, f"halted awaiting capability (slot {slot})"))
         self._pause(HANDSHAKE_S + load_s, f"insert slot {slot}")
+
+    def _do_add_replica(self, slot: int, cart: Cartridge):
+        """Plug one more device into an existing lane group.  The pipeline
+        keeps streaming; the new lane joins after handshake + model load."""
+        if slot not in self.registry.slots:
+            return
+        self._in_swap = True
+        try:
+            self.registry.add_replica(slot, cart, self.now)
+            self._stub_load(cart)
+            self._rebuild()
+        finally:
+            self._in_swap = False
+        for g in self._groups:
+            for lane in g.lanes:
+                if lane.cart is cart:
+                    lane.ready_at = self.now + HANDSHAKE_S + \
+                        cart.device.load_s
+        self.report.swap_log.append(
+            (self.now, "add_replica", f"slot {slot} ({cart.name})"))
+
+    def _do_remove_replica(self, slot: int, cart: Optional[Cartridge]):
+        """Unplug one replica.  With surviving lanes the group degrades
+        throughput (no pause, no halt); the last replica falls back to the
+        whole-slot removal semantics (bridge or operator alert)."""
+        rec = self.registry.slots.get(slot)
+        if rec is None:
+            return
+        victim_cart = cart if cart is not None else rec.replicas[-1]
+        if len(rec.replicas) <= 1:
+            self._do_remove(slot)
+            return
+        self._in_swap = True
+        try:
+            self.registry.remove_replica(slot, victim_cart, self.now)
+            self._rebuild()
+        finally:
+            self._in_swap = False
+        self.report.swap_log.append(
+            (self.now, "remove_replica", f"slot {slot} "
+                                         f"({victim_cart.name})"))
+        # the rebuild's rescue pass parked the victim's backlog in the hold
+        # buffer; with no pause it redistributes to surviving lanes now
+        # (the victim's in-flight batch still completes before detach)
+        self._drain_hold_buffer()
+
+    def _stub_load(self, cart: Cartridge):
+        if not cart._loaded:
+            if self.execute_payloads:
+                cart.load()
+            else:
+                cart._loaded = True
+                cart._fn = lambda p, x: x
 
 
 def validate_chain(chain: List[Cartridge]):

@@ -4,6 +4,18 @@ Mirrors the paper's §3.2 handshake: on insertion a cartridge reports its
 capability ID and data format; the registry records it and notifies
 listeners (the engine rebuilds its pipeline routing on these events, the
 way VDiSK reacts to USB attach/detach + Zeroconf announcements).
+
+A slot is a *lane group*: it may hold several replica cartridges of the
+same capability (the paper's §4.1 broadcast experiment plugs up to five
+identical accelerators into one hub).  ``SlotRecord.replicas`` lists every
+physical device backing the slot; ``SlotRecord.cartridge`` stays the
+primary replica for backward compatibility.  ``mode`` selects how the
+engine dispatches over the replicas:
+
+  * ``"shard"``     — frames are load-balanced across replicas
+                      (throughput scaling);
+  * ``"broadcast"`` — every frame goes to every replica (Table 1's
+                      redundant-inference experiment).
 """
 from __future__ import annotations
 
@@ -12,13 +24,32 @@ from typing import Callable, Dict, List, Optional
 
 from repro.core.cartridge import Cartridge
 
+DISPATCH_MODES = ("shard", "broadcast")
+
 
 @dataclass
 class SlotRecord:
     slot: int
-    cartridge: Cartridge
+    cartridge: Cartridge              # primary replica (compat accessor)
     handshake: dict
     inserted_at: float = 0.0
+    mode: str = "shard"
+    replicas: List[Cartridge] = field(default_factory=list)
+
+    def __post_init__(self):
+        if not self.replicas:
+            self.replicas = [self.cartridge]
+
+
+def _compatible_replica(primary: Cartridge, cart: Cartridge) -> bool:
+    """A replica must speak the primary's exact contract (same capability,
+    interchangeable consume/produce specs) or the dispatcher could route a
+    frame to a device that cannot process it."""
+    return (cart.capability_id == primary.capability_id
+            and cart.consumes.accepts(primary.consumes)
+            and primary.consumes.accepts(cart.consumes)
+            and cart.produces.accepts(primary.produces)
+            and primary.produces.accepts(cart.produces))
 
 
 class CapabilityRegistry:
@@ -27,11 +58,15 @@ class CapabilityRegistry:
         self._listeners: List[Callable[[str, SlotRecord], None]] = []
 
     # -- discovery events ----------------------------------------------------
-    def insert(self, slot: int, cart: Cartridge, t: float = 0.0) -> SlotRecord:
+    def insert(self, slot: int, cart: Cartridge, t: float = 0.0,
+               mode: str = "shard") -> SlotRecord:
         if slot in self.slots:
             raise ValueError(f"slot {slot} occupied by "
                              f"{self.slots[slot].cartridge.name}")
-        rec = SlotRecord(slot, cart, cart.handshake(), inserted_at=t)
+        if mode not in DISPATCH_MODES:
+            raise ValueError(f"unknown dispatch mode {mode!r}")
+        rec = SlotRecord(slot, cart, cart.handshake(), inserted_at=t,
+                         mode=mode)
         self.slots[slot] = rec
         for fn in self._listeners:
             fn("insert", rec)
@@ -43,13 +78,63 @@ class CapabilityRegistry:
             fn("remove", rec)
         return rec
 
+    def add_replica(self, slot: int, cart: Cartridge,
+                    t: float = 0.0) -> SlotRecord:
+        """Plug an additional device of the slot's capability into the hub."""
+        rec = self.slots[slot]
+        for other in self.slots.values():
+            if cart in other.replicas:
+                raise ValueError(
+                    f"{cart.name} is already plugged into slot "
+                    f"{other.slot}; clone() it for another physical device")
+        if not _compatible_replica(rec.cartridge, cart):
+            raise ValueError(
+                f"replica {cart.name} incompatible with slot {slot} "
+                f"({rec.cartridge.name}: "
+                f"{rec.cartridge.consumes.describe()}->"
+                f"{rec.cartridge.produces.describe()})")
+        rec.replicas.append(cart)
+        for fn in self._listeners:
+            fn("add_replica", rec)
+        return rec
+
+    def remove_replica(self, slot: int, cart: Optional[Cartridge] = None,
+                       t: float = 0.0) -> SlotRecord:
+        """Unplug one replica.  Removing the last replica removes the slot
+        (equivalent to ``remove``, with its bridge/halt consequences)."""
+        rec = self.slots[slot]
+        victim = cart if cart is not None else rec.replicas[-1]
+        if victim not in rec.replicas:
+            raise ValueError(f"{victim.name} not a replica of slot {slot}")
+        if len(rec.replicas) == 1:
+            return self.remove(slot, t)
+        rec.replicas.remove(victim)
+        if rec.cartridge is victim:          # promote a surviving replica
+            rec.cartridge = rec.replicas[0]
+            rec.handshake = rec.cartridge.handshake()
+        for fn in self._listeners:
+            fn("remove_replica", rec)
+        return rec
+
     def subscribe(self, fn: Callable[[str, SlotRecord], None]):
         self._listeners.append(fn)
 
     # -- queries --------------------------------------------------------------
     def chain(self) -> List[Cartridge]:
-        """Cartridges in physical slot order (the paper's default pipeline)."""
+        """Primary cartridges in physical slot order (the paper's default
+        pipeline; replicas share the primary's contract)."""
         return [self.slots[s].cartridge for s in sorted(self.slots)]
+
+    def records(self) -> List[SlotRecord]:
+        """Slot records in physical slot order (one per lane group)."""
+        return [self.slots[s] for s in sorted(self.slots)]
+
+    def n_replicas(self, slot: int) -> int:
+        return len(self.slots[slot].replicas)
+
+    def n_endpoints(self) -> int:
+        """Total physical devices on the bus (arbitration contention)."""
+        return sum(len(r.replicas) for r in self.slots.values())
 
     def find(self, capability_id: int) -> Optional[Cartridge]:
         for rec in self.slots.values():

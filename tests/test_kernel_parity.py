@@ -1,0 +1,116 @@
+"""Kernel parity: every Pallas path vs its pure-jnp oracle (kernels/ref.py)
+in interpret mode on CPU, with tolerances per dtype.
+
+Complements test_kernels.py's shape sweeps: here the contract under test is
+numerical parity as a function of input precision — f32 must be tight,
+bf16 within accumulation noise — across all three kernels.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref as R
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.gallery_match import gallery_match_pallas
+from repro.kernels.mamba2_ssd import mamba2_ssd_pallas
+
+# per-dtype (atol, rtol): bf16 has ~8 mantissa bits, so parity against the
+# f32 oracle is dominated by input rounding, not kernel error
+TOL = {
+    jnp.float32: dict(atol=2e-5, rtol=1e-4),
+    jnp.bfloat16: dict(atol=5e-2, rtol=5e-2),
+}
+DTYPES = sorted(TOL, key=str)
+
+
+def _close(got, want, dtype):
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+# -- gallery match ------------------------------------------------------------
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_gallery_match_parity(dtype):
+    q = jax.random.normal(jax.random.PRNGKey(0), (11, 64)).astype(dtype)
+    g = jax.random.normal(jax.random.PRNGKey(1), (301, 64)).astype(dtype)
+    qn = (q / jnp.linalg.norm(q.astype(jnp.float32), axis=-1,
+                              keepdims=True).astype(dtype))
+    gn = (g / jnp.linalg.norm(g.astype(jnp.float32), axis=-1,
+                              keepdims=True).astype(dtype))
+    s, i = gallery_match_pallas(qn, gn, k=5, interpret=True)
+    sr, ir = R.gallery_match_ref(qn, gn, k=5)
+    _close(s, sr, dtype)
+    # index disagreement is only legal on score ties (within tolerance)
+    agree = np.asarray(i) == np.asarray(ir)
+    tie = np.isclose(np.asarray(s, np.float32), np.asarray(sr, np.float32),
+                     **TOL[dtype])
+    assert np.all(agree | tie)
+
+
+# -- flash attention ----------------------------------------------------------
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_parity(dtype, causal):
+    B, H, S, D = 1, 2, 192, 64
+    q = (jax.random.normal(jax.random.PRNGKey(0), (B, H, S, D)) * 0.3
+         ).astype(dtype)
+    k = (jax.random.normal(jax.random.PRNGKey(1), (B, H, S, D)) * 0.3
+         ).astype(dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, H, S, D)).astype(dtype)
+    o = flash_attention_pallas(q, k, v, causal=causal, bq=128, bk=128,
+                               interpret=True)
+    orf = R.flash_attention_ref(q, k, v, causal=causal)
+    _close(o, orf, dtype)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_flash_attention_windowed_parity(dtype):
+    B, H, S, D = 1, 2, 256, 32
+    q = (jax.random.normal(jax.random.PRNGKey(3), (B, H, S, D)) * 0.3
+         ).astype(dtype)
+    k = (jax.random.normal(jax.random.PRNGKey(4), (B, H, S, D)) * 0.3
+         ).astype(dtype)
+    v = jax.random.normal(jax.random.PRNGKey(5), (B, H, S, D)).astype(dtype)
+    o = flash_attention_pallas(q, k, v, causal=True, window=64,
+                               bq=128, bk=128, interpret=True)
+    orf = R.flash_attention_ref(q, k, v, causal=True, window=64)
+    _close(o, orf, dtype)
+
+
+# -- mamba2 ssd ---------------------------------------------------------------
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_mamba2_ssd_parity(dtype):
+    Bt, L, H, P, N = 1, 128, 2, 16, 8
+    x = jax.random.normal(jax.random.PRNGKey(0), (Bt, L, H, P)).astype(dtype)
+    dt = (jax.nn.softplus(
+        jax.random.normal(jax.random.PRNGKey(1), (Bt, L, H))) * 0.1
+    ).astype(dtype)
+    A = -jax.nn.softplus(
+        jax.random.normal(jax.random.PRNGKey(2), (H,))).astype(dtype)
+    B = (jax.random.normal(jax.random.PRNGKey(3), (Bt, L, N)) * 0.3
+         ).astype(dtype)
+    C = (jax.random.normal(jax.random.PRNGKey(4), (Bt, L, N)) * 0.3
+         ).astype(dtype)
+    y, st = mamba2_ssd_pallas(x, dt, A, B, C, chunk=64, interpret=True)
+    yr, str_ = R.mamba2_ssd_ref(x, dt, A, B, C)
+    _close(y, yr, dtype)
+    _close(st, str_, dtype)
+
+
+def test_mamba2_ssd_state_carries_across_chunks():
+    """Chunked scan with a non-trivial initial state in the oracle: the
+    Pallas kernel's final state must equal running the oracle end-to-end
+    over a double-length sequence split in two."""
+    Bt, L, H, P, N = 1, 128, 1, 8, 8
+    key = jax.random.PRNGKey(7)
+    x = jax.random.normal(key, (Bt, 2 * L, H, P), jnp.float32)
+    dt = jax.nn.softplus(
+        jax.random.normal(jax.random.PRNGKey(8), (Bt, 2 * L, H))) * 0.1
+    A = -jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(9), (H,)))
+    B = jax.random.normal(jax.random.PRNGKey(10), (Bt, 2 * L, N)) * 0.3
+    C = jax.random.normal(jax.random.PRNGKey(11), (Bt, 2 * L, N)) * 0.3
+    _, st_full = R.mamba2_ssd_ref(x, dt, A, B, C)
+    _, st_k = mamba2_ssd_pallas(x, dt, A, B, C, chunk=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(st_k), np.asarray(st_full),
+                               atol=2e-4, rtol=1e-3)

@@ -85,7 +85,9 @@ with use_rules(rules, mesh):
     c = jax.jit(make_train_step(cfg, opt, n_micro=2),
                 donate_argnums=(0, 1)).lower(
         params, ost, batch, jax.ShapeDtypeStruct((), jnp.int32)).compile()
-assert c.cost_analysis().get("flops", 0) > 0
+ca = c.cost_analysis()
+ca = ca[0] if isinstance(ca, (list, tuple)) else ca   # jax version compat
+assert ca.get("flops", 0) > 0
 dec = sp.input_specs(cfg, cb.ShapeSpec("d", 128, 8, "decode"), mesh, rules)
 with use_rules(rules, mesh):
     c2 = jax.jit(make_serve_step(cfg), donate_argnums=(3,)).lower(
@@ -99,5 +101,5 @@ def test_mini_dryrun_8_devices():
     r = subprocess.run([sys.executable, "-c", MINI_DRYRUN],
                        capture_output=True, text=True, timeout=600,
                        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"})
+                            "HOME": "/root", "JAX_PLATFORMS": "cpu"})
     assert "MINI_DRYRUN_OK" in r.stdout, r.stderr[-3000:]
