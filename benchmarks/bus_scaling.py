@@ -15,6 +15,10 @@ bus contention breakdown from the replicated run.
 """
 from __future__ import annotations
 
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")  # reproducible benchmark numbers
+
 from repro.bus import TABLE1, calibrated, simulate_broadcast_fps
 from repro.runtime import engine_shard_fps, run_replicated
 

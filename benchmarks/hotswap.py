@@ -2,6 +2,10 @@
 re-inserting pauses ~2 s (model reload), and no frames are lost."""
 from __future__ import annotations
 
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")  # reproducible benchmark numbers
+
 from repro.bus import BusParams, SharedBus
 from repro.core import messages as msg
 from repro.core.cartridge import DeviceModel, FnCartridge

@@ -3,6 +3,10 @@
 handoff overhead; 3 x 30 ms sticks -> 95-100 ms per frame."""
 from __future__ import annotations
 
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")  # reproducible benchmark numbers
+
 from repro.bus import BusParams, SharedBus
 from repro.core import messages as msg
 from repro.core.cartridge import DeviceModel, FnCartridge

@@ -2,6 +2,10 @@
 ~7-8 W for accelerators, ~10 W with host overhead."""
 from __future__ import annotations
 
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")  # reproducible benchmark numbers
+
 from repro.bus import calibrated
 from repro.core.cartridge import DeviceModel
 from repro.core import messages as msg

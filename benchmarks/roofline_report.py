@@ -9,6 +9,8 @@ from __future__ import annotations
 import json
 import os
 
+os.environ.setdefault("JAX_PLATFORMS", "cpu")  # reproducible benchmark numbers
+
 DEFAULT_PATH = os.environ.get("DRYRUN_RESULTS", "results/dryrun_single.jsonl")
 
 

@@ -6,11 +6,16 @@ check fails.
 """
 from __future__ import annotations
 
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")  # reproducible benchmark numbers
+
 import json
 import time
 
-from benchmarks import (bus_scaling, hotswap, pipeline_latency, power_model,
-                        roofline_report, secure_match)
+from benchmarks import (bus_scaling, gallery_bench, hotswap,
+                        pipeline_latency, power_model, roofline_report,
+                        secure_match)
 
 BENCHES = [
     ("table1_bus_scaling", bus_scaling.run, "pass_pm1fps"),
@@ -18,6 +23,7 @@ BENCHES = [
     ("s4_2_hotswap", hotswap.run, "zero_loss"),
     ("s4_3_power_model", power_model.run, "in_band"),
     ("s3_encrypted_matching", secure_match.run, "identical_all"),
+    ("identification_fastpath", gallery_bench.run, "pass_fastpath"),
     ("roofline_report", roofline_report.run, None),
 ]
 

@@ -3,6 +3,10 @@ the protected (rotated) space returns identical top-k to raw-space cosine
 matching, and times the gallery_match kernel per gallery size."""
 from __future__ import annotations
 
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")  # reproducible benchmark numbers
+
 import time
 
 import jax

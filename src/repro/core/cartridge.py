@@ -108,6 +108,12 @@ class Cartridge:
         self.stats["processed"] += 1
         return m.with_payload(out, self.produces.kind)
 
+    def process_batch(self, ms: list) -> list:
+        """Service one engine micro-batch.  Default is frame-at-a-time;
+        batched stage types (e.g. the watchlist match stage) override this
+        to coalesce the whole batch into a single kernel dispatch."""
+        return [self.process(m) if m.payload is not None else m for m in ms]
+
     # -- handshake (paper §3.2: capability ID + data format) -----------------
     def handshake(self) -> dict:
         return {

@@ -3,17 +3,28 @@
 Holds a biometric gallery (N templates + identity labels) where templates
 live in the protected (rotated) space and the backing arrays are encrypted
 at rest with the Threefry stream cipher. Matching happens entirely in
-protected space via the ``gallery_match`` kernel (cosine top-k); raw
-embeddings never exist inside the store.
+protected space via the ``gallery_match`` kernel family (cosine top-k);
+raw embeddings never exist inside the store.
 
 The store also "defines the necessary matching calculation for the
 template type it stores" (paper fig. 2): `match()` is the store's own
 calculation, parameterized by template kind.
+
+Identification fast path (sharded + quantized). The protected gallery is
+held as ``n_shards`` independently encrypted shards — one per lane-group
+replica in the engine topology, the software analogue of the paper's
+"plug another cartridge in" capacity scaling: a slot with N replicas
+searches an N×-larger gallery at the per-shard latency, and ``match``
+merges the per-shard top-k into a global top-k.  Each shard keeps a
+*prepared* match-time view (decrypt once → L2-normalize → optionally
+bf16-cast or int8 per-row quantize with scales), built lazily and
+invalidated by ``enroll``/``rekey``/``reshard``; ``seal()`` drops the
+plaintext views so only the encrypted-at-rest blobs remain resident.
+Match dtypes: ``"fp32"`` (oracle), ``"bf16"``, ``"int8"``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,59 +33,183 @@ import numpy as np
 from repro.crypto.templates import (KeyedRotation, decrypt_array,
                                     encrypt_array)
 
+MATCH_DTYPES = ("fp32", "bf16", "int8")
+
 
 class SecureGallery:
     def __init__(self, dim: int, *, seed: int = 7, template_kind: str =
-                 "face_embedding"):
+                 "face_embedding", n_shards: int = 1,
+                 match_dtype: str = "fp32"):
+        if n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
+        if match_dtype not in MATCH_DTYPES:
+            raise ValueError(f"match_dtype must be one of {MATCH_DTYPES}")
         self.dim = dim
         self.template_kind = template_kind
+        self.match_dtype = match_dtype
         self.rotation = KeyedRotation(dim, seed)
         self._cipher_key = jax.random.PRNGKey(seed ^ 0x5EC2E7)
-        self._enc_templates: Optional[dict] = None  # encrypted at rest
+        # per-shard encrypted blobs + the global row ids each shard holds
+        self._shards: List[Optional[dict]] = [None] * n_shards
+        self._shard_ids: List[np.ndarray] = [
+            np.empty((0,), np.int64) for _ in range(n_shards)]
+        self._prep: List[dict] = [{} for _ in range(n_shards)]
         self._labels: list = []
         self._n = 0
 
     # -- enrollment ------------------------------------------------------------
     def enroll(self, raw_templates: np.ndarray, labels):
-        """raw (N, dim) embeddings -> protected + encrypted at rest."""
+        """raw (N, dim) embeddings -> protected + encrypted at rest,
+        distributed across shards (least-full first, so replica lanes stay
+        balanced as the watchlist grows)."""
         prot = np.asarray(self.rotation.protect(jnp.asarray(raw_templates)))
-        if self._enc_templates is not None:
-            prev = decrypt_array(self._cipher_key, self._enc_templates)
-            prot = np.concatenate([prev, prot], axis=0)
-        self._enc_templates = encrypt_array(self._cipher_key,
-                                            prot.astype(np.float32))
+        prot = prot.astype(np.float32)
+        n_new = prot.shape[0]
+        gids = np.arange(self._n, self._n + n_new, dtype=np.int64)
+        order = np.argsort([len(ids) for ids in self._shard_ids],
+                           kind="stable")
+        splits = np.array_split(np.arange(n_new), self.n_shards)
+        for shard, rows in zip(order, splits):
+            if len(rows) == 0:
+                continue
+            self._append_to_shard(int(shard), prot[rows], gids[rows])
         self._labels = list(self._labels) + list(labels)
         self._n = len(self._labels)
+
+    def _append_to_shard(self, s: int, prot: np.ndarray, gids: np.ndarray):
+        if self._shards[s] is not None:
+            prev = decrypt_array(self._cipher_key, self._shards[s])
+            prot = np.concatenate([prev, prot], axis=0)
+        self._shards[s] = encrypt_array(self._cipher_key, prot)
+        self._shard_ids[s] = np.concatenate([self._shard_ids[s], gids])
+        self._prep[s] = {}                         # plaintext view is stale
 
     def __len__(self):
         return self._n
 
+    @property
+    def n_shards(self) -> int:
+        return len(self._shards)
+
+    def shard_sizes(self) -> List[int]:
+        return [len(ids) for ids in self._shard_ids]
+
     # -- matching ----------------------------------------------------------------
     def protected_gallery(self) -> jax.Array:
-        assert self._enc_templates is not None, "empty gallery"
-        return jnp.asarray(decrypt_array(self._cipher_key,
-                                         self._enc_templates))
+        """All protected templates, in global enrollment order (compat)."""
+        assert self._n > 0, "empty gallery"
+        out = np.empty((self._n, self.dim), np.float32)
+        for s in range(self.n_shards):
+            if len(self._shard_ids[s]):
+                out[self._shard_ids[s]] = decrypt_array(
+                    self._cipher_key, self._shards[s])
+        return jnp.asarray(out)
 
-    def match(self, raw_queries: jax.Array, k: int = 5):
+    def _prepare(self, s: int, dtype: str) -> dict:
+        """Decrypt-once match-time view of shard ``s`` for ``dtype``:
+        pre-normalized rows, plus the int8 values/scales for the quantized
+        path.  This is the enrollment-side half of the fused kernel entry
+        (queries are normalized in-kernel; the gallery is normalized here)."""
+        prep = self._prep[s]
+        if "gn" not in prep:
+            g = jnp.asarray(decrypt_array(self._cipher_key, self._shards[s]))
+            prep["gn"] = g / jnp.maximum(
+                jnp.linalg.norm(g, axis=-1, keepdims=True), 1e-9)
+        if dtype == "bf16" and "gn_bf16" not in prep:
+            prep["gn_bf16"] = prep["gn"].astype(jnp.bfloat16)
+        if dtype == "int8" and "q8" not in prep:
+            from repro.kernels import ops as K
+            q8, scale = K.prepare_gallery_quant(prep["gn"])
+            prep["q8"], prep["scale"] = q8, scale
+        return prep
+
+    def seal(self):
+        """Drop every plaintext match-time view; only the encrypted-at-rest
+        shard blobs stay resident (next ``match`` re-prepares)."""
+        self._prep = [{} for _ in self._shards]
+
+    def _match_shard(self, s: int, q: jax.Array, k: int, dtype: str):
+        from repro.kernels import ops as K
+        prep = self._prepare(s, dtype)
+        if dtype == "int8":
+            return K.gallery_match_quant(q, prep["q8"], prep["scale"], k=k)
+        gn = prep["gn_bf16"] if dtype == "bf16" else prep["gn"]
+        return K.gallery_match_fused(q, gn, k=k)
+
+    def match(self, raw_queries: jax.Array, k: int = 5,
+              dtype: Optional[str] = None):
         """Match raw query embeddings; returns (labels, scores).
 
         Queries are protected with the same rotation, then matched in
         protected space (cosine is invariant under the shared rotation).
+        Each shard is searched independently (one kernel call per shard,
+        i.e. per replica lane) and the per-shard top-k merge to a global
+        top-k; ``dtype`` selects the score path (default: the store's
+        ``match_dtype``).
         """
-        from repro.kernels import ops as K
+        assert self._n > 0, "empty gallery"
+        dtype = dtype or self.match_dtype
+        if dtype not in MATCH_DTYPES:
+            raise ValueError(f"dtype must be one of {MATCH_DTYPES}")
+        k = min(k, self._n)
         q = self.rotation.protect(jnp.asarray(raw_queries))
-        g = self.protected_gallery()
-        scores, idx = K.gallery_match(q, g, k=min(k, self._n))
-        labels = np.asarray(self._labels, object)[np.asarray(idx)]
-        return labels, scores
+        shard_scores, shard_gids = [], []
+        for s in range(self.n_shards):
+            n_s = len(self._shard_ids[s])
+            if n_s == 0:
+                continue
+            ks = min(k, n_s)
+            scores, idx = self._match_shard(s, q, ks, dtype)
+            shard_scores.append(np.asarray(scores))
+            shard_gids.append(self._shard_ids[s][np.asarray(idx)])
+        all_s = np.concatenate(shard_scores, axis=1)       # (Q, sum ks)
+        all_g = np.concatenate(shard_gids, axis=1)
+        if len(shard_scores) > 1:                          # top-k merge
+            top = np.argsort(-all_s, axis=1, kind="stable")[:, :k]
+            all_s = np.take_along_axis(all_s, top, axis=1)
+            all_g = np.take_along_axis(all_g, top, axis=1)
+        labels = np.asarray(self._labels, object)[all_g]
+        return labels, jnp.asarray(all_s)
+
+    # -- topology ----------------------------------------------------------------
+    def reshard(self, n_shards: int):
+        """Re-split the gallery across ``n_shards`` shards (mirror the lane
+        group gaining/losing a replica cartridge)."""
+        if n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
+        if self._n == 0:
+            self._shards = [None] * n_shards
+            self._shard_ids = [np.empty((0,), np.int64)
+                               for _ in range(n_shards)]
+            self._prep = [{} for _ in range(n_shards)]
+            return
+        full = np.asarray(self.protected_gallery())
+        gids = np.arange(self._n, dtype=np.int64)
+        self._shards = [None] * n_shards
+        self._shard_ids = [np.empty((0,), np.int64) for _ in range(n_shards)]
+        self._prep = [{} for _ in range(n_shards)]
+        for s, rows in enumerate(np.array_split(gids, n_shards)):
+            if len(rows):
+                self._append_to_shard(s, full[rows], rows)
 
     # -- revocation --------------------------------------------------------------
     def rekey(self, new_seed: int):
         """Cancellable biometrics: re-protect the gallery under a new key."""
-        g = np.asarray(self.protected_gallery())
-        raw = np.asarray(self.rotation.unprotect(jnp.asarray(g)))
+        assert self._n > 0, "empty gallery"
+        raws = []
+        for s in range(self.n_shards):
+            if len(self._shard_ids[s]):
+                g = decrypt_array(self._cipher_key, self._shards[s])
+                raws.append(np.asarray(
+                    self.rotation.unprotect(jnp.asarray(g))))
+            else:
+                raws.append(None)
         self.rotation = KeyedRotation(self.dim, new_seed)
         self._cipher_key = jax.random.PRNGKey(new_seed ^ 0x5EC2E7)
-        prot = np.asarray(self.rotation.protect(jnp.asarray(raw)))
-        self._enc_templates = encrypt_array(self._cipher_key,
+        for s, raw in enumerate(raws):
+            if raw is None:
+                continue
+            prot = np.asarray(self.rotation.protect(jnp.asarray(raw)))
+            self._shards[s] = encrypt_array(self._cipher_key,
                                             prot.astype(np.float32))
+            self._prep[s] = {}

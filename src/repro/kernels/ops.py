@@ -13,7 +13,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.gallery_match import gallery_match_pallas
+from repro.kernels.gallery_match import (gallery_match_pallas,
+                                         gallery_match_quant_pallas,
+                                         quantize_gallery)
 from repro.kernels.mamba2_ssd import mamba2_ssd_pallas
 
 
@@ -24,12 +26,38 @@ def _on_cpu() -> bool:
 @functools.partial(jax.jit, static_argnames=("k",))
 def gallery_match(q, g, *, k: int = 5):
     """Cosine top-k of queries (Q,D) against gallery (N,D): normalizes,
-    then runs the blocked Pallas matcher."""
+    then runs the blocked Pallas matcher.  This is the fp32 parity-oracle
+    path and keeps the original (pre-fast-path) bn=512 block schedule."""
     qn = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-9)
     gn = g / jnp.maximum(jnp.linalg.norm(g, axis=-1, keepdims=True), 1e-9)
     return gallery_match_pallas(qn.astype(jnp.float32),
-                                gn.astype(jnp.float32), k=k,
+                                gn.astype(jnp.float32), k=k, bn=512,
                                 interpret=_on_cpu())
+
+
+# -- identification fast path -------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("k", "bq", "bn"))
+def gallery_match_fused(q, gn, *, k: int = 5, bq: int = 256, bn=None):
+    """Fast path vs a *pre-normalized* gallery (f32 or bf16 storage):
+    query L2 normalization is fused into the kernel, so raw queries go
+    straight in without a separate normalization op."""
+    return gallery_match_pallas(q, gn, k=k, bq=bq, bn=bn, fuse_norm=True,
+                                interpret=_on_cpu())
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bq", "bn"))
+def gallery_match_quant(q, g_q, g_scale, *, k: int = 5, bq: int = 256,
+                        bn=None):
+    """int8 fast path vs a pre-normalized, per-row-quantized gallery
+    (``quantize_gallery``); fused query normalization, fp32 accumulation."""
+    return gallery_match_quant_pallas(q, g_q, g_scale, k=k, bq=bq, bn=bn,
+                                      fuse_norm=True, interpret=_on_cpu())
+
+
+@jax.jit
+def prepare_gallery_quant(gn):
+    """Enrollment-time int8 preparation of a normalized gallery."""
+    return quantize_gallery(gn)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window"))

@@ -6,10 +6,25 @@ import jax.numpy as jnp
 
 
 def gallery_match_ref(q, g, *, k: int = 5):
-    """q: (Q, D), g: (N, D) — cosine top-k by full matmul + top_k."""
+    """q: (Q, D), g: (N, D) — cosine top-k by full matmul + top_k.
+
+    Mirrors the Pallas kernel's ``k > N`` contract: k is clamped to the
+    gallery size and the trailing columns hold sentinels (-3e38, -1).
+    """
     s = q.astype(jnp.float32) @ g.astype(jnp.float32).T
-    scores, idx = jax.lax.top_k(s, k)
+    k_eff = max(1, min(k, g.shape[0]))
+    scores, idx = jax.lax.top_k(s, k_eff)
+    if k_eff < k:
+        scores = jnp.pad(scores, ((0, 0), (0, k - k_eff)),
+                         constant_values=-3.0e38)
+        idx = jnp.pad(idx, ((0, 0), (0, k - k_eff)), constant_values=-1)
     return scores, idx.astype(jnp.int32)
+
+
+def gallery_match_quant_ref(q, g_q, g_scale, *, k: int = 5):
+    """int8-path oracle: match against the dequantized gallery in f32."""
+    g = g_q.astype(jnp.float32) * g_scale[:, None].astype(jnp.float32)
+    return gallery_match_ref(q, g, k=k)
 
 
 def flash_attention_ref(q, k, v, *, causal=True, scale=None, window=0):

@@ -93,7 +93,13 @@ def make_embedder(key):
 
 
 class WatchlistCartridge(Cartridge):
-    """Database cartridge: encrypted gallery + in-protected-space match."""
+    """Database cartridge: encrypted gallery + in-protected-space match.
+
+    A *batched match stage*: when the engine drains a micro-batch of
+    queued embedding frames, ``process_batch`` coalesces them into one
+    ``SecureGallery.match`` call — a single gallery-match kernel dispatch
+    per engine service cycle instead of one per frame.
+    """
 
     capability_id = 9
     name = "watchlist_db"
@@ -103,15 +109,32 @@ class WatchlistCartridge(Cartridge):
     def __init__(self, gallery: SecureGallery):
         super().__init__(device=DeviceModel(service_s=0.010, load_s=0.8))
         self.gallery = gallery
+        self.stats["match_calls"] = 0
 
     def fn(self, params, emb):
         return emb  # jit side is identity; match below (host-side store)
 
     def process(self, m):
-        labels, scores = self.gallery.match(np.asarray(m.payload)[None], k=1)
-        out = {"label": labels[0, 0], "score": float(np.asarray(scores)[0, 0])}
-        self.stats["processed"] += 1
-        return m.with_payload(out, msg.MATCH_RESULT)
+        return self.process_batch([m])[0]
+
+    def process_batch(self, ms):
+        live = [m for m in ms if m.payload is not None]
+        if not live:
+            return ms
+        q = np.stack([np.asarray(m.payload) for m in live])   # (B, D)
+        labels, scores = self.gallery.match(q, k=1)           # one kernel call
+        self.stats["match_calls"] += 1
+        self.stats["processed"] += len(live)
+        results = iter(zip(labels[:, 0], np.asarray(scores)[:, 0]))
+        out = []
+        for m in ms:
+            if m.payload is None:
+                out.append(m)
+            else:
+                lab, sc = next(results)
+                out.append(m.with_payload({"label": lab, "score": float(sc)},
+                                          msg.MATCH_RESULT))
+        return out
 
     def load(self):
         self._loaded = True
@@ -119,7 +142,8 @@ class WatchlistCartridge(Cartridge):
         return 0.0
 
 
-def build_biometric_pipeline(seed=0, with_quality=True):
+def build_biometric_pipeline(seed=0, with_quality=True, n_shards=1,
+                             match_dtype="fp32"):
     key = jax.random.PRNGKey(seed)
     ks = jax.random.split(key, 4)
     reg = CapabilityRegistry()
@@ -127,7 +151,9 @@ def build_biometric_pipeline(seed=0, with_quality=True):
     if with_quality:
         reg.insert(1, make_quality(ks[1]))
     reg.insert(2, make_embedder(ks[2]))
-    gallery = SecureGallery(EMB_DIM, seed=7)
+    # one gallery shard per watchlist replica lane (cartridge scaling)
+    gallery = SecureGallery(EMB_DIM, seed=7, n_shards=n_shards,
+                            match_dtype=match_dtype)
     reg.insert(3, WatchlistCartridge(gallery))
     return reg, gallery
 

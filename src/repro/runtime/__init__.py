@@ -1,5 +1,6 @@
 from repro.runtime.registry import CapabilityRegistry, SlotRecord
 from repro.runtime.engine import StreamEngine, EngineReport, validate_chain
+from repro.runtime.events import HeapEventQueue, ListEventQueue
 from repro.runtime.replication import (build_replicated_engine,
                                        engine_broadcast_fps,
                                        engine_shard_fps,

@@ -42,7 +42,6 @@ assert data flows through reconfigurations unchanged.
 """
 from __future__ import annotations
 
-import heapq
 import itertools
 from collections import deque
 from dataclasses import dataclass, field
@@ -51,6 +50,7 @@ from typing import Any, Callable, List, Optional
 from repro.bus.simulator import BusParams, SharedBus
 from repro.core.cartridge import Cartridge, PassThrough
 from repro.core import messages as msg
+from repro.runtime.events import HeapEventQueue
 from repro.runtime.registry import CapabilityRegistry, SlotRecord
 
 HANDSHAKE_S = 0.35       # detection + addressing + capability handshake
@@ -117,6 +117,7 @@ class _LaneGroup:
         self.slot = rec.slot
         self.mode = rec.mode
         self.lanes: List[_Lane] = []
+        self.lane_ids: set = set()         # id(lane) index for O(1) lookup
         self.queue_cap = queue_cap
         self.bqueue: deque = deque()       # broadcast: group-level queue
         self.bbusy = False
@@ -146,7 +147,7 @@ class StreamEngine:
 
     def __init__(self, registry: CapabilityRegistry, bus: SharedBus,
                  *, queue_cap: int = 8, execute_payloads: bool = False,
-                 microbatch: bool = True):
+                 microbatch: bool = True, event_queue=None):
         self.registry = registry
         self.bus = bus
         self.queue_cap = queue_cap
@@ -157,10 +158,14 @@ class StreamEngine:
         self.halted_since: Optional[float] = None   # missing capability
         self._in_swap = False
         self.report = EngineReport()
-        self._events: list = []
-        self._eseq = itertools.count()
+        # O(log n) event core; benchmarks inject events.ListEventQueue to
+        # measure the linear-scan baseline on the same workload
+        self._events = event_queue if event_queue is not None \
+            else HeapEventQueue()
         self._groups: List[_LaneGroup] = []
+        self._live_groups: set = set()       # id(group) of current groups
         self._group_by_slot: dict = {}       # slot -> _LaneGroup
+        self._slot_index: dict = {}          # slot -> chain position
         self._lane_by_cart: dict = {}        # id(cart) -> _Lane (live lanes)
         self._retired_stats: dict = {}       # name -> StageStats (unplugged)
         self._hold_buffer: deque = deque()   # frames buffered during pauses
@@ -196,6 +201,7 @@ class StreamEngine:
                 lane.slot = rec.slot
                 g.lanes.append(lane)
                 kept_lanes.add(id(lane))
+            g.lane_ids = {id(l) for l in g.lanes}
             self._groups.append(g)
         # rescue queued/held frames of lanes and groups that left the chain.
         # A held batch has already been serviced: when the lane's slot
@@ -223,6 +229,9 @@ class StreamEngine:
                 self._retired_stats[lane.cart.name] = lane.stats
                 del self._lane_by_cart[key]
         self._group_by_slot = {g.slot: g for g in self._groups}
+        self._live_groups = {id(g) for g in self._groups}
+        # records() is slot-sorted, so position == sorted-slot index
+        self._slot_index = {g.slot: i for i, g in enumerate(self._groups)}
 
     def _rescue_lane(self, lane: _Lane, pos: int, held_off: int = 0):
         for m in lane.queue:
@@ -241,7 +250,7 @@ class StreamEngine:
 
     def _group_of_lane(self, lane: _Lane) -> Optional[_LaneGroup]:
         g = self._group_by_slot.get(lane.slot)
-        if g is not None and lane in g.lanes:
+        if g is not None and id(lane) in g.lane_ids:
             return g
         return None
 
@@ -250,11 +259,11 @@ class StreamEngine:
 
     # -- event queue ----------------------------------------------------------
     def _push_event(self, t: float, fn: Callable, *args):
-        heapq.heappush(self._events, (t, next(self._eseq), fn, args))
+        self._events.push(t, fn, args)
 
     def run(self, until: float) -> EngineReport:
-        while self._events and self._events[0][0] <= until:
-            t, _, fn, args = heapq.heappop(self._events)
+        while len(self._events) and self._events.peek_time() <= until:
+            t, _, fn, args = self._events.pop()
             self.now = max(self.now, t)
             fn(*args)
         # sim_time = when work actually finished (not the horizon)
@@ -315,9 +324,8 @@ class StreamEngine:
         """Where an already-serviced message of a vanished lane/group goes:
         past its slot's current position if the slot still exists, else the
         old position (which the downstream neighbor shifted into)."""
-        slots = sorted(self.registry.slots)
-        if slot in slots:
-            return slots.index(slot) + 1
+        if slot in self._slot_index:
+            return self._slot_index[slot] + 1
         return pos
 
     def _reinject(self, pos: int, m: msg.Message):
@@ -352,8 +360,9 @@ class StreamEngine:
         dev = lane.cart.device
         svc = dev.service_s * (1.0 + (b - 1) * dev.batch_marginal)
         if self.execute_payloads:
-            batch = [lane.cart.process(m) if m.payload is not None else m
-                     for m in batch]
+            # one dispatch per micro-batch: match-type stages coalesce the
+            # whole batch into a single kernel call (Cartridge.process_batch)
+            batch = lane.cart.process_batch(batch)
         lane.stats.busy_s += svc
         lane.stats.batches += 1
         lane.stats.max_batch = max(lane.stats.max_batch, b)
@@ -377,8 +386,7 @@ class StreamEngine:
             for m in batch:
                 self._reinject(tgt, m)
             return
-        idx = self._groups.index(g)
-        nxt = idx + 1
+        nxt = g.pos + 1
         if nxt < len(self._groups) and \
                 self._groups[nxt].free_capacity() < len(batch):
             # downstream full: hold (upstream throttles automatically since
@@ -408,14 +416,13 @@ class StreamEngine:
             for m in batch:
                 self._complete(m)
             return
-        if nxt_group not in self._groups:
+        if id(nxt_group) not in self._live_groups:
             # target vanished between transfer start and arrival
             for m in batch:
                 self._reinject(nxt_group.pos, m)
             return
-        idx = self._groups.index(nxt_group)
         for m in batch:
-            self._enqueue(idx, m)
+            self._enqueue(nxt_group.pos, m)
 
     def _complete(self, m: msg.Message):
         self.report.frames_out += 1
@@ -423,7 +430,7 @@ class StreamEngine:
 
     # -- broadcast lanes (paper §4.1, Table 1) --------------------------------
     def _try_start_broadcast(self, g: _LaneGroup):
-        if g not in self._groups or self.halted_since is not None:
+        if id(g) not in self._live_groups or self.halted_since is not None:
             return
         if g.bbusy or g.bheld is not None or not g.bqueue:
             return
@@ -457,11 +464,10 @@ class StreamEngine:
         self._broadcast_handoff(g, m)
 
     def _broadcast_handoff(self, g: _LaneGroup, m: msg.Message):
-        if g not in self._groups:
+        if id(g) not in self._live_groups:
             self._reinject(self._serviced_orphan_target(g.slot, g.pos), m)
             return
-        idx = self._groups.index(g)
-        nxt = idx + 1
+        nxt = g.pos + 1
         if nxt >= len(self._groups):
             # broadcast results (a few score bytes per replica) are fetched
             # during the NEXT frame's compute window — the §4.1 FPS
@@ -527,7 +533,7 @@ class StreamEngine:
         rec = self.registry.slots.get(slot)
         if rec is None:
             return
-        idx = sorted(self.registry.slots).index(slot)
+        idx = self._slot_index[slot]
         chain = self.registry.chain()
         up = chain[idx - 1] if idx > 0 else None
         down = chain[idx + 1] if idx + 1 < len(chain) else None

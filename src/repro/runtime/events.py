@@ -1,0 +1,81 @@
+"""Event queues for the StreamEngine's discrete-event core.
+
+The engine's hot loop is push/pop of timestamped events; with lane groups
+and micro-batch retries a large scenario keeps tens of thousands of events
+queued, so the pop discipline dominates simulated events/sec.
+
+``HeapEventQueue`` — the engine core: O(log n) push/pop via ``heapq``,
+with a monotonically increasing sequence number so events at equal
+timestamps pop in FIFO order (deterministic replay).  The engine has
+always popped from a heap; this module makes the queue a first-class,
+injectable component.
+
+``ListEventQueue`` — a reference implementation of the naive O(n)
+linear-scan-for-minimum discipline.  It never shipped as the engine
+core; it exists so ``benchmarks/gallery_bench.py`` can quantify, on the
+identical workload, what the heap core buys (``BENCH_engine.json``
+tracks the heap-vs-list events/sec ratio, so a future regression of the
+engine's event discipline is visible against a fixed yardstick).  Pop
+order is identical to the heap queue (min timestamp, FIFO on ties),
+only the asymptotics differ — do not use it outside benchmarks.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Any, Callable, Tuple
+
+Event = Tuple[float, int, Callable, tuple]
+
+
+class HeapEventQueue:
+    """Binary-heap priority queue: O(log n) push/pop, FIFO on time ties."""
+
+    def __init__(self):
+        self._heap: list = []
+        self._seq = itertools.count()
+        self.pushed = 0
+        self.popped = 0
+
+    def push(self, t: float, fn: Callable, args: tuple):
+        heapq.heappush(self._heap, (t, next(self._seq), fn, args))
+        self.pushed += 1
+
+    def pop(self) -> Event:
+        self.popped += 1
+        return heapq.heappop(self._heap)
+
+    def peek_time(self) -> float:
+        return self._heap[0][0]
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+
+class ListEventQueue:
+    """The linear-scan baseline: append on push, scan for the minimum on
+    pop (and on peek).  Same pop order as ``HeapEventQueue``; O(n) per
+    event instead of O(log n)."""
+
+    def __init__(self):
+        self._q: list = []
+        self._seq = itertools.count()
+        self.pushed = 0
+        self.popped = 0
+
+    def push(self, t: float, fn: Callable, args: tuple):
+        self._q.append((t, next(self._seq), fn, args))
+        self.pushed += 1
+
+    def pop(self) -> Event:
+        # seq numbers are unique, so tuple comparison never reaches fn
+        ev = min(self._q)
+        self._q.remove(ev)
+        self.popped += 1
+        return ev
+
+    def peek_time(self) -> float:
+        return min(self._q)[0]
+
+    def __len__(self) -> int:
+        return len(self._q)

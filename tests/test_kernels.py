@@ -20,6 +20,9 @@ from repro.kernels.mamba2_ssd import mamba2_ssd_pallas
     (37, 1000, 128, 5),
     (128, 2048, 256, 10),
     (5, 513, 64, 8),       # non-multiple gallery vs block
+    (3, 2, 16, 5),         # k > N: sentinel tail (NEG, -1)
+    (2, 600, 32, 5),       # Q < 8 with a multi-block gallery
+    (6, 127, 64, 8),       # tail-padding block just under bn
 ])
 def test_gallery_match_matches_ref(Q, N, D, k):
     kq = jax.random.PRNGKey(Q * 1000 + N)
