@@ -14,8 +14,8 @@ import json
 import time
 
 from benchmarks import (bus_scaling, gallery_bench, hotswap,
-                        pipeline_latency, power_model, roofline_report,
-                        secure_match)
+                        latency_bench, pipeline_latency, power_model,
+                        roofline_report, secure_match)
 
 BENCHES = [
     ("table1_bus_scaling", bus_scaling.run, "pass_pm1fps"),
@@ -24,6 +24,7 @@ BENCHES = [
     ("s4_3_power_model", power_model.run, "in_band"),
     ("s3_encrypted_matching", secure_match.run, "identical_all"),
     ("identification_fastpath", gallery_bench.run, "pass_fastpath"),
+    ("tail_latency_fastpath", latency_bench.run, "pass_tail"),
     ("roofline_report", roofline_report.run, None),
 ]
 

@@ -68,6 +68,8 @@ class SharedBus:
         self.arbitration_s_total = 0.0
         self.wire_s = 0.0
         self.max_endpoints = 0
+        self.suppressed_transfers = 0
+        self.suppressed_bytes = 0
 
     def transfer(self, t_req: float, nbytes: int, n_endpoints: int = 1) -> float:
         """Schedule a transfer requested at ``t_req``; returns completion."""
@@ -85,6 +87,14 @@ class SharedBus:
         self.max_endpoints = max(self.max_endpoints, n_endpoints)
         return self.free_at
 
+    def suppress(self, nbytes: int):
+        """Account a handoff that was *not* performed: a hedged duplicate
+        lost the race after being serviced, so its result never crosses the
+        bus.  Suppression is what makes hedging cheap on a shared medium —
+        these counters quantify the bus time the cancellation saved."""
+        self.suppressed_transfers += 1
+        self.suppressed_bytes += nbytes
+
     def stats(self) -> dict:
         """Contention breakdown of everything moved so far."""
         return {
@@ -95,6 +105,8 @@ class SharedBus:
             "arbitration_s": round(self.arbitration_s_total, 6),
             "wire_s": round(self.wire_s, 6),
             "max_endpoints": self.max_endpoints,
+            "suppressed_transfers": self.suppressed_transfers,
+            "suppressed_bytes": self.suppressed_bytes,
         }
 
 

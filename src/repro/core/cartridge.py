@@ -36,6 +36,14 @@ class DeviceModel:
     # back-to-back, so per-frame dispatch overhead amortizes).  1.0 = no
     # batching benefit.
     batch_marginal: float = 0.7
+    # Heavy-tail service jitter: with probability ``jitter_p`` a service
+    # cycle stalls to ``jitter_mult x`` its nominal time (USB re-enumeration
+    # hiccups, on-stick thermal throttling — the stragglers that hedged
+    # dispatch exists to absorb).  The draw is a deterministic hash of
+    # (lane, frame seq), so simulations stay replayable.  Defaults off:
+    # calibrated Table 1 devices are jitter-free.
+    jitter_p: float = 0.0
+    jitter_mult: float = 10.0
 
 
 class Cartridge:
@@ -84,16 +92,24 @@ class Cartridge:
     # -- replication ---------------------------------------------------------
     _replica_seq = itertools.count(1)
 
-    def clone(self, name: Optional[str] = None) -> "Cartridge":
+    def clone(self, name: Optional[str] = None,
+              device: Optional[DeviceModel] = None) -> "Cartridge":
         """A replica of this cartridge on another physical device.
 
-        Shares the (immutable) params, compiled fn and device model — the
-        same bitstream flashed onto a second stick — but carries its own
-        identity and runtime stats so the scheduler can track per-lane load.
+        Shares the (immutable) params and compiled fn — the same bitstream
+        flashed onto a second stick — but carries its own identity and
+        runtime stats so the scheduler can track per-lane load.  Pass
+        ``device`` to flash it onto a *different* accelerator type
+        (heterogeneous lane group: e.g. an NCS2 primary with Coral
+        replicas); the contract stays identical, only the calibrated
+        service model changes, and the engine's weighted dispatcher uses
+        it as each lane's seed estimate.
         """
         rep = copy.copy(self)
         rep.stats = {"processed": 0, "busy_s": 0.0}
         rep.name = name or f"{self.name}#r{next(Cartridge._replica_seq)}"
+        if device is not None:
+            rep.device = device
         return rep
 
     # -- compute ------------------------------------------------------------

@@ -1,10 +1,12 @@
 from repro.runtime.registry import CapabilityRegistry, SlotRecord
 from repro.runtime.engine import StreamEngine, EngineReport, validate_chain
 from repro.runtime.events import HeapEventQueue, ListEventQueue
-from repro.runtime.replication import (build_replicated_engine,
+from repro.runtime.metrics import StreamingHistogram
+from repro.runtime.replication import (build_mixed_engine,
+                                       build_replicated_engine,
                                        engine_broadcast_fps,
                                        engine_shard_fps,
                                        make_inference_cartridge,
                                        run_replicated)
-from repro.runtime.health import HealthMonitor
+from repro.runtime.health import HealthMonitor, quantile
 from repro.runtime.elastic import ElasticController, largest_mesh

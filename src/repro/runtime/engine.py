@@ -36,13 +36,44 @@ except in broadcast mode, where the per-replica result fetch (a few score
 bytes) overlaps the next frame's compute window, matching how §4.1
 measures pure inference FPS.
 
+Tail-latency fast path.  Field biometrics is latency-bound: the operator
+waits on the *slowest* frame.  Three mechanisms keep the dispatch hot
+path tail-aware:
+
+  * Heterogeneous lane groups — a slot may mix accelerator types
+    (ncs2 + coral replicas).  ``dispatch="ewma"`` (the default) picks the
+    lane minimizing estimated completion time ``(backlog + 1) * est_s``,
+    where ``est_s`` is a per-lane EWMA of observed service time seeded
+    from the replica's ``DeviceModel`` and updated on every
+    ``_lane_done`` — a slow stick carries proportionally less load
+    instead of gating the group.  ``dispatch="naive"`` keeps the PR 2
+    queue-depth-only discipline as the measurable baseline.
+  * Hedged dispatch (``hedge=True``, shard mode) — when a lane has not
+    finished a service cycle by an adaptive deadline (a quantile of its
+    own observed service distribution), the cycle's frames are
+    speculatively re-enqueued on the best alternate lane.  First
+    completion wins; the loser's queued copy is cancelled, an in-service
+    loser finishes but its bus handoff is *suppressed*
+    (``SharedBus.suppress``), and delivery stays exactly-once.  This is
+    the event-driven face of ``runtime.health``'s tied-request machinery:
+    lane service start/finish and every hedge flow through a
+    ``HealthMonitor`` so one straggler ledger covers both paths.
+  * Streaming latency histograms — ``EngineReport`` records end-to-end
+    and per-stage latency into O(1)-per-sample log-spaced histograms
+    (``runtime.metrics``), so p50/p95/p99 come free without the hot loop
+    retaining or sorting per-frame samples.
+
 Timing is virtual (deterministic, calibrated DeviceModels); payload compute
 is optionally real JAX (``execute_payloads=True``) so correctness tests can
-assert data flows through reconfigurations unchanged.
+assert data flows through reconfigurations unchanged.  Service-time jitter
+(``DeviceModel.jitter_p``) is drawn from a hash of (lane, seq), keeping
+straggler scenarios replayable.
 """
 from __future__ import annotations
 
+import dataclasses
 import itertools
+import zlib
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, List, Optional
@@ -51,10 +82,14 @@ from repro.bus.simulator import BusParams, SharedBus
 from repro.core.cartridge import Cartridge, PassThrough
 from repro.core import messages as msg
 from repro.runtime.events import HeapEventQueue
+from repro.runtime.health import HealthMonitor
+from repro.runtime.metrics import StreamingHistogram
 from repro.runtime.registry import CapabilityRegistry, SlotRecord
 
 HANDSHAKE_S = 0.35       # detection + addressing + capability handshake
 REMOVE_PAUSE_S = 0.5     # paper §4.2: ~0.5 s reconfiguration on removal
+
+DISPATCH_DISCIPLINES = ("ewma", "naive")
 
 
 @dataclass
@@ -66,10 +101,17 @@ class StageStats:
     max_batch: int = 0
 
 
+def _hedge_counters() -> dict:
+    return {"issued": 0, "won_by_backup": 0, "wasted": 0,
+            "cancelled_queued": 0, "migrated": 0}
+
+
 @dataclass
 class EngineReport:
     frames_in: int = 0
     frames_out: int = 0
+    # per-frame samples, kept for debugging and exact-equality assertions
+    # (tests, serve.py); all aggregate stats come from latency_hist
     latencies: list = field(default_factory=list)
     downtime: list = field(default_factory=list)  # (t0, t1, reason)
     alerts: list = field(default_factory=list)
@@ -79,17 +121,43 @@ class EngineReport:
     bus: dict = field(default_factory=dict)           # SharedBus.stats()
     bus_bytes: int = 0
     sim_time: float = 0.0
+    # streaming latency accounting: O(1) per completed frame / stage visit
+    latency_hist: StreamingHistogram = field(default_factory=StreamingHistogram)
+    stage_hist: dict = field(default_factory=dict)    # stage name -> histogram
+    hedges: dict = field(default_factory=_hedge_counters)
 
     @property
     def lost(self) -> int:
         return self.frames_in - self.frames_out
 
     def throughput(self) -> float:
-        return self.frames_out / self.sim_time if self.sim_time else 0.0
+        # zero-completion safe: an idle/empty run reports 0.0, not a crash
+        if not self.frames_out or self.sim_time <= 0.0:
+            return 0.0
+        return self.frames_out / self.sim_time
 
     def mean_latency(self) -> float:
-        return sum(self.latencies) / len(self.latencies) if self.latencies \
-            else 0.0
+        # exact: the histogram keeps a running total/count (not binned),
+        # so this is O(1) and zero-completion safe
+        return self.latency_hist.mean()
+
+    def p50(self) -> float:
+        return self.latency_hist.p50()
+
+    def p95(self) -> float:
+        return self.latency_hist.p95()
+
+    def p99(self) -> float:
+        return self.latency_hist.p99()
+
+    def latency_summary(self) -> dict:
+        """End-to-end + per-stage latency percentiles (hedge-aware: only
+        winning copies ever reach the end-to-end histogram)."""
+        return {
+            "end_to_end": self.latency_hist.summary(),
+            "stages": {k: h.summary() for k, h in self.stage_hist.items()},
+            "hedges": dict(self.hedges),
+        }
 
     def total_downtime(self) -> float:
         return sum(t1 - t0 for t0, t1, _ in self.downtime)
@@ -108,6 +176,41 @@ class _Lane:
         self.stats = StageStats()
         self.pos = 0                       # last known chain position
         self.slot = -1                     # last known capability slot
+        # per-lane service-time model: EWMA point estimate (seeded from the
+        # calibrated DeviceModel) + streaming distribution for the hedge
+        # deadline quantile.  Both are per batch-normalized frame cost.
+        self.est_s = cart.device.service_s
+        self.svc_hist = StreamingHistogram(lo=1e-7, hi=1e4)
+
+    def observe(self, svc_norm: float, alpha: float):
+        """Online service-time update on every completed service cycle."""
+        self.est_s += alpha * (svc_norm - self.est_s)
+        self.svc_hist.record(svc_norm)
+
+    def backlog(self) -> int:
+        return len(self.queue) + (1 if self.busy else 0) + \
+            (len(self.held) if self.held else 0)
+
+
+class _HedgeTask:
+    """Tracks one hedged message through a lane group: which copies exist,
+    where, and whether the race is decided.  Exactly-once delivery hinges
+    on ``copies`` reaching zero exactly when every live copy has been
+    delivered (winner), cancelled (queued loser), or suppressed
+    (in-service loser)."""
+
+    __slots__ = ("seq", "message", "primary", "backup", "check_handle",
+                 "winner", "copies")
+
+    def __init__(self, seq: int, message: msg.Message, primary: _Lane,
+                 check_handle: Optional[int]):
+        self.seq = seq
+        self.message = message         # as enqueued at this stage (pre-fn)
+        self.primary = primary
+        self.backup: Optional[_Lane] = None
+        self.check_handle = check_handle
+        self.winner: Optional[_Lane] = None
+        self.copies = 1
 
 
 class _LaneGroup:
@@ -133,12 +236,27 @@ class _LaneGroup:
             return max(self.queue_cap - len(self.bqueue), 0)
         return sum(max(self.queue_cap - len(l.queue), 0) for l in self.lanes)
 
-    def pick_lane(self, now: float) -> Optional[_Lane]:
-        """Least-loaded dispatch; prefer lanes past their handshake gate."""
-        if not self.lanes:
+    def pick_lane(self, now: float, weighted: bool = True,
+                  exclude: Optional[_Lane] = None) -> Optional[_Lane]:
+        """Dispatch choice; prefers lanes past their handshake gate.
+
+        ``weighted`` (the default) minimizes estimated completion time of
+        one more frame, ``(backlog + 1) * est_s`` — with heterogeneous or
+        drifting replicas the slow stick only wins when the fast lanes'
+        queues outweigh its service-time handicap.  For equal ``est_s``
+        the ordering degenerates to plain least-loaded, so homogeneous
+        groups behave exactly like the unweighted discipline.
+        ``weighted=False`` is the queue-depth-only baseline.  ``exclude``
+        lets the hedge path pick the best *alternate* lane.
+        """
+        lanes = self.lanes if exclude is None else \
+            [l for l in self.lanes if l is not exclude]
+        if not lanes:
             return None
-        ready = [l for l in self.lanes if l.ready_at <= now]
-        pool = ready or self.lanes
+        ready = [l for l in lanes if l.ready_at <= now]
+        pool = ready or lanes
+        if weighted:
+            return min(pool, key=lambda l: (l.backlog() + 1) * l.est_s)
         return min(pool, key=lambda l: (len(l.queue) + (1 if l.busy else 0)))
 
 
@@ -147,12 +265,27 @@ class StreamEngine:
 
     def __init__(self, registry: CapabilityRegistry, bus: SharedBus,
                  *, queue_cap: int = 8, execute_payloads: bool = False,
-                 microbatch: bool = True, event_queue=None):
+                 microbatch: bool = True, event_queue=None,
+                 dispatch: str = "ewma", hedge: bool = False,
+                 hedge_quantile: float = 0.95, hedge_min_obs: int = 8,
+                 hedge_margin: float = 1.25, ewma_alpha: float = 0.25):
+        if dispatch not in DISPATCH_DISCIPLINES:
+            raise ValueError(f"unknown dispatch discipline {dispatch!r}")
         self.registry = registry
         self.bus = bus
         self.queue_cap = queue_cap
         self.execute_payloads = execute_payloads
         self.microbatch = microbatch
+        self.dispatch = dispatch
+        self.hedge = hedge
+        self.hedge_quantile = hedge_quantile
+        self.hedge_min_obs = hedge_min_obs
+        self.hedge_margin = hedge_margin
+        self.ewma_alpha = ewma_alpha
+        # the tied-request ledger shared with the polled datacenter path:
+        # lane service start/finish + every hedge land here, and its
+        # straggler_factor doubles as the cold-start hedge deadline factor
+        self.health = HealthMonitor()
         self.now = 0.0
         self.paused_until = 0.0
         self.halted_since: Optional[float] = None   # missing capability
@@ -169,6 +302,7 @@ class StreamEngine:
         self._lane_by_cart: dict = {}        # id(cart) -> _Lane (live lanes)
         self._retired_stats: dict = {}       # name -> StageStats (unplugged)
         self._hold_buffer: deque = deque()   # frames buffered during pauses
+        self._hedges: dict = {}              # (slot, seq) -> _HedgeTask
         self._frame_seq = itertools.count()
         registry.subscribe(self._on_registry_event)
         self._rebuild()
@@ -235,6 +369,18 @@ class StreamEngine:
 
     def _rescue_lane(self, lane: _Lane, pos: int, held_off: int = 0):
         for m in lane.queue:
+            task = self._hedges.get((lane.slot, m.seq))
+            if task is not None and m.meta.get("_hedge_copy"):
+                if task.copies > 1:
+                    # a speculative duplicate whose other copy is still
+                    # live: dropping it preserves exactly-once delivery
+                    task.copies -= 1
+                    task.backup = None
+                    self.report.hedges["cancelled_queued"] += 1
+                    continue
+                # defensive: last live copy — promote it to sole owner
+                del self._hedges[(lane.slot, m.seq)]
+                m.meta.pop("_hedge_copy", None)
             self._hold_buffer.append((pos, m))
         lane.queue.clear()
         if lane.held is not None:
@@ -258,8 +404,8 @@ class StreamEngine:
         return self.registry.n_endpoints() or 1
 
     # -- event queue ----------------------------------------------------------
-    def _push_event(self, t: float, fn: Callable, *args):
-        self._events.push(t, fn, args)
+    def _push_event(self, t: float, fn: Callable, *args) -> int:
+        return self._events.push(t, fn, args)
 
     def run(self, until: float) -> EngineReport:
         while len(self._events) and self._events.peek_time() <= until:
@@ -277,6 +423,11 @@ class StreamEngine:
             self.report.groups[g.slot] = {
                 "mode": g.mode,
                 "lanes": [l.cart.name for l in g.lanes],
+                "devices": [l.cart.device.name for l in g.lanes],
+                "est_s": [round(l.est_s, 6) for l in g.lanes],
+                "heterogeneous": len({(l.cart.device.name,
+                                       l.cart.device.service_s)
+                                      for l in g.lanes}) > 1,
                 "processed": sum(l.stats.processed for l in g.lanes),
             }
         return self.report
@@ -309,11 +460,12 @@ class StreamEngine:
             self._complete(m)
             return
         g = self._groups[idx]
+        m.meta["_t_stage"] = self.now      # per-stage latency breakdown
         if g.mode == "broadcast":
             g.bqueue.append(m)
             self._try_start_broadcast(g)
             return
-        lane = g.pick_lane(self.now)
+        lane = g.pick_lane(self.now, weighted=self.dispatch == "ewma")
         if lane is None:
             self._hold_buffer.append((idx, m))
             return
@@ -339,6 +491,20 @@ class StreamEngine:
             return
         self._enqueue(min(pos, len(self._groups)), m)
 
+    def _service_time(self, lane: _Lane, b: int, seq: int):
+        """Batch service time on a lane, with deterministic heavy-tail
+        jitter (stall multiplier drawn from a hash of lane identity and the
+        leading frame's seq).  Returns (svc, batch_factor) so callers can
+        recover the batch-normalized per-cycle cost ``svc / factor``."""
+        dev = lane.cart.device
+        factor = 1.0 + (b - 1) * dev.batch_marginal
+        svc = dev.service_s * factor
+        if dev.jitter_p > 0.0:
+            u = zlib.crc32(f"{lane.cart.name}:{seq}".encode()) / 0xFFFFFFFF
+            if u < dev.jitter_p:
+                svc *= dev.jitter_mult
+        return svc, factor
+
     def _try_start_lane(self, lane: _Lane):
         g = self._group_of_lane(lane)
         if g is None or self.halted_since is not None:
@@ -357,21 +523,168 @@ class StreamEngine:
             b = min(len(lane.queue), self.queue_cap)
         batch = [lane.queue.popleft() for _ in range(b)]
         lane.busy = True
-        dev = lane.cart.device
-        svc = dev.service_s * (1.0 + (b - 1) * dev.batch_marginal)
+        svc, factor = self._service_time(lane, b, batch[0].seq)
+        if self.hedge and g.mode == "shard" and len(g.lanes) > 1:
+            self._arm_hedges(g, lane, batch, factor)
         if self.execute_payloads:
             # one dispatch per micro-batch: match-type stages coalesce the
             # whole batch into a single kernel call (Cartridge.process_batch)
             batch = lane.cart.process_batch(batch)
+        self.health.start_request(lane.cart.name, batch[0].seq, self.now)
         lane.stats.busy_s += svc
         lane.stats.batches += 1
         lane.stats.max_batch = max(lane.stats.max_batch, b)
-        self._push_event(self.now + svc, self._lane_done, lane, batch)
+        self._push_event(self.now + svc, self._lane_done, lane, batch,
+                         svc / factor)
 
-    def _lane_done(self, lane: _Lane, batch: list):
+    # -- hedged dispatch (tied requests over shard lanes) ---------------------
+    def _hedge_deadline(self, lane: _Lane, factor: float) -> float:
+        """Adaptive deadline for one service cycle: a quantile of the
+        lane's own observed (batch-normalized) service distribution, with
+        a margin so a typical cycle never triggers; before enough
+        observations exist, fall back to the health monitor's straggler
+        factor over the EWMA estimate."""
+        h = lane.svc_hist
+        if h.count >= self.hedge_min_obs:
+            base = max(h.quantile(self.hedge_quantile), lane.est_s)
+        else:
+            base = lane.est_s * self.health.straggler_factor
+        return base * factor * self.hedge_margin
+
+    def _arm_hedges(self, g: _LaneGroup, lane: _Lane, batch: list,
+                    factor: float):
+        """Register hedge tasks for every first-copy message entering
+        service, sharing one deadline event per cycle (they finish
+        together, so they stall together)."""
+        fresh = [m for m in batch
+                 if (lane.slot, m.seq) not in self._hedges]
+        if not fresh:
+            return
+        deadline = self._hedge_deadline(lane, factor)
+        handle = self._push_event(self.now + deadline, self._hedge_check,
+                                  g, lane, tuple(m.seq for m in fresh))
+        for m in fresh:
+            self._hedges[(lane.slot, m.seq)] = _HedgeTask(
+                m.seq, m, lane, handle)
+
+    def _hedge_check(self, g: _LaneGroup, lane: _Lane, seqs: tuple):
+        """Deadline fired before the primary finished: speculatively
+        re-enqueue each still-undecided message on the best alternate
+        lane.  First completion wins (``_filter_hedged``).  The stalled
+        lane's *queued* frames haven't started anywhere, so they migrate
+        to healthy lanes outright — rebalancing, not speculation."""
+        if self._group_by_slot.get(g.slot) is not g:
+            return                          # group left the chain mid-wait
+        stalled = False
+        for seq in seqs:
+            task = self._hedges.get((g.slot, seq))
+            if task is None or task.winner is not None \
+                    or task.backup is not None:
+                continue
+            stalled = True
+            alt = g.pick_lane(self.now, weighted=self.dispatch == "ewma",
+                              exclude=task.primary)
+            if alt is None or len(alt.queue) >= self.queue_cap:
+                continue                    # no headroom to speculate into
+            task.check_handle = None
+            task.backup = alt
+            task.copies += 1
+            copy = dataclasses.replace(
+                task.message,
+                meta=dict(task.message.meta, _hedge_copy=True))
+            self.report.hedges["issued"] += 1
+            self.health.record_backup(task.primary.cart.name, self.now, seq)
+            alt.queue.append(copy)
+            self._try_start_lane(alt)
+        if stalled and id(lane) in g.lane_ids:
+            self._migrate_queue(g, lane)
+
+    def _migrate_queue(self, g: _LaneGroup, lane: _Lane):
+        """Move a presumed-stalled lane's unstarted backlog to its peers.
+        Backup copies parked here stay put (their primary is live
+        elsewhere); everything else re-lands on the best alternate lane
+        with headroom."""
+        if not lane.queue:
+            return
+        keep: deque = deque()
+        weighted = self.dispatch == "ewma"
+        for m in lane.queue:
+            if m.meta.get("_hedge_copy"):
+                keep.append(m)
+                continue
+            alt = g.pick_lane(self.now, weighted=weighted, exclude=lane)
+            if alt is None or len(alt.queue) >= self.queue_cap:
+                keep.append(m)
+                continue
+            alt.queue.append(m)
+            self.report.hedges["migrated"] += 1
+            self._try_start_lane(alt)
+        lane.queue = keep
+
+    def _cancel_queued_copy(self, lane: _Lane, seq: int) -> bool:
+        for m in lane.queue:
+            if m.seq == seq and m.meta.get("_hedge_copy"):
+                lane.queue.remove(m)
+                return True
+        return False
+
+    def _filter_hedged(self, lane: _Lane, batch: list) -> list:
+        """Resolve hedge races for a completed service cycle.  Returns the
+        messages this lane may deliver downstream: first copy home wins,
+        every other copy is cancelled (queued) or suppressed (serviced) —
+        delivery is exactly-once by construction."""
+        deliver = []
+        slot = lane.slot
+        for m in batch:
+            task = self._hedges.get((slot, m.seq))
+            if task is None:
+                deliver.append(m)
+                continue
+            if task.winner is None:
+                task.winner = lane
+                if task.check_handle is not None:
+                    self._events.cancel(task.check_handle)
+                    task.check_handle = None
+                if lane is task.backup:
+                    self.report.hedges["won_by_backup"] += 1
+                task.copies -= 1            # the winning copy exits
+                loser = task.primary if lane is task.backup else task.backup
+                if task.copies > 0 and loser is not None and \
+                        self._cancel_queued_copy(loser, m.seq):
+                    task.copies -= 1
+                    self.report.hedges["cancelled_queued"] += 1
+                if task.copies <= 0:
+                    del self._hedges[(slot, m.seq)]
+                m.meta.pop("_hedge_copy", None)
+                deliver.append(m)
+            else:
+                # this copy lost the race after being serviced: its result
+                # never crosses the bus (suppressed handoff)
+                task.copies -= 1
+                if task.copies <= 0:
+                    del self._hedges[(slot, m.seq)]
+                self.report.hedges["wasted"] += 1
+                self.bus.suppress(self._msg_bytes(m))
+        return deliver
+
+    def _lane_done(self, lane: _Lane, batch: list, svc_norm: float = 0.0):
         lane.stats.processed += len(batch)
         lane.busy = False
-        self._handoff(lane, batch)
+        if svc_norm > 0.0:
+            lane.observe(svc_norm, self.ewma_alpha)
+        self.health.finish_request(lane.cart.name, self.now)
+        deliver = self._filter_hedged(lane, batch) if self._hedges else batch
+        if not deliver:                     # whole cycle lost its races
+            self._try_start_lane(lane)
+            return
+        g = self._group_of_lane(lane)
+        name = g.name if g is not None else lane.cart.name
+        hist = self.report.stage_hist.get(name)
+        if hist is None:
+            hist = self.report.stage_hist[name] = StreamingHistogram()
+        for m in deliver:
+            hist.record(self.now - m.meta.get("_t_stage", self.now))
+        self._handoff(lane, deliver)
 
     def _handoff(self, lane: _Lane, batch: list):
         """Bus transfer of a (micro-)batch to the next group, honoring
@@ -426,7 +739,9 @@ class StreamEngine:
 
     def _complete(self, m: msg.Message):
         self.report.frames_out += 1
-        self.report.latencies.append(self.now - m.t_created)
+        lat = self.now - m.t_created
+        self.report.latencies.append(lat)
+        self.report.latency_hist.record(lat)
 
     # -- broadcast lanes (paper §4.1, Table 1) --------------------------------
     def _try_start_broadcast(self, g: _LaneGroup):
@@ -461,6 +776,10 @@ class StreamEngine:
 
     def _broadcast_done(self, g: _LaneGroup, m: msg.Message):
         g.bbusy = False
+        hist = self.report.stage_hist.get(g.name)
+        if hist is None:
+            hist = self.report.stage_hist[g.name] = StreamingHistogram()
+        hist.record(self.now - m.meta.get("_t_stage", self.now))
         self._broadcast_handoff(g, m)
 
     def _broadcast_handoff(self, g: _LaneGroup, m: msg.Message):

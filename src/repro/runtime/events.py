@@ -10,6 +10,13 @@ timestamps pop in FIFO order (deterministic replay).  The engine has
 always popped from a heap; this module makes the queue a first-class,
 injectable component.
 
+Cancellation.  ``push`` returns a handle and ``cancel(handle)`` kills the
+event before it fires — the hedged-dispatch path arms a deadline event
+per service cycle and cancels it when the lane finishes on time, which is
+the common case, so cancellation must be cheap.  The heap uses lazy
+deletion (an O(1) set insert; dead entries are skipped when they surface
+at the heap top), keeping push/pop asymptotics intact.
+
 ``ListEventQueue`` — a reference implementation of the naive O(n)
 linear-scan-for-minimum discipline.  It never shipped as the engine
 core; it exists so ``benchmarks/gallery_bench.py`` can quantify, on the
@@ -29,43 +36,80 @@ Event = Tuple[float, int, Callable, tuple]
 
 
 class HeapEventQueue:
-    """Binary-heap priority queue: O(log n) push/pop, FIFO on time ties."""
+    """Binary-heap priority queue: O(log n) push/pop, FIFO on time ties,
+    O(1) lazy cancellation."""
 
     def __init__(self):
         self._heap: list = []
         self._seq = itertools.count()
+        self._live: set = set()        # handles pushed and not fired/killed
+        self._dead: set = set()        # handles cancelled but not yet popped
         self.pushed = 0
         self.popped = 0
+        self.cancelled = 0
 
-    def push(self, t: float, fn: Callable, args: tuple):
-        heapq.heappush(self._heap, (t, next(self._seq), fn, args))
+    def push(self, t: float, fn: Callable, args: tuple) -> int:
+        handle = next(self._seq)
+        heapq.heappush(self._heap, (t, handle, fn, args))
+        self._live.add(handle)
         self.pushed += 1
+        return handle
+
+    def cancel(self, handle: int) -> bool:
+        """Kill a pending event.  Returns False if it already fired (or was
+        already cancelled) — callers may cancel unconditionally.  O(1):
+        the heap entry dies lazily when it surfaces at the top."""
+        if handle not in self._live:
+            return False
+        self._live.discard(handle)
+        self._dead.add(handle)
+        self.cancelled += 1
+        return True
+
+    def _drop_dead(self):
+        while self._heap and self._heap[0][1] in self._dead:
+            self._dead.discard(heapq.heappop(self._heap)[1])
 
     def pop(self) -> Event:
+        self._drop_dead()
         self.popped += 1
-        return heapq.heappop(self._heap)
+        ev = heapq.heappop(self._heap)
+        self._live.discard(ev[1])
+        return ev
 
     def peek_time(self) -> float:
+        self._drop_dead()
         return self._heap[0][0]
 
     def __len__(self) -> int:
-        return len(self._heap)
+        return len(self._heap) - len(self._dead)
 
 
 class ListEventQueue:
     """The linear-scan baseline: append on push, scan for the minimum on
-    pop (and on peek).  Same pop order as ``HeapEventQueue``; O(n) per
-    event instead of O(log n)."""
+    pop (and on peek).  Same pop order + cancellation semantics as
+    ``HeapEventQueue``; O(n) per event instead of O(log n)."""
 
     def __init__(self):
         self._q: list = []
         self._seq = itertools.count()
         self.pushed = 0
         self.popped = 0
+        self.cancelled = 0
 
-    def push(self, t: float, fn: Callable, args: tuple):
-        self._q.append((t, next(self._seq), fn, args))
+    def push(self, t: float, fn: Callable, args: tuple) -> int:
+        handle = next(self._seq)
+        self._q.append((t, handle, fn, args))
         self.pushed += 1
+        return handle
+
+    def cancel(self, handle: int) -> bool:
+        for ev in self._q:
+            if ev[1] == handle:
+                self._q.remove(ev)
+                self.cancelled += 1
+                return True
+        return False
 
     def pop(self) -> Event:
         # seq numbers are unique, so tuple comparison never reaches fn

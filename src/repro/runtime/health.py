@@ -7,6 +7,13 @@ its request *backup-dispatched* to a healthy peer (tied-request / hedged
 execution — the standard tail-latency mitigation), and a worker that
 misses ``dead_after_s`` of heartbeats is declared failed, which triggers
 the same path as a cartridge removal (bypass / re-mesh).
+
+The ``StreamEngine``'s hedged shard dispatch is the event-driven face of
+the same tied-request machinery: the engine feeds every lane service
+start/finish through a ``HealthMonitor`` and reports each hedge through
+``record_backup``, so one straggler ledger (``events``,
+``backup_dispatches``) covers both the polled datacenter path
+(``check``) and the event-driven edge path.
 """
 from __future__ import annotations
 
@@ -14,6 +21,15 @@ import math
 from collections import defaultdict, deque
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
+
+
+def quantile(xs, q: float) -> float:
+    """Nearest-rank quantile of a sequence; +inf when empty (so straggler
+    thresholds derived from it never fire without evidence)."""
+    if not xs:
+        return float("inf")
+    s = sorted(xs)
+    return s[min(int(math.ceil(q * len(s))) - 1, len(s) - 1)]
 
 
 @dataclass
@@ -55,11 +71,16 @@ class HealthMonitor:
         w.done += 1
         w.last_heartbeat = t
 
+    def record_backup(self, worker: str, t: float,
+                      req_id: Optional[int] = None):
+        """Note that ``worker``'s in-flight request was backup-dispatched
+        (tied-request hedge) to a peer.  Shared ledger entry for both the
+        polled ``check`` path and the engine's event-driven hedge path."""
+        self.workers[worker].backup_dispatches += 1
+        self.events.append((t, "straggler", worker))
+
     def _p90(self) -> float:
-        if not self.latencies:
-            return float("inf")
-        xs = sorted(self.latencies)
-        return xs[min(int(math.ceil(0.9 * len(xs))) - 1, len(xs) - 1)]
+        return quantile(self.latencies, 0.9)
 
     def check(self, t: float):
         """Returns (dead_workers, straggler (worker, req_id) pairs)."""
@@ -76,6 +97,5 @@ class HealthMonitor:
             if w.inflight_since is not None and \
                     t - w.inflight_since > thresh:
                 stragglers.append((name, w.inflight_id))
-                w.backup_dispatches += 1
-                self.events.append((t, "straggler", name))
+                self.record_backup(name, t, w.inflight_id)
         return dead, stragglers

@@ -16,6 +16,12 @@ engine dispatches over the replicas:
                       (throughput scaling);
   * ``"broadcast"`` — every frame goes to every replica (Table 1's
                       redundant-inference experiment).
+
+Replicas need not be the same accelerator type: a slot may mix e.g. one
+NCS2 with two Corals (heterogeneous lane group) as long as every replica
+speaks the primary's contract.  The engine's weighted dispatcher reads
+each replica's ``DeviceModel`` as its service-time seed, so a slow stick
+carries proportionally less of the slot's load instead of gating it.
 """
 from __future__ import annotations
 
@@ -39,6 +45,15 @@ class SlotRecord:
     def __post_init__(self):
         if not self.replicas:
             self.replicas = [self.cartridge]
+
+    def devices(self) -> List[str]:
+        """Accelerator type of each replica lane, in lane order."""
+        return [c.device.name for c in self.replicas]
+
+    def heterogeneous(self) -> bool:
+        """True when the slot mixes accelerator types (or calibrations)."""
+        return len({(c.device.name, c.device.service_s)
+                    for c in self.replicas}) > 1
 
 
 def _compatible_replica(primary: Cartridge, cart: Cartridge) -> bool:
@@ -131,6 +146,10 @@ class CapabilityRegistry:
 
     def n_replicas(self, slot: int) -> int:
         return len(self.slots[slot].replicas)
+
+    def slot_devices(self, slot: int) -> List[str]:
+        """Per-lane accelerator types backing a slot (dispatch telemetry)."""
+        return self.slots[slot].devices()
 
     def n_endpoints(self) -> int:
         """Total physical devices on the bus (arbitration contention)."""

@@ -37,25 +37,71 @@ def make_inference_cartridge(params: BusParams, name: str = None,
         device=DeviceModel(name=params.name, service_s=params.t_comp_s))
 
 
+def _device_model(d: Union[str, BusParams, DeviceModel]) -> DeviceModel:
+    """Normalize a device spec: a calibrated name/BusParams becomes a
+    DeviceModel carrying the on-stick inference time; a DeviceModel passes
+    through (the hook for jittered / degraded straggler lanes)."""
+    if isinstance(d, DeviceModel):
+        return d
+    p = _params(d)
+    return DeviceModel(name=p.name, service_s=p.t_comp_s)
+
+
 def build_replicated_engine(device: Union[str, BusParams], n_devices: int,
                             mode: str = "broadcast",
-                            queue_cap: int = 8) -> StreamEngine:
+                            queue_cap: int = 8, **engine_kw) -> StreamEngine:
     """One lane group holding ``n_devices`` replicas of the calibrated
-    inference cartridge, all sharing one calibrated bus."""
+    inference cartridge, all sharing one calibrated bus.  ``engine_kw``
+    passes through to ``StreamEngine`` (dispatch=, hedge=, ...)."""
     p = _params(device)
     reg = CapabilityRegistry()
     primary = make_inference_cartridge(p)
     reg.insert(0, primary, mode=mode)
     for i in range(1, n_devices):
         reg.add_replica(0, primary.clone(f"{primary.name}#r{i}"))
-    return StreamEngine(reg, SharedBus(p), queue_cap=queue_cap)
+    return StreamEngine(reg, SharedBus(p), queue_cap=queue_cap, **engine_kw)
+
+
+def build_mixed_engine(devices: list, mode: str = "shard",
+                       queue_cap: int = 8,
+                       bus: Union[str, BusParams, None] = None,
+                       **engine_kw) -> StreamEngine:
+    """A heterogeneous lane group: one slot whose replicas mix accelerator
+    types (e.g. ``["ncs2", "coral", "coral"]``), or hand-built
+    ``DeviceModel``s for straggler scenarios (slow sticks, jitter).
+
+    All lanes share one bus — calibrated from ``bus`` (default: the first
+    calibrated device in the list, else a generic USB3 hub).  The weighted
+    dispatcher seeds each lane's EWMA from its own DeviceModel, so a
+    mixed group load-balances by service time from the first frame.
+    """
+    if not devices:
+        raise ValueError("need at least one device")
+    devs = [_device_model(d) for d in devices]
+    reg = CapabilityRegistry()
+    spec = msg.MessageSpec(msg.IMAGE_FRAME)
+    primary = FnCartridge(f"{devs[0].name}_infer", lambda p, x: x,
+                          spec, spec, capability_id=7, device=devs[0])
+    reg.insert(0, primary, mode=mode)
+    for i, dv in enumerate(devs[1:], 1):
+        reg.add_replica(0, primary.clone(f"{dv.name}#m{i}", device=dv))
+    if bus is None:
+        cal = next((d for d in devices
+                    if isinstance(d, (str, BusParams))), None)
+        bp = _params(cal) if cal is not None else \
+            BusParams("mixed_hub", base_overhead_s=1e-4, arbitration_s=2e-4)
+    else:
+        bp = _params(bus)
+    return StreamEngine(reg, SharedBus(bp), queue_cap=queue_cap,
+                        **engine_kw)
 
 
 def run_replicated(device: Union[str, BusParams], n_devices: int,
                    mode: str = "broadcast", n_frames: int = 200,
-                   frame_bytes: int = FRAME_BYTES) -> EngineReport:
+                   frame_bytes: int = FRAME_BYTES,
+                   **engine_kw) -> EngineReport:
     """Stream a closed-loop burst through the replicated engine."""
-    eng = build_replicated_engine(device, n_devices, mode=mode)
+    eng = build_replicated_engine(device, n_devices, mode=mode, **engine_kw)
     # interval 0 = frames always available (the experiment is closed-loop:
     # the next frame dispatches as soon as the devices can take it)
     eng.feed(n_frames, interval_s=0.0, frame_bytes=frame_bytes)
@@ -71,6 +117,7 @@ def engine_broadcast_fps(device: Union[str, BusParams], n_devices: int,
 
 
 def engine_shard_fps(device: Union[str, BusParams], n_devices: int,
-                     n_frames: int = 200) -> float:
+                     n_frames: int = 200, **engine_kw) -> float:
     """Aggregate FPS when frames are load-balanced across replicas."""
-    return run_replicated(device, n_devices, "shard", n_frames).throughput()
+    return run_replicated(device, n_devices, "shard", n_frames,
+                          **engine_kw).throughput()

@@ -8,6 +8,12 @@ from repro.crypto import (KeyedRotation, SecureGallery, cosine_scores,
                           decrypt_array, decrypt_bytes, encrypt_array,
                           encrypt_bytes)
 
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # tier-1 must run without hypothesis installed
+    HAVE_HYPOTHESIS = False
+
 
 def test_rotation_preserves_cosine_exactly():
     rot = KeyedRotation(128, seed=3)
@@ -66,6 +72,35 @@ def test_secure_gallery_end_to_end():
     got, scores = store.match(q, k=3)
     assert got[0, 0] == "id17" and got[1, 0] == "id99"
     assert np.all(np.diff(np.asarray(scores), axis=1) <= 1e-6)  # descending
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(data=st.binary(min_size=0, max_size=257),
+           seed=st.integers(0, 2**31 - 1))
+    def test_stream_cipher_roundtrip_property(data, seed):
+        """encrypt/decrypt is the identity for ANY payload: empty, odd
+        (non-multiple-of-4) lengths crossing the uint32 padding path, and
+        every seed."""
+        key = jax.random.PRNGKey(seed)
+        assert decrypt_bytes(key, encrypt_bytes(key, data)) == data
+
+    @settings(max_examples=30, deadline=None)
+    @given(n=st.integers(1, 64), seed=st.integers(0, 2**31 - 2))
+    def test_stream_cipher_rekey_mismatch_property(n, seed):
+        """Decrypting under a rotated key never round-trips (revocation
+        actually revokes) — for any non-empty payload."""
+        data = bytes(range(256))[:n] * 2
+        enc = encrypt_bytes(jax.random.PRNGKey(seed), data)
+        assert decrypt_bytes(jax.random.PRNGKey(seed + 1), enc) != data
+
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.integers(0, 37))
+    def test_stream_cipher_ciphertext_length_is_padded(n):
+        """Blob layout: payload padded to a uint32 boundary + 1 pad byte."""
+        key = jax.random.PRNGKey(0)
+        enc = encrypt_bytes(key, b"z" * n)
+        assert len(enc) == n + ((-n) % 4) + 1
 
 
 def test_gallery_rekey_revokes_but_preserves_matching():

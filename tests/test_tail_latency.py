@@ -1,0 +1,306 @@
+"""Tail-latency fast path: weighted EWMA dispatch over heterogeneous lane
+groups, hedged shard dispatch with exactly-once delivery, cancellable
+events, and the streaming latency histogram."""
+import pytest
+
+from repro.bus import BusParams, SharedBus
+from repro.core import messages as msg
+from repro.core.cartridge import DeviceModel, FnCartridge
+from repro.runtime import (CapabilityRegistry, EngineReport, StreamEngine,
+                           StreamingHistogram, build_mixed_engine)
+from repro.runtime.events import HeapEventQueue, ListEventQueue
+
+SPEC = msg.MessageSpec(msg.IMAGE_FRAME)
+
+FAST = dict(name="coral", service_s=0.02)
+JITTERY = dict(name="coral", service_s=0.02, jitter_p=0.03, jitter_mult=10.0)
+SLOW = dict(name="ncs2_degraded", service_s=0.10,
+            jitter_p=0.05, jitter_mult=10.0)
+
+
+def _cart(name, service_s=0.03, capability_id=7, **dev):
+    return FnCartridge(name, lambda p, x: x, SPEC, SPEC,
+                       capability_id=capability_id,
+                       device=DeviceModel(service_s=service_s, **dev))
+
+
+def _bus():
+    return SharedBus(BusParams("test", bandwidth=400e6,
+                               base_overhead_s=1e-4, arbitration_s=2e-4))
+
+
+def _burst_feed(eng, n_bursts=100, burst=5, period=0.06):
+    for i in range(n_bursts):
+        eng.feed(burst, interval_s=0.0, t0=i * period)
+    return n_bursts * burst
+
+
+def _mixed(dispatch, hedge, devices=(FAST, FAST, SLOW), **kw):
+    eng = build_mixed_engine([DeviceModel(**d) for d in devices],
+                             dispatch=dispatch, hedge=hedge, **kw)
+    n = _burst_feed(eng)
+    rep = eng.run(until=1e9)
+    assert rep.frames_out == n, f"lost {rep.lost}"
+    return rep
+
+
+# -- streaming histogram -------------------------------------------------------
+def test_histogram_quantiles_approximate_sorted_rank():
+    h = StreamingHistogram()
+    xs = [0.001 * (i + 1) for i in range(1000)]
+    for x in xs:
+        h.record(x)
+    assert h.count == 1000
+    assert h.mean() == pytest.approx(sum(xs) / len(xs))
+    for q in (0.5, 0.95, 0.99):
+        exact = xs[int(q * (len(xs) - 1))]
+        assert h.quantile(q) == pytest.approx(exact, rel=0.15)
+    assert h.quantile(1.0) == pytest.approx(max(xs))
+
+
+def test_histogram_single_value_is_exact():
+    h = StreamingHistogram()
+    for _ in range(50):
+        h.record(0.02)
+    for q in (0.0, 0.5, 0.99, 1.0):
+        assert h.quantile(q) == pytest.approx(0.02)
+
+
+def test_histogram_empty_is_zero_not_crash():
+    h = StreamingHistogram()
+    assert h.quantile(0.99) == 0.0
+    assert h.mean() == 0.0
+    assert h.summary()["count"] == 0
+
+
+# -- EngineReport zero-completion guards ---------------------------------------
+def test_report_guards_zero_completions():
+    rep = EngineReport()
+    assert rep.throughput() == 0.0
+    assert rep.mean_latency() == 0.0
+    assert rep.p50() == rep.p95() == rep.p99() == 0.0
+    assert rep.latency_summary()["end_to_end"]["count"] == 0
+    # sim time advanced but nothing completed: still 0.0, not ZeroDivision
+    rep.sim_time = 12.5
+    assert rep.throughput() == 0.0
+
+
+def test_report_guards_engine_with_no_frames():
+    reg = CapabilityRegistry()
+    reg.insert(0, _cart("idle"))
+    eng = StreamEngine(reg, _bus())
+    rep = eng.run(until=10)
+    assert rep.frames_out == 0
+    assert rep.throughput() == 0.0
+    assert rep.mean_latency() == 0.0
+
+
+# -- cancellable events --------------------------------------------------------
+@pytest.mark.parametrize("qcls", [HeapEventQueue, ListEventQueue])
+def test_event_cancellation(qcls):
+    q = qcls()
+    fired = []
+    h1 = q.push(1.0, fired.append, ("a",))
+    h2 = q.push(2.0, fired.append, ("b",))
+    h3 = q.push(3.0, fired.append, ("c",))
+    assert len(q) == 3
+    assert q.cancel(h2) is True
+    assert q.cancel(h2) is False          # double-cancel is a no-op
+    assert len(q) == 2
+    order = []
+    while len(q):
+        t, _, fn, args = q.pop()
+        order.append(args[0])
+    assert order == ["a", "c"]
+    assert q.cancel(h1) is False          # already fired
+    assert q.cancelled == 1
+
+
+@pytest.mark.parametrize("qcls", [HeapEventQueue, ListEventQueue])
+def test_cancel_head_keeps_peek_consistent(qcls):
+    q = qcls()
+    h1 = q.push(1.0, lambda: None, ())
+    q.push(5.0, lambda: None, ())
+    q.cancel(h1)
+    assert len(q) == 1
+    assert q.peek_time() == 5.0
+
+
+def test_heap_and_list_same_order_under_cancellation():
+    ops = [("push", t) for t in (3.0, 1.0, 2.0, 1.0, 4.0)]
+    hq, lq = HeapEventQueue(), ListEventQueue()
+    hh = [hq.push(t, lambda: None, (t,)) for _, t in ops]
+    lh = [lq.push(t, lambda: None, (t,)) for _, t in ops]
+    hq.cancel(hh[3])
+    lq.cancel(lh[3])
+    horder = [hq.pop()[:2] for _ in range(len(hq))]
+    lorder = [lq.pop()[:2] for _ in range(len(lq))]
+    assert horder == lorder
+
+
+# -- heterogeneous lane groups + weighted dispatch -----------------------------
+def test_mixed_group_registers_and_reports_devices():
+    rep = _mixed("ewma", False)
+    g = rep.groups[0]
+    assert g["heterogeneous"] is True
+    assert set(g["devices"]) == {"coral", "ncs2_degraded"}
+    assert len(g["est_s"]) == 3
+
+
+def test_weighted_dispatch_starves_slow_stick_under_bursts():
+    """Queue-depth-only dispatch hands burst frames to the idle slow
+    stick; weighted dispatch absorbs them on fast lanes instead."""
+    naive = _mixed("naive", False)
+    ewma = _mixed("ewma", False)
+    slow_share = lambda r: sum(
+        st.processed for name, st in r.stage_stats.items()
+        if name.startswith("ncs2_degraded"))
+    assert slow_share(ewma) < slow_share(naive)
+    assert ewma.p99() < 0.5 * naive.p99()
+
+
+def test_weighted_dispatch_p99_improvement_2x_with_hedging():
+    """The PR acceptance scenario: mixed-replica straggler group, equal
+    offered load, hedging+weighted vs the PR 2 baseline discipline."""
+    base = _mixed("naive", False)
+    fast = _mixed("ewma", True)
+    assert fast.p99() * 2.0 <= base.p99(), \
+        f"p99 {fast.p99():.4f} vs baseline {base.p99():.4f}"
+    # equal offered load, throughput within 5%
+    assert fast.throughput() >= 0.95 * base.throughput()
+
+
+def test_ewma_adapts_to_lying_device_model():
+    """A stick whose DeviceModel advertises 10 ms but actually runs 100 ms
+    (thermal throttling) loses its load share as the EWMA converges."""
+    liar = DeviceModel(name="liar", service_s=0.01,
+                       jitter_p=1.0, jitter_mult=10.0)   # always 10x
+    honest = DeviceModel(name="honest", service_s=0.02)
+    eng = build_mixed_engine([honest, liar], dispatch="ewma")
+    n = _burst_feed(eng, n_bursts=80, burst=4, period=0.1)
+    rep = eng.run(until=1e9)
+    assert rep.frames_out == n
+    est = dict(zip(rep.groups[0]["lanes"], rep.groups[0]["est_s"]))
+    liar_lane = next(k for k in est if "liar" in k)
+    assert est[liar_lane] > 0.05          # converged toward observed 0.1
+    honest_lane = next(k for k in est if "honest" in k)
+    assert rep.stage_stats[honest_lane].processed > \
+        2 * rep.stage_stats[liar_lane].processed
+
+
+def test_homogeneous_weighted_matches_naive_dispatch():
+    """With identical, jitter-free replicas the weighted discipline
+    degenerates to least-loaded: identical virtual-time results."""
+    def run(dispatch):
+        eng = build_mixed_engine([DeviceModel(**FAST)] * 3,
+                                 dispatch=dispatch)
+        eng.feed(200, interval_s=0.008)
+        return eng.run(until=1e9)
+
+    a, b = run("naive"), run("ewma")
+    assert a.frames_out == b.frames_out == 200
+    assert a.sim_time == pytest.approx(b.sim_time)
+    assert sorted(a.latencies) == pytest.approx(sorted(b.latencies))
+
+
+def test_unknown_dispatch_rejected():
+    reg = CapabilityRegistry()
+    reg.insert(0, _cart("x"))
+    with pytest.raises(ValueError):
+        StreamEngine(reg, _bus(), dispatch="round_robin")
+
+
+# -- hedged dispatch -----------------------------------------------------------
+def test_hedged_duplicates_never_double_count():
+    """Exactly-once: every offered frame completes exactly once even when
+    hedges fire, win, lose, and get suppressed."""
+    rep = _mixed("ewma", True, devices=(JITTERY, JITTERY, JITTERY))
+    assert rep.hedges["issued"] > 0, "scenario must actually hedge"
+    assert rep.frames_out == rep.frames_in
+    assert len(rep.latencies) == rep.frames_out
+    assert rep.latency_hist.count == rep.frames_out
+    # every issued hedge is accounted: won / wasted / cancelled
+    assert rep.hedges["wasted"] + rep.hedges["cancelled_queued"] >= \
+        rep.hedges["won_by_backup"]
+    # suppressed losers never crossed the bus
+    assert rep.bus["suppressed_transfers"] == rep.hedges["wasted"]
+    assert rep.bus["suppressed_bytes"] > 0
+
+
+def test_hedging_cuts_jitter_tail():
+    unhedged = _mixed("ewma", False, devices=(JITTERY, JITTERY, JITTERY))
+    hedged = _mixed("ewma", True, devices=(JITTERY, JITTERY, JITTERY))
+    assert hedged.frames_out == unhedged.frames_out
+    assert hedged.p99() < unhedged.p99()
+    assert hedged.hedges["issued"] > 0
+    assert hedged.hedges["won_by_backup"] > 0
+
+
+def test_hedging_is_free_on_deterministic_lanes():
+    """Jitter-free lanes always finish inside the deadline margin: the
+    hedge path must issue nothing and cost nothing in virtual time."""
+    plain = _mixed("ewma", False)
+    hedged = _mixed("ewma", True)
+    assert hedged.hedges["issued"] == 0
+    assert hedged.sim_time == pytest.approx(plain.sim_time)
+
+
+def test_hedging_off_in_broadcast_mode():
+    eng = build_mixed_engine([DeviceModel(**JITTERY)] * 3,
+                             mode="broadcast", hedge=True)
+    eng.feed(60, interval_s=0.0)
+    rep = eng.run(until=1e9)
+    assert rep.frames_out == 60
+    assert rep.hedges["issued"] == 0
+
+
+def test_hedge_survives_replica_hotswap():
+    """Pulling a lane mid-stream with hedging armed neither loses nor
+    duplicates frames."""
+    reg = CapabilityRegistry()
+    primary = _cart("infer", service_s=0.02, jitter_p=0.05, jitter_mult=10.0)
+    reg.insert(0, primary)
+    r1 = primary.clone()
+    r2 = primary.clone()
+    reg.add_replica(0, r1)
+    reg.add_replica(0, r2)
+    eng = StreamEngine(reg, _bus(), hedge=True)
+    n = _burst_feed(eng, n_bursts=60, burst=5, period=0.05)
+    eng.schedule_remove_replica(1.1, slot=0, cart=r1)
+    rep = eng.run(until=1e9)
+    assert rep.frames_out == n, f"lost {rep.lost}"
+    assert rep.total_downtime() == 0.0
+
+
+def test_health_monitor_sees_hedges_as_stragglers():
+    rep_engine = build_mixed_engine(
+        [DeviceModel(**JITTERY)] * 3, dispatch="ewma", hedge=True)
+    n = _burst_feed(rep_engine)
+    rep = rep_engine.run(until=1e9)
+    assert rep.frames_out == n
+    if rep.hedges["issued"]:
+        mon = rep_engine.health
+        straggler_events = [e for e in mon.events if e[1] == "straggler"]
+        assert len(straggler_events) == rep.hedges["issued"]
+        assert sum(w.backup_dispatches
+                   for w in mon.workers.values()) == rep.hedges["issued"]
+
+
+# -- latency breakdown ---------------------------------------------------------
+def test_stage_latency_breakdown_recorded():
+    reg = CapabilityRegistry()
+    reg.insert(0, _cart("detect", 0.01, capability_id=1))
+    reg.insert(1, _cart("embed", 0.03, capability_id=2))
+    eng = StreamEngine(reg, _bus())
+    eng.feed(50, interval_s=0.02)
+    rep = eng.run(until=1e9)
+    assert rep.frames_out == 50
+    summary = rep.latency_summary()
+    assert summary["end_to_end"]["count"] == 50
+    assert set(summary["stages"]) == {"detect", "embed"}
+    for st in summary["stages"].values():
+        assert st["count"] == 50
+        assert st["p99"] >= st["p50"] > 0
+    # stage residence can't exceed end-to-end
+    assert summary["stages"]["embed"]["p50"] <= \
+        summary["end_to_end"]["p50"] + 1e-9
