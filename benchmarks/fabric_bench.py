@@ -1,0 +1,280 @@
+"""Multi-hub bus fabric benchmark — the tracked topology-scaling baseline.
+
+One tracked artifact, written to the repo root:
+
+* ``BENCH_fabric.json`` — the bus fabric measured for the two things it
+  exists for:
+
+  1. **Scaling past the single-bus saturation knee.**  Aggregate shard
+     FPS of one calibrated ncs2-class bus as the device count grows
+     (the curve *peaks* and then collapses — arbitration cost grows
+     with the fleet) versus hub-partitioned fabrics at the SAME total
+     device count (2x4, 4x2, 2x5, 4x4), where each hub arbitrates only
+     its own endpoints.  Headline: the multi-hub/single-bus FPS ratio
+     at equal device count, and multi-hub FPS clearing the best FPS a
+     single bus achieves at ANY size (the knee).
+
+  2. **Router-level hedge suppression.**  A cross-hub hedged scenario —
+     two jittery lanes on hub 0, two clean lanes plus the post stage on
+     hub 1, near-critical bus load — run with router suppression on vs
+     off.  Off, every hedge loser's result actually crosses egress +
+     link + ingress and is discarded at the host; the wasted transfers
+     contend with the winning traffic exactly where it flows.
+     Headline: p99 with suppression on <= off, plus the saved bus time.
+
+All numbers are virtual-time deterministic (discrete-event simulation on
+calibrated device models), so the committed ratios are exact on any
+machine; the ``smoke_baseline`` is still measured as the min over 3
+fresh subprocesses for discipline parity with the other benches.
+
+Run:  PYTHONPATH=src python benchmarks/fabric_bench.py [--smoke] [--check]
+"""
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")  # reproducible CI numbers
+
+import argparse
+import json
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FABRIC_JSON = os.path.join(ROOT, "BENCH_fabric.json")
+
+FABRIC_SCHEMA = "champ.fabric_bench.v1"
+
+FULL_CFG = dict(n_frames=300, single_sizes=(1, 2, 4, 5, 6, 8, 10, 16),
+                topologies=((2, 4), (4, 2), (2, 5), (4, 4)),
+                hedge_bursts=300)
+SMOKE_CFG = dict(n_frames=150, single_sizes=(1, 4, 5, 8, 16),
+                 topologies=((2, 4), (4, 4)),
+                 hedge_bursts=120)
+
+DEVICE = "ncs2"          # the paper's Table 1 calibration
+
+
+# ---------------------------------------------------------------------------
+# 1. shard scaling: one saturated bus vs hub-partitioned fabrics
+# ---------------------------------------------------------------------------
+def bench_scaling(cfg) -> dict:
+    from repro.runtime import engine_shard_fps, fabric_shard_fps
+
+    n = cfg["n_frames"]
+    single = {str(k): round(engine_shard_fps(DEVICE, k, n_frames=n), 2)
+              for k in cfg["single_sizes"]}
+    knee_n, knee_fps = max(single.items(), key=lambda kv: kv[1])
+    fabrics = {}
+    for hubs, per in cfg["topologies"]:
+        total = hubs * per
+        fps = round(fabric_shard_fps(DEVICE, hubs, per, n_frames=n), 2)
+        same_n = single.get(str(total))
+        if same_n is None:
+            same_n = round(engine_shard_fps(DEVICE, total, n_frames=n), 2)
+            single[str(total)] = same_n
+        fabrics[f"{hubs}x{per}"] = {
+            "hubs": hubs, "devices_per_hub": per, "total_devices": total,
+            "aggregate_fps": fps,
+            "single_bus_fps_same_n": same_n,
+            "speedup_vs_single_bus": round(fps / same_n, 2),
+            "exceeds_knee": bool(fps > knee_fps),
+        }
+    best = max(fabrics.values(), key=lambda f: f["speedup_vs_single_bus"])
+    return {
+        "device": DEVICE,
+        "single_bus_fps": single,
+        "single_bus_knee": {"devices": int(knee_n), "fps": knee_fps},
+        "single_bus_5dev_fps": single["5"],
+        "fabrics": fabrics,
+        "best_speedup_at_equal_devices": best["speedup_vs_single_bus"],
+        "best_topology": f"{best['hubs']}x{best['devices_per_hub']}",
+    }
+
+
+# ---------------------------------------------------------------------------
+# 2. cross-hub hedging: router suppression on vs off
+# ---------------------------------------------------------------------------
+def bench_hedge_suppression(cfg) -> dict:
+    """The canonical cross-hub hedge scenario — the engine builder lives
+    in ``repro.runtime.replication`` and is shared with the test suite,
+    so the invariants the tests pin are measured on this exact
+    workload."""
+    from repro.runtime import build_cross_hub_hedge_engine
+
+    out = {"workload": "2 jittery lanes on hub0 + 2 clean on hub1, "
+                       "bursty @ 0.45 load, hedge_quantile=0.8"}
+    for key, sup in (("suppression_on", True), ("suppression_off", False)):
+        rep = build_cross_hub_hedge_engine(
+            sup, cfg["hedge_bursts"]).run(until=1e12)
+        assert rep.lost == 0, f"fabric hedge scenario lost {rep.lost}"
+        out[key] = {
+            "p50_ms": round(rep.p50() * 1e3, 2),
+            "p95_ms": round(rep.p95() * 1e3, 2),
+            "p99_ms": round(rep.p99() * 1e3, 2),
+            "mean_ms": round(rep.mean_latency() * 1e3, 2),
+            "hedges": {k: v for k, v in rep.hedges.items() if v},
+            "bus_busy_s": rep.bus["busy_s"],
+            "suppressed_transfers": rep.bus["suppressed_transfers"],
+            "suppressed_saved_s": rep.bus["suppressed_saved_s"],
+            "wasted_transfers": rep.bus["wasted_transfers"],
+        }
+    on, off = out["suppression_on"], out["suppression_off"]
+    out["p99_off_over_on"] = round(
+        off["p99_ms"] / max(on["p99_ms"], 1e-9), 3)
+    out["bus_busy_saved_s"] = round(
+        off["bus_busy_s"] - on["bus_busy_s"], 6)
+    return out
+
+
+def _acceptance(scaling: dict, hedge: dict) -> dict:
+    on, off = hedge["suppression_on"], hedge["suppression_off"]
+    return {
+        "single_bus_knee_fps": scaling["single_bus_knee"]["fps"],
+        "single_bus_5dev_fps": scaling["single_bus_5dev_fps"],
+        "best_topology": scaling["best_topology"],
+        "multi_hub_speedup": scaling["best_speedup_at_equal_devices"],
+        # the issue's gate: multi-hub aggregate FPS must clear the
+        # calibrated single-bus saturation point at equal device count
+        "pass_scaling": bool(
+            scaling["best_speedup_at_equal_devices"] > 1.0
+            and all(f["exceeds_knee"]
+                    for f in scaling["fabrics"].values())),
+        "hedge_p99_on_ms": on["p99_ms"],
+        "hedge_p99_off_ms": off["p99_ms"],
+        "p99_off_over_on": hedge["p99_off_over_on"],
+        "pass_hedge": bool(on["p99_ms"] <= off["p99_ms"]
+                           and on["suppressed_transfers"] > 0
+                           and off["wasted_transfers"] > 0),
+    }
+
+
+# ---------------------------------------------------------------------------
+# schema validation + regression check
+# ---------------------------------------------------------------------------
+def validate_fabric(doc: dict):
+    assert doc.get("schema") == FABRIC_SCHEMA, "bad/missing schema tag"
+    assert doc.get("mode") in ("full", "smoke"), "bad mode"
+    for section in ("scaling", "hedge", "acceptance"):
+        assert section in doc, f"missing section {section!r}"
+    for kk in ("multi_hub_speedup", "p99_off_over_on", "pass_scaling",
+               "pass_hedge"):
+        assert kk in doc["acceptance"], f"acceptance missing {kk!r}"
+    if doc["mode"] == "full":
+        assert "smoke_baseline" in doc, "missing smoke_baseline"
+        for kk in ("multi_hub_speedup", "p99_off_over_on"):
+            assert kk in doc["smoke_baseline"], \
+                f"smoke_baseline missing {kk!r}"
+
+
+def load_committed():
+    try:
+        doc = json.load(open(FABRIC_JSON))
+        validate_fabric(doc)
+    except Exception as e:
+        return None, [f"committed BENCH_fabric.json malformed: {e}"]
+    return doc, []
+
+
+def run_check(fresh: dict, smoke: bool, committed: dict) -> list:
+    failures = []
+    base = committed["smoke_baseline"] if smoke else committed["acceptance"]
+    got = fresh["acceptance"]["multi_hub_speedup"]
+    want = base["multi_hub_speedup"]
+    if got < 0.8 * want:
+        failures.append(f"multi-hub speedup regressed >20%: "
+                        f"{got} vs baseline {want}")
+    if not fresh["acceptance"]["pass_scaling"]:
+        failures.append("multi-hub FPS no longer clears the single-bus "
+                        "saturation knee")
+    if not fresh["acceptance"]["pass_hedge"]:
+        failures.append(
+            f"router suppression no longer helps the hedge tail: "
+            f"p99 on {fresh['acceptance']['hedge_p99_on_ms']} vs "
+            f"off {fresh['acceptance']['hedge_p99_off_ms']}")
+    got_r = fresh["acceptance"]["p99_off_over_on"]
+    want_r = base["p99_off_over_on"]
+    if got_r < 0.8 * want_r:
+        failures.append(f"suppression p99 ratio regressed >20%: "
+                        f"{got_r} vs baseline {want_r}")
+    return failures
+
+
+def run() -> dict:
+    """Validation-suite entry (``benchmarks/run.py``): smoke-size check
+    that the fabric still clears its scaling + suppression gates."""
+    scaling = bench_scaling(SMOKE_CFG)
+    hedge = bench_hedge_suppression(SMOKE_CFG)
+    acc = _acceptance(scaling, hedge)
+    return {
+        "acceptance": acc,
+        "pass_fabric": bool(acc["pass_scaling"] and acc["pass_hedge"]),
+    }
+
+
+# ---------------------------------------------------------------------------
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes; writes BENCH_fabric.smoke.json "
+                         "instead of overwriting the committed baseline")
+    ap.add_argument("--check", action="store_true",
+                    help="validate committed BENCH_fabric.json and fail on "
+                         ">20% ratio regression")
+    args = ap.parse_args()
+
+    cfg = SMOKE_CFG if args.smoke else FULL_CFG
+    mode = "smoke" if args.smoke else "full"
+    committed = None
+    if args.check:
+        committed, failures = load_committed()
+        if failures:
+            raise SystemExit("benchmark check failed: " + "; ".join(failures))
+
+    print(f"[fabric_bench] mode={mode} frames={cfg['n_frames']} "
+          f"topologies={cfg['topologies']}")
+    doc = {"schema": FABRIC_SCHEMA, "mode": mode}
+    doc["scaling"] = bench_scaling(cfg)
+    doc["hedge"] = bench_hedge_suppression(cfg)
+    doc["acceptance"] = _acceptance(doc["scaling"], doc["hedge"])
+
+    if not args.smoke:
+        # smoke baselines for CI parity with the other benches: min over 3
+        # fresh subprocesses (the ratios are virtual-time deterministic,
+        # so the min is a stability assertion, not noise filtering)
+        print("[fabric_bench] measuring smoke baseline for CI "
+              "(min of 3 fresh subprocesses)")
+        import subprocess
+        import sys
+        smoke_path = os.path.join(ROOT, "BENCH_fabric.smoke.json")
+        samples = []
+        for _ in range(3):
+            subprocess.run([sys.executable, os.path.abspath(__file__),
+                            "--smoke"], check=True, cwd=ROOT)
+            samples.append(json.load(open(smoke_path))["acceptance"])
+        os.remove(smoke_path)
+        doc["smoke_baseline"] = {
+            "multi_hub_speedup": min(a["multi_hub_speedup"]
+                                     for a in samples),
+            "p99_off_over_on": min(a["p99_off_over_on"] for a in samples),
+            "samples": [{"multi_hub_speedup": a["multi_hub_speedup"],
+                         "p99_off_over_on": a["p99_off_over_on"]}
+                        for a in samples],
+        }
+
+    if args.check:
+        # check BEFORE writing: a failed check must not clobber the
+        # committed baseline it was compared against
+        failures = run_check(doc, args.smoke, committed)
+        if failures:
+            raise SystemExit("benchmark check failed: " + "; ".join(failures))
+        print("[fabric_bench] check OK — no tracked metric regressed")
+
+    path = FABRIC_JSON if not args.smoke else \
+        os.path.join(ROOT, "BENCH_fabric.smoke.json")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+    print(f"[fabric_bench] wrote {path}")
+    print(json.dumps(doc["acceptance"], indent=2))
+
+
+if __name__ == "__main__":
+    main()

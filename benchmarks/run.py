@@ -13,7 +13,7 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")  # reproducible benchmark numbers
 import json
 import time
 
-from benchmarks import (bus_scaling, gallery_bench, hotswap,
+from benchmarks import (bus_scaling, fabric_bench, gallery_bench, hotswap,
                         latency_bench, pipeline_latency, power_model,
                         roofline_report, secure_match)
 
@@ -25,6 +25,7 @@ BENCHES = [
     ("s3_encrypted_matching", secure_match.run, "identical_all"),
     ("identification_fastpath", gallery_bench.run, "pass_fastpath"),
     ("tail_latency_fastpath", latency_bench.run, "pass_tail"),
+    ("multi_hub_fabric", fabric_bench.run, "pass_fabric"),
     ("roofline_report", roofline_report.run, None),
 ]
 

@@ -5,6 +5,10 @@ recurrent-state and MoE dispatch paths.
 
 Run:  PYTHONPATH=src python examples/arch_smoke_all.py [arch ...]
 """
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")  # no TPU probing on CPU-only hosts
+
 import sys
 import traceback
 

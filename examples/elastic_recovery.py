@@ -5,6 +5,10 @@ when the failure lands on a checkpoint boundary.
 
 Run:  PYTHONPATH=src python examples/elastic_recovery.py
 """
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")  # no TPU probing on CPU-only hosts
+
 import shutil
 
 from repro.launch import train

@@ -21,6 +21,10 @@ The operator waits on p99, and p99 is what moves.
 
 Run:  PYTHONPATH=src python examples/mixed_lanes.py
 """
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")  # no TPU probing on CPU-only hosts
+
 from repro.core.cartridge import DeviceModel
 from repro.runtime import build_mixed_engine
 

@@ -4,6 +4,10 @@ watchlist.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")  # no TPU probing on CPU-only hosts
+
 from repro.launch.serve import run_biometric
 
 

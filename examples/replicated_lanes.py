@@ -13,6 +13,10 @@ by plugging in more sticks, then survive losing one — live.
 
 Run:  PYTHONPATH=src python examples/replicated_lanes.py
 """
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")  # no TPU probing on CPU-only hosts
+
 from repro.bus import BusParams, SharedBus, TABLE1, calibrated
 from repro.core import messages as msg
 from repro.core.cartridge import DeviceModel, FnCartridge

@@ -9,6 +9,10 @@
 
 Run:  PYTHONPATH=src python examples/serve_biometric.py
 """
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")  # no TPU probing on CPU-only hosts
+
 import numpy as np
 
 from repro.launch.serve import build_biometric_pipeline, run_biometric

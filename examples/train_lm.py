@@ -4,6 +4,10 @@ checkpointing and a simulated mid-run node failure + recovery.
 
 Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
 """
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")  # no TPU probing on CPU-only hosts
+
 import argparse
 import shutil
 

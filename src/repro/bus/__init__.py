@@ -1,2 +1,4 @@
 from repro.bus.simulator import (BusParams, SharedBus, TABLE1, calibrated,
                                  calibrate_from_fps, simulate_broadcast_fps)
+from repro.bus.fabric import (FabricRouter, Hub, InterHubLink, LinkParams,
+                              uniform_fabric)

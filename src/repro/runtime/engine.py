@@ -63,6 +63,25 @@ path tail-aware:
     (``runtime.metrics``), so p50/p95/p99 come free without the hot loop
     retaining or sorting per-frame samples.
 
+Multi-hub bus fabric.  The ``bus`` argument may be a ``FabricRouter``
+(``repro.bus.fabric``) instead of a bare ``SharedBus``: devices are
+partitioned across hubs (the registry tracks each replica's hub), every
+transfer is charged to its route — source-hub egress, inter-hub link,
+destination-hub ingress, with *per-hub* endpoint counts driving the
+arbitration term — and lane groups may span hubs.  Handoffs pre-route
+to the destination lane's hub (the arrival prefers a lane on the
+charged hub); hedge backup copies crossing to another hub are charged
+ingress-only to the *destination* hub's bus and arrive only after that
+transfer completes; hedge losers are suppressed at the router, saving
+link + destination-hub time before the inter-hub leg starts.  A one-hub
+fabric is bit-identical to the bare bus.
+
+Quorum broadcast.  A broadcast slot with ``quorum=k`` decides each
+frame at the k-th replica completion instead of the slowest (first k of
+N results win); the stragglers keep computing but their result
+handoffs are suppressed on the bus.  ``quorum=None`` (or ``k >= N``)
+reproduces Table 1 exactly.
+
 Timing is virtual (deterministic, calibrated DeviceModels); payload compute
 is optionally real JAX (``execute_payloads=True``) so correctness tests can
 assert data flows through reconfigurations unchanged.  Service-time jitter
@@ -78,6 +97,7 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, List, Optional
 
+from repro.bus.fabric import FabricRouter
 from repro.bus.simulator import BusParams, SharedBus
 from repro.core.cartridge import Cartridge, PassThrough
 from repro.core import messages as msg
@@ -88,6 +108,9 @@ from repro.runtime.registry import CapabilityRegistry, SlotRecord
 
 HANDSHAKE_S = 0.35       # detection + addressing + capability handshake
 REMOVE_PAUSE_S = 0.5     # paper §4.2: ~0.5 s reconfiguration on removal
+# a broadcast replica's result fetch ("a few score bytes", §4.1) — the
+# per-straggler handoff a quorum decision suppresses
+BROADCAST_RESULT_BYTES = 256
 
 DISPATCH_DISCIPLINES = ("ewma", "naive")
 
@@ -103,7 +126,8 @@ class StageStats:
 
 def _hedge_counters() -> dict:
     return {"issued": 0, "won_by_backup": 0, "wasted": 0,
-            "cancelled_queued": 0, "migrated": 0}
+            "cancelled_queued": 0, "migrated": 0,
+            "cross_hub": 0, "dropped_in_flight": 0}
 
 
 @dataclass
@@ -176,6 +200,9 @@ class _Lane:
         self.stats = StageStats()
         self.pos = 0                       # last known chain position
         self.slot = -1                     # last known capability slot
+        self.hub = 0                       # fabric hub this device plugs into
+        self.bfree_at = 0.0                # broadcast: this replica's own
+                                           # previous frame's finish time
         # per-lane service-time model: EWMA point estimate (seeded from the
         # calibrated DeviceModel) + streaming distribution for the hedge
         # deadline quantile.  Both are per batch-normalized frame cost.
@@ -219,6 +246,7 @@ class _LaneGroup:
     def __init__(self, rec: SlotRecord, queue_cap: int):
         self.slot = rec.slot
         self.mode = rec.mode
+        self.quorum = rec.quorum
         self.lanes: List[_Lane] = []
         self.lane_ids: set = set()         # id(lane) index for O(1) lookup
         self.queue_cap = queue_cap
@@ -237,7 +265,8 @@ class _LaneGroup:
         return sum(max(self.queue_cap - len(l.queue), 0) for l in self.lanes)
 
     def pick_lane(self, now: float, weighted: bool = True,
-                  exclude: Optional[_Lane] = None) -> Optional[_Lane]:
+                  exclude: Optional[_Lane] = None,
+                  prefer_hub: Optional[int] = None) -> Optional[_Lane]:
         """Dispatch choice; prefers lanes past their handshake gate.
 
         ``weighted`` (the default) minimizes estimated completion time of
@@ -248,6 +277,9 @@ class _LaneGroup:
         groups behave exactly like the unweighted discipline.
         ``weighted=False`` is the queue-depth-only baseline.  ``exclude``
         lets the hedge path pick the best *alternate* lane.
+        ``prefer_hub`` narrows the pool to one fabric hub when possible —
+        a routed handoff already paid to reach that hub, so the arrival
+        lands there unless the hub has no lanes left.
         """
         lanes = self.lanes if exclude is None else \
             [l for l in self.lanes if l is not exclude]
@@ -255,6 +287,10 @@ class _LaneGroup:
             return None
         ready = [l for l in lanes if l.ready_at <= now]
         pool = ready or lanes
+        if prefer_hub is not None:
+            on_hub = [l for l in pool if l.hub == prefer_hub]
+            if on_hub:
+                pool = on_hub
         if weighted:
             return min(pool, key=lambda l: (l.backlog() + 1) * l.est_s)
         return min(pool, key=lambda l: (len(l.queue) + (1 if l.busy else 0)))
@@ -263,7 +299,7 @@ class _LaneGroup:
 class StreamEngine:
     """Lane-group topology engine. Groups are rebuilt on registry events."""
 
-    def __init__(self, registry: CapabilityRegistry, bus: SharedBus,
+    def __init__(self, registry: CapabilityRegistry, bus,
                  *, queue_cap: int = 8, execute_payloads: bool = False,
                  microbatch: bool = True, event_queue=None,
                  dispatch: str = "ewma", hedge: bool = False,
@@ -272,7 +308,9 @@ class StreamEngine:
         if dispatch not in DISPATCH_DISCIPLINES:
             raise ValueError(f"unknown dispatch discipline {dispatch!r}")
         self.registry = registry
-        self.bus = bus
+        self.bus = bus                  # SharedBus, or a FabricRouter
+        self.fabric: Optional[FabricRouter] = \
+            bus if isinstance(bus, FabricRouter) else None
         self.queue_cap = queue_cap
         self.execute_payloads = execute_payloads
         self.microbatch = microbatch
@@ -325,6 +363,7 @@ class StreamEngine:
             g = old_group_by_slot.get(rec.slot) or _LaneGroup(
                 rec, self.queue_cap)
             g.mode = rec.mode
+            g.quorum = rec.quorum
             g.pos = i
             g.lanes = []
             for cart in rec.replicas:
@@ -333,6 +372,14 @@ class StreamEngine:
                 self._lane_by_cart[id(cart)] = lane
                 lane.pos = i
                 lane.slot = rec.slot
+                lane.hub = self.registry.hub_of(cart)
+                if self.fabric is not None and \
+                        not 0 <= lane.hub < self.fabric.n_hubs:
+                    # fail at (hot-)plug time, not frames later inside a
+                    # routed transfer deep in the event loop
+                    raise ValueError(
+                        f"{cart.name} placed on hub {lane.hub}, but the "
+                        f"fabric has hubs 0..{self.fabric.n_hubs - 1}")
                 g.lanes.append(lane)
                 kept_lanes.add(id(lane))
             g.lane_ids = {id(l) for l in g.lanes}
@@ -400,8 +447,26 @@ class StreamEngine:
             return g
         return None
 
-    def _n_endpoints(self) -> int:
-        return self.registry.n_endpoints() or 1
+    def _n_endpoints(self, hub: Optional[int] = None) -> int:
+        """Arbitration contention count: the whole fleet on a single bus,
+        or — with a fabric — just the endpoints sharing one hub."""
+        if hub is None or self.fabric is None:
+            return self.registry.n_endpoints() or 1
+        return self.registry.n_endpoints_on(hub) or 1
+
+    def _route_hub(self, idx: int) -> Optional[int]:
+        """Where the router should land a handoff bound for stage ``idx``:
+        the hub of the lane the group would dispatch to right now.  None
+        for the sink, a broadcast group (host-staged: its per-lane ingress
+        is charged at broadcast start), or an empty group — those routes
+        stay local to the source hub."""
+        if self.fabric is None or idx >= len(self._groups):
+            return None
+        g = self._groups[idx]
+        if g.mode == "broadcast":
+            return None
+        lane = g.pick_lane(self.now, weighted=self.dispatch == "ewma")
+        return lane.hub if lane is not None else None
 
     # -- event queue ----------------------------------------------------------
     def _push_event(self, t: float, fn: Callable, *args) -> int:
@@ -422,8 +487,19 @@ class StreamEngine:
         for g in self._groups:
             self.report.groups[g.slot] = {
                 "mode": g.mode,
+                "quorum": g.quorum,
                 "lanes": [l.cart.name for l in g.lanes],
                 "devices": [l.cart.device.name for l in g.lanes],
+                "hubs": [l.hub for l in g.lanes],
+                # broadcast: how far each replica's own compute trails the
+                # group's quorum decisions.  A permanently slower stick
+                # under quorum=k accumulates real backlog — the pipeline
+                # does not wait for it, but operators must see it lagging
+                # rather than read its dispatch-time busy_s as >100%
+                # utilization.
+                "straggler_lag_s": [round(max(0.0, l.bfree_at - self.now), 6)
+                                    for l in g.lanes]
+                if g.mode == "broadcast" else None,
                 "est_s": [round(l.est_s, 6) for l in g.lanes],
                 "heterogeneous": len({(l.cart.device.name,
                                        l.cart.device.service_s)
@@ -462,10 +538,12 @@ class StreamEngine:
         g = self._groups[idx]
         m.meta["_t_stage"] = self.now      # per-stage latency breakdown
         if g.mode == "broadcast":
+            m.meta.pop("_hub", None)
             g.bqueue.append(m)
             self._try_start_broadcast(g)
             return
-        lane = g.pick_lane(self.now, weighted=self.dispatch == "ewma")
+        lane = g.pick_lane(self.now, weighted=self.dispatch == "ewma",
+                           prefer_hub=m.meta.pop("_hub", None))
         if lane is None:
             self._hold_buffer.append((idx, m))
             return
@@ -594,16 +672,54 @@ class StreamEngine:
                 meta=dict(task.message.meta, _hedge_copy=True))
             self.report.hedges["issued"] += 1
             self.health.record_backup(task.primary.cart.name, self.now, seq)
-            alt.queue.append(copy)
-            self._try_start_lane(alt)
+            if self.fabric is not None and alt.hub != task.primary.hub:
+                # the speculative copy must cross to the backup's hub.  It
+                # is charged ingress-only to the *destination* hub's bus
+                # (the host re-sends from its own buffer: no source-hub
+                # egress, no inter-hub link), so speculation never erodes
+                # the source hub's arbitration budget.  The copy only
+                # becomes runnable once that transfer lands.
+                self.report.hedges["cross_hub"] += 1
+                done = self.fabric.transfer(
+                    self.now, self._msg_bytes(copy),
+                    self._n_endpoints(alt.hub), src=None, dst=alt.hub)
+                self._push_event(done, self._hedge_copy_arrive,
+                                 task, alt, copy)
+            else:
+                alt.queue.append(copy)
+                self._try_start_lane(alt)
         if stalled and id(lane) in g.lane_ids:
             self._migrate_queue(g, lane)
+
+    def _hedge_copy_arrive(self, task: _HedgeTask, alt: _Lane,
+                           copy: msg.Message):
+        """A cross-hub speculative copy finished its ingress transfer.  If
+        the race resolved, the backup lane unplugged, or the lane's queue
+        filled while it was on the wire, drop it at the hub boundary — it
+        was never queued, so exactly-once needs only the copy count
+        decrement."""
+        if task.winner is not None or task.backup is not alt \
+                or self._group_of_lane(alt) is None \
+                or len(alt.queue) >= self.queue_cap:
+            task.copies -= 1
+            if task.backup is alt:
+                task.backup = None
+            if task.copies <= 0:
+                self._hedges.pop((task.primary.slot, task.seq), None)
+            self.report.hedges["dropped_in_flight"] += 1
+            return
+        alt.queue.append(copy)
+        self._try_start_lane(alt)
 
     def _migrate_queue(self, g: _LaneGroup, lane: _Lane):
         """Move a presumed-stalled lane's unstarted backlog to its peers.
         Backup copies parked here stay put (their primary is live
         elsewhere); everything else re-lands on the best alternate lane
-        with headroom."""
+        with headroom.  On a fabric, migrating to a lane on another hub
+        is a real host re-send: like hedge copies it is charged
+        ingress-only to the *destination* hub's bus, and the frame only
+        becomes runnable there once the transfer lands — no free
+        cross-hub moves."""
         if not lane.queue:
             return
         keep: deque = deque()
@@ -616,10 +732,28 @@ class StreamEngine:
             if alt is None or len(alt.queue) >= self.queue_cap:
                 keep.append(m)
                 continue
-            alt.queue.append(m)
             self.report.hedges["migrated"] += 1
+            if self.fabric is not None and alt.hub != lane.hub:
+                done = self.fabric.transfer(
+                    self.now, self._msg_bytes(m),
+                    self._n_endpoints(alt.hub), src=None, dst=alt.hub)
+                self._push_event(done, self._migrate_arrive, alt, m)
+                continue
+            alt.queue.append(m)
             self._try_start_lane(alt)
         lane.queue = keep
+
+    def _migrate_arrive(self, alt: _Lane, m: msg.Message):
+        """A migrated frame finished crossing to the healthy lane's hub.
+        Unlike a hedge copy it is the frame's ONLY live instance, so if
+        the target vanished or filled while it was on the wire it
+        re-enters the pipeline (zero loss) instead of being dropped."""
+        if self._group_of_lane(alt) is not None \
+                and len(alt.queue) < self.queue_cap:
+            alt.queue.append(m)
+            self._try_start_lane(alt)
+            return
+        self._reinject(self._slot_index.get(alt.slot, alt.pos), m)
 
     def _cancel_queued_copy(self, lane: _Lane, seq: int) -> bool:
         for m in lane.queue:
@@ -659,12 +793,25 @@ class StreamEngine:
                 deliver.append(m)
             else:
                 # this copy lost the race after being serviced: its result
-                # never crosses the bus (suppressed handoff)
+                # never crosses the bus (suppressed handoff).  On a fabric
+                # the suppression happens at the router, before the
+                # inter-hub leg starts — saving link + destination-hub
+                # time, not just the local egress.
                 task.copies -= 1
                 if task.copies <= 0:
                     del self._hedges[(slot, m.seq)]
                 self.report.hedges["wasted"] += 1
-                self.bus.suppress(self._msg_bytes(m))
+                if self.fabric is not None:
+                    g2 = self._group_by_slot.get(slot)
+                    dst = self._route_hub(g2.pos + 1) if g2 is not None \
+                        else None
+                    self.fabric.suppress(
+                        self._msg_bytes(m), src=lane.hub, dst=dst,
+                        t=self.now, n_endpoints=self._n_endpoints(lane.hub),
+                        dst_endpoints=self._n_endpoints(dst)
+                        if dst is not None else 1)
+                else:
+                    self.bus.suppress(self._msg_bytes(m))
         return deliver
 
     def _lane_done(self, lane: _Lane, batch: list, svc_norm: float = 0.0):
@@ -708,7 +855,22 @@ class StreamEngine:
             self._push_event(self.now + 1e-3, self._retry_handoff, lane)
             return
         nbytes = sum(self._msg_bytes(m) for m in batch)
-        done = self.bus.transfer(self.now, nbytes, self._n_endpoints())
+        if self.fabric is not None:
+            # host-side routing: egress on the source hub, inter-hub link,
+            # ingress on the routed destination hub (local legs collapse)
+            dst_hub = self._route_hub(nxt)
+            done = self.fabric.transfer(
+                self.now, nbytes, self._n_endpoints(lane.hub),
+                src=lane.hub, dst=dst_hub,
+                dst_endpoints=self._n_endpoints(dst_hub)
+                if dst_hub is not None else 1)
+            if dst_hub is not None:
+                for m in batch:     # arrival should land on the paid-for
+                    m.meta["_hub"] = dst_hub    # hub (local routes too —
+                    # a silent hub switch at arrival would be a free
+                    # cross-hub move the router never charged)
+        else:
+            done = self.bus.transfer(self.now, nbytes, self._n_endpoints())
         nxt_group = self._groups[nxt] if nxt < len(self._groups) else None
         self._push_event(done, self._arrive_next, nxt_group, batch)
         self._try_start_lane(lane)
@@ -762,17 +924,49 @@ class StreamEngine:
         if self.execute_payloads and m.payload is not None:
             m = lanes[0].cart.process(m)   # replicas compute identically
         nbytes = self._msg_bytes(m)
-        n_end = self._n_endpoints()
-        finish = self.now
+        finishes = []
         for lane in lanes:
-            arr = self.bus.transfer(self.now, nbytes, n_end)
-            svc = lane.cart.device.service_s
+            if self.fabric is not None:
+                # host fan-out: each replica's copy is charged ingress on
+                # its own hub (per-hub arbitration domain)
+                arr = self.fabric.transfer(
+                    self.now, nbytes, self._n_endpoints(lane.hub),
+                    src=None, dst=lane.hub)
+            else:
+                arr = self.bus.transfer(self.now, nbytes,
+                                        self._n_endpoints())
+            svc, _ = self._service_time(lane, 1, m.seq)
             lane.stats.busy_s += svc
             lane.stats.processed += 1
             lane.stats.batches += 1
             lane.stats.max_batch = max(lane.stats.max_batch, 1)
-            finish = max(finish, arr + svc)
-        self._push_event(finish, self._broadcast_done, g, m)
+            # a replica cannot start this frame while still computing the
+            # previous one: under a quorum decision a straggler works off
+            # its own backlog instead of being >100% utilized.  With the
+            # full barrier (quorum=N) every lane finished before the next
+            # dispatch, so the gate is a no-op and Table 1 is untouched.
+            finish = max(arr, lane.bfree_at) + svc
+            lane.bfree_at = finish
+            finishes.append(finish)
+        # quorum: the frame is decided at the k-th replica completion
+        # (k = N, the default, is Table 1's full barrier — exactly
+        # max(finishes)).  Stragglers keep computing (busy time already
+        # charged) but their result handoffs are suppressed — exactly
+        # N-k of them by rank, not by comparing against the decision
+        # time: on symmetric multi-hub fabrics finishes tie exactly, and
+        # a tie is still a loser (only k results are fetched).
+        k = min(g.quorum or len(finishes), len(finishes))
+        order = sorted(range(len(finishes)), key=finishes.__getitem__)
+        decide = finishes[order[k - 1]]
+        for i in order[k:]:
+            if self.fabric is not None:
+                self.fabric.suppress(BROADCAST_RESULT_BYTES,
+                                     src=lanes[i].hub, t=self.now,
+                                     n_endpoints=self._n_endpoints(
+                                         lanes[i].hub))
+            else:
+                self.bus.suppress(BROADCAST_RESULT_BYTES)
+        self._push_event(decide, self._broadcast_done, g, m)
 
     def _broadcast_done(self, g: _LaneGroup, m: msg.Message):
         g.bbusy = False
@@ -798,8 +992,20 @@ class StreamEngine:
             g.bheld = m
             self._push_event(self.now + 1e-3, self._retry_broadcast, g)
             return
-        done = self.bus.transfer(self.now, self._msg_bytes(m),
-                                 self._n_endpoints())
+        if self.fabric is not None:
+            src = g.lanes[0].hub if g.lanes else None
+            dst_hub = self._route_hub(nxt)
+            done = self.fabric.transfer(
+                self.now, self._msg_bytes(m),
+                self._n_endpoints(src) if src is not None else 1,
+                src=src, dst=dst_hub,
+                dst_endpoints=self._n_endpoints(dst_hub)
+                if dst_hub is not None else 1)
+            if dst_hub is not None:
+                m.meta["_hub"] = dst_hub
+        else:
+            done = self.bus.transfer(self.now, self._msg_bytes(m),
+                                     self._n_endpoints())
         self._push_event(done, self._arrive_next, self._groups[nxt], [m])
         self._try_start_broadcast(g)
 
@@ -817,8 +1023,9 @@ class StreamEngine:
                         mode: str = "shard"):
         self._push_event(t, self._do_insert, slot, cart, mode)
 
-    def schedule_add_replica(self, t: float, slot: int, cart: Cartridge):
-        self._push_event(t, self._do_add_replica, slot, cart)
+    def schedule_add_replica(self, t: float, slot: int, cart: Cartridge,
+                             hub: Optional[int] = None):
+        self._push_event(t, self._do_add_replica, slot, cart, hub)
 
     def schedule_remove_replica(self, t: float, slot: int,
                                 cart: Optional[Cartridge] = None):
@@ -916,14 +1123,16 @@ class StreamEngine:
                 (t0, self.now, f"halted awaiting capability (slot {slot})"))
         self._pause(HANDSHAKE_S + load_s, f"insert slot {slot}")
 
-    def _do_add_replica(self, slot: int, cart: Cartridge):
-        """Plug one more device into an existing lane group.  The pipeline
-        keeps streaming; the new lane joins after handshake + model load."""
+    def _do_add_replica(self, slot: int, cart: Cartridge,
+                        hub: Optional[int] = None):
+        """Plug one more device into an existing lane group (optionally on
+        a specific fabric hub).  The pipeline keeps streaming; the new
+        lane joins after handshake + model load."""
         if slot not in self.registry.slots:
             return
         self._in_swap = True
         try:
-            self.registry.add_replica(slot, cart, self.now)
+            self.registry.add_replica(slot, cart, self.now, hub=hub)
             self._stub_load(cart)
             self._rebuild()
         finally:

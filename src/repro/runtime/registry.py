@@ -22,6 +22,19 @@ NCS2 with two Corals (heterogeneous lane group) as long as every replica
 speaks the primary's contract.  The engine's weighted dispatcher reads
 each replica's ``DeviceModel`` as its service-time seed, so a slow stick
 carries proportionally less of the slot's load instead of gating it.
+
+Hub placement (multi-hub fabric).  Each physical device plugs into one
+hub of the bus fabric; ``insert`` / ``add_replica`` take a ``hub`` id
+(default: hub 0 / the primary's hub) and the registry tracks the
+device -> hub map, so lane groups can *span* hubs and the engine's
+router can charge each transfer to the right arbitration domain
+(``n_endpoints`` contention is per hub, not fleet-wide).
+
+Quorum broadcast.  A ``broadcast`` slot may carry ``quorum=k``: the
+engine decides each frame at the k-th replica completion instead of the
+slowest, suppressing the stragglers' result handoffs — Table 1
+redundancy at shard-like tails.  ``quorum=None`` (or ``k >= N``) is the
+paper's full-barrier semantics, bit-identical to Table 1.
 """
 from __future__ import annotations
 
@@ -41,6 +54,7 @@ class SlotRecord:
     inserted_at: float = 0.0
     mode: str = "shard"
     replicas: List[Cartridge] = field(default_factory=list)
+    quorum: Optional[int] = None      # broadcast: first k of N results win
 
     def __post_init__(self):
         if not self.replicas:
@@ -71,31 +85,56 @@ class CapabilityRegistry:
     def __init__(self):
         self.slots: Dict[int, SlotRecord] = {}
         self._listeners: List[Callable[[str, SlotRecord], None]] = []
+        self._hub_of: Dict[int, int] = {}    # id(cartridge) -> hub id
+        self._hub_counts: Dict[int, int] = {}  # hub id -> plugged devices
+
+    def _hub_plug(self, cart: Cartridge, hub: int):
+        self._hub_of[id(cart)] = hub
+        self._hub_counts[hub] = self._hub_counts.get(hub, 0) + 1
+
+    def _hub_unplug(self, cart: Cartridge):
+        hub = self._hub_of.pop(id(cart), None)
+        if hub is not None:
+            n = self._hub_counts.get(hub, 0) - 1
+            if n > 0:
+                self._hub_counts[hub] = n
+            else:
+                self._hub_counts.pop(hub, None)
 
     # -- discovery events ----------------------------------------------------
     def insert(self, slot: int, cart: Cartridge, t: float = 0.0,
-               mode: str = "shard") -> SlotRecord:
+               mode: str = "shard", hub: int = 0,
+               quorum: Optional[int] = None) -> SlotRecord:
         if slot in self.slots:
             raise ValueError(f"slot {slot} occupied by "
                              f"{self.slots[slot].cartridge.name}")
         if mode not in DISPATCH_MODES:
             raise ValueError(f"unknown dispatch mode {mode!r}")
+        if quorum is not None:
+            if mode != "broadcast":
+                raise ValueError("quorum only applies to broadcast slots")
+            if quorum < 1:
+                raise ValueError(f"quorum must be >= 1, got {quorum}")
         rec = SlotRecord(slot, cart, cart.handshake(), inserted_at=t,
-                         mode=mode)
+                         mode=mode, quorum=quorum)
         self.slots[slot] = rec
+        self._hub_plug(cart, hub)
         for fn in self._listeners:
             fn("insert", rec)
         return rec
 
     def remove(self, slot: int, t: float = 0.0) -> SlotRecord:
         rec = self.slots.pop(slot)
+        for cart in rec.replicas:
+            self._hub_unplug(cart)
         for fn in self._listeners:
             fn("remove", rec)
         return rec
 
     def add_replica(self, slot: int, cart: Cartridge,
-                    t: float = 0.0) -> SlotRecord:
-        """Plug an additional device of the slot's capability into the hub."""
+                    t: float = 0.0, hub: Optional[int] = None) -> SlotRecord:
+        """Plug an additional device of the slot's capability into a hub
+        (default: the primary's hub; pass ``hub=`` to span the fabric)."""
         rec = self.slots[slot]
         for other in self.slots.values():
             if cart in other.replicas:
@@ -109,6 +148,8 @@ class CapabilityRegistry:
                 f"{rec.cartridge.consumes.describe()}->"
                 f"{rec.cartridge.produces.describe()})")
         rec.replicas.append(cart)
+        self._hub_plug(cart, hub if hub is not None
+                       else self.hub_of(rec.cartridge))
         for fn in self._listeners:
             fn("add_replica", rec)
         return rec
@@ -124,6 +165,7 @@ class CapabilityRegistry:
         if len(rec.replicas) == 1:
             return self.remove(slot, t)
         rec.replicas.remove(victim)
+        self._hub_unplug(victim)
         if rec.cartridge is victim:          # promote a surviving replica
             rec.cartridge = rec.replicas[0]
             rec.handshake = rec.cartridge.handshake()
@@ -154,6 +196,21 @@ class CapabilityRegistry:
     def n_endpoints(self) -> int:
         """Total physical devices on the bus (arbitration contention)."""
         return sum(len(r.replicas) for r in self.slots.values())
+
+    # -- hub placement (multi-hub fabric) -------------------------------------
+    def hub_of(self, cart: Cartridge) -> int:
+        """Which fabric hub a device is plugged into (default hub 0)."""
+        return self._hub_of.get(id(cart), 0)
+
+    def n_endpoints_on(self, hub: int) -> int:
+        """Devices sharing one hub's arbitration domain — the contention
+        count a hub-partitioned fabric charges per transfer.  O(1): the
+        engine asks for this several times per handoff."""
+        return self._hub_counts.get(hub, 0)
+
+    def hubs(self) -> List[int]:
+        """Hub ids with at least one plugged device, sorted."""
+        return sorted(self._hub_counts)
 
     def find(self, capability_id: int) -> Optional[Cartridge]:
         for rec in self.slots.values():

@@ -11,8 +11,10 @@ measure — so benchmarks can report both curves side by side.
 """
 from __future__ import annotations
 
-from typing import Union
+import dataclasses
+from typing import List, Optional, Union
 
+from repro.bus.fabric import FabricRouter, LinkParams
 from repro.bus.simulator import BusParams, SharedBus, calibrated
 from repro.core import messages as msg
 from repro.core.cartridge import DeviceModel, FnCartridge
@@ -49,14 +51,18 @@ def _device_model(d: Union[str, BusParams, DeviceModel]) -> DeviceModel:
 
 def build_replicated_engine(device: Union[str, BusParams], n_devices: int,
                             mode: str = "broadcast",
-                            queue_cap: int = 8, **engine_kw) -> StreamEngine:
+                            queue_cap: int = 8,
+                            quorum: Optional[int] = None,
+                            **engine_kw) -> StreamEngine:
     """One lane group holding ``n_devices`` replicas of the calibrated
-    inference cartridge, all sharing one calibrated bus.  ``engine_kw``
-    passes through to ``StreamEngine`` (dispatch=, hedge=, ...)."""
+    inference cartridge, all sharing one calibrated bus.  ``quorum=k``
+    (broadcast only) decides each frame at the k-th replica completion.
+    ``engine_kw`` passes through to ``StreamEngine`` (dispatch=, hedge=,
+    ...)."""
     p = _params(device)
     reg = CapabilityRegistry()
     primary = make_inference_cartridge(p)
-    reg.insert(0, primary, mode=mode)
+    reg.insert(0, primary, mode=mode, quorum=quorum)
     for i in range(1, n_devices):
         reg.add_replica(0, primary.clone(f"{primary.name}#r{i}"))
     return StreamEngine(reg, SharedBus(p), queue_cap=queue_cap, **engine_kw)
@@ -99,9 +105,11 @@ def build_mixed_engine(devices: list, mode: str = "shard",
 def run_replicated(device: Union[str, BusParams], n_devices: int,
                    mode: str = "broadcast", n_frames: int = 200,
                    frame_bytes: int = FRAME_BYTES,
+                   quorum: Optional[int] = None,
                    **engine_kw) -> EngineReport:
     """Stream a closed-loop burst through the replicated engine."""
-    eng = build_replicated_engine(device, n_devices, mode=mode, **engine_kw)
+    eng = build_replicated_engine(device, n_devices, mode=mode,
+                                  quorum=quorum, **engine_kw)
     # interval 0 = frames always available (the experiment is closed-loop:
     # the next frame dispatches as soon as the devices can take it)
     eng.feed(n_frames, interval_s=0.0, frame_bytes=frame_bytes)
@@ -109,11 +117,13 @@ def run_replicated(device: Union[str, BusParams], n_devices: int,
 
 
 def engine_broadcast_fps(device: Union[str, BusParams], n_devices: int,
-                         n_frames: int = 200) -> float:
+                         n_frames: int = 200,
+                         quorum: Optional[int] = None) -> float:
     """Per-device FPS when every frame is broadcast to all replicas —
-    the Table 1 measurement, engine-driven."""
+    the Table 1 measurement, engine-driven.  ``quorum=k`` relaxes the
+    full barrier to first-k-of-N."""
     return run_replicated(device, n_devices, "broadcast",
-                          n_frames).throughput()
+                          n_frames, quorum=quorum).throughput()
 
 
 def engine_shard_fps(device: Union[str, BusParams], n_devices: int,
@@ -121,3 +131,131 @@ def engine_shard_fps(device: Union[str, BusParams], n_devices: int,
     """Aggregate FPS when frames are load-balanced across replicas."""
     return run_replicated(device, n_devices, "shard", n_frames,
                           **engine_kw).throughput()
+
+
+# ---------------------------------------------------------------------------
+# Multi-hub fabric topologies (the layer past the single-bus saturation knee)
+# ---------------------------------------------------------------------------
+def _hub_bus_params(i: int, specs: list, bus: Union[str, BusParams, None],
+                    fleet_default: Union[str, BusParams, None]) -> BusParams:
+    """One hub's calibration: explicit ``bus``, else the hub's first
+    calibrated device spec, else the fleet-wide default (so an empty hub
+    pre-provisioned for hot-plug matches its siblings), else a generic
+    USB3 hub."""
+    cal = bus if bus is not None else next(
+        (d for d in specs if isinstance(d, (str, BusParams))),
+        fleet_default)
+    p = _params(cal) if cal is not None else \
+        BusParams("hub", base_overhead_s=1e-4, arbitration_s=2e-4)
+    return dataclasses.replace(p, name=f"{p.name}_hub{i}")
+
+
+def build_fabric_engine(topology: List[list], mode: str = "shard",
+                        queue_cap: int = 8,
+                        bus: Union[str, BusParams, None] = None,
+                        link: Optional[LinkParams] = None,
+                        suppression: bool = True,
+                        quorum: Optional[int] = None,
+                        **engine_kw) -> StreamEngine:
+    """One lane group whose replicas span a multi-hub bus fabric.
+
+    ``topology`` is one device-spec list per hub — calibrated names,
+    ``BusParams``, or hand-built ``DeviceModel``s, exactly like
+    ``build_mixed_engine`` — e.g. ``[["ncs2"] * 4, ["ncs2"] * 4]`` is two
+    four-stick hubs (an empty list pre-provisions a hub for later
+    hot-plug).  Each hub gets its own calibrated ``SharedBus`` (so
+    arbitration scales with the hub's endpoint count, not the fleet's)
+    and the engine routes handoffs through a ``FabricRouter`` with
+    ``link`` parameters on every inter-hub channel.
+    ``suppression=False`` makes the router *execute* hedge losers'
+    routed handoffs instead of killing them (the contention baseline).
+    """
+    if not topology or not any(topology):
+        raise ValueError("need at least one hub with at least one device")
+    fleet_default = next((d for specs in topology for d in specs
+                          if isinstance(d, (str, BusParams))), None)
+    fabric = FabricRouter(
+        [_hub_bus_params(i, specs, bus, fleet_default)
+         for i, specs in enumerate(topology)],
+        link=link, suppression=suppression)
+    reg = CapabilityRegistry()
+    spec = msg.MessageSpec(msg.IMAGE_FRAME)
+    primary = None
+    for h, specs in enumerate(topology):
+        for j, dspec in enumerate(specs):
+            dv = _device_model(dspec)
+            if primary is None:
+                primary = FnCartridge(f"{dv.name}_infer", lambda p, x: x,
+                                      spec, spec, capability_id=7, device=dv)
+                reg.insert(0, primary, mode=mode, hub=h, quorum=quorum)
+            else:
+                reg.add_replica(0, primary.clone(f"{dv.name}#h{h}r{j}",
+                                                 device=dv), hub=h)
+    return StreamEngine(reg, fabric, queue_cap=queue_cap, **engine_kw)
+
+
+def run_fabric(topology: List[list], mode: str = "shard",
+               n_frames: int = 200, frame_bytes: int = FRAME_BYTES,
+               **kw) -> EngineReport:
+    """Closed-loop burst through a fabric engine (fabric counterpart of
+    ``run_replicated``)."""
+    eng = build_fabric_engine(topology, mode=mode, **kw)
+    eng.feed(n_frames, interval_s=0.0, frame_bytes=frame_bytes)
+    return eng.run(until=float("inf"))
+
+
+def fabric_shard_fps(device: Union[str, BusParams], n_hubs: int,
+                     devices_per_hub: int, n_frames: int = 200,
+                     **kw) -> float:
+    """Aggregate shard FPS of ``n_hubs`` hubs x ``devices_per_hub``
+    identical calibrated sticks — the headline the fabric exists for:
+    at equal device count, partitioned hubs beat the saturated single
+    bus because each hub arbitrates only its own endpoints."""
+    return run_fabric([[device] * devices_per_hub] * n_hubs,
+                      mode="shard", n_frames=n_frames, **kw).throughput()
+
+
+def build_cross_hub_hedge_engine(suppression: bool = True,
+                                 n_bursts: int = 120,
+                                 load: float = 0.45) -> StreamEngine:
+    """The canonical cross-hub hedging scenario — shared by
+    ``benchmarks/fabric_bench.py`` (the tracked suppression-on/off p99
+    comparison in ``BENCH_fabric.json``) and the test suite, so the
+    invariants the tests pin are measured on the exact workload the
+    benchmark reports.
+
+    Two jittery Coral-class lanes on hub 0, two clean ones plus the
+    post-processing stage on hub 1, slow hub buses at near-critical
+    load, bursty arrivals: stalls on hub 0 hedge onto hub 1 (cross-hub
+    backup copies, charged ingress-only to hub 1), and loser results
+    would route hub 0 -> link -> hub 1 if the router did not suppress
+    them."""
+    svc = 0.012
+    jit = DeviceModel(name="coral_hot", service_s=svc,
+                      jitter_p=0.12, jitter_mult=20.0)
+    fast = DeviceModel(name="coral", service_s=svc)
+    reg = CapabilityRegistry()
+    spec = msg.MessageSpec(msg.IMAGE_FRAME)
+    infer = FnCartridge("infer", lambda p, x: x, spec, spec,
+                        capability_id=7, device=jit)
+    reg.insert(0, infer, mode="shard", hub=0)
+    reg.add_replica(0, infer.clone("infer#j1", device=jit), hub=0)
+    reg.add_replica(0, infer.clone("infer#f0", device=fast), hub=1)
+    reg.add_replica(0, infer.clone("infer#f1", device=fast), hub=1)
+    reg.insert(1, FnCartridge("post", lambda p, x: x, spec, spec,
+                              capability_id=8,
+                              device=DeviceModel(name="post",
+                                                 service_s=0.002)),
+               mode="shard", hub=1)
+    fabric = FabricRouter(
+        [BusParams("hub0", bandwidth=60e6, base_overhead_s=3e-4,
+                   arbitration_s=3e-4),
+         BusParams("hub1", bandwidth=60e6, base_overhead_s=3e-4,
+                   arbitration_s=3e-4)],
+        link=LinkParams(bandwidth=120e6, overhead_s=2e-4),
+        suppression=suppression)
+    eng = StreamEngine(reg, fabric, hedge=True, hedge_quantile=0.8)
+    period = 5 / (load * (4 / svc))
+    for i in range(n_bursts):
+        eng.feed(5, interval_s=0.0, t0=i * period)
+    return eng

@@ -1,0 +1,144 @@
+"""Hypothesis property tests for bus accounting invariants, run against
+BOTH arbitration models through one shared suite: the single ``SharedBus``
+and the hub-partitioned ``FabricRouter`` (whose aggregate stats must obey
+the same identities summed over hubs + links).
+
+Invariants pinned:
+
+  * accounting identity — ``busy_s == wire_s + arbitration_s + overhead``
+    where overhead is each domain's per-transfer fixed cost times its
+    transfer count;
+  * ``free_at`` monotonicity — every FIFO domain's ``free_at`` never
+    decreases, and every returned completion is >= its request time;
+  * ``suppress`` is pure accounting — it never mutates transfer counts,
+    payload bytes, busy time, or any ``free_at``.
+"""
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as stn
+
+from repro.bus import BusParams, FabricRouter, LinkParams, SharedBus
+
+settings.register_profile("ci", max_examples=30, deadline=None)
+settings.load_profile("ci")
+
+N_HUBS = 3
+HUB_PARAMS = BusParams("p", bandwidth=100e6, base_overhead_s=2e-4,
+                       arbitration_s=1e-4)
+LINK = LinkParams(bandwidth=300e6, overhead_s=1e-4)
+
+
+def _make_shared():
+    return SharedBus(HUB_PARAMS)
+
+
+def _make_fabric():
+    return FabricRouter([HUB_PARAMS] * N_HUBS, link=LINK)
+
+
+MAKERS = [pytest.param(_make_shared, id="shared_bus"),
+          pytest.param(_make_fabric, id="fabric_router")]
+
+
+# one request: (inter-request gap, nbytes, n_endpoints, src hub, dst hub);
+# SharedBus ignores the hub coordinates, the router routes on them
+requests = stn.lists(
+    stn.tuples(stn.floats(0.0, 0.05, allow_nan=False),
+               stn.integers(1, 400_000),
+               stn.integers(1, 6),
+               stn.integers(0, N_HUBS - 1),
+               stn.integers(0, N_HUBS - 1)),
+    min_size=1, max_size=40)
+
+
+def _drive(bus, seq):
+    """Replay a request sequence; returns the completion times."""
+    t, dones = 0.0, []
+    for gap, nbytes, n_end, src, dst in seq:
+        t += gap
+        if isinstance(bus, FabricRouter):
+            dones.append(bus.transfer(t, nbytes, n_end, src=src, dst=dst,
+                                      dst_endpoints=n_end))
+        else:
+            dones.append(bus.transfer(t, nbytes, n_end))
+    return dones
+
+
+def _domains(bus):
+    """Every FIFO domain inside a bus-like object, with its per-transfer
+    fixed overhead (the piece of the accounting identity that is not wire
+    or arbitration time)."""
+    if isinstance(bus, FabricRouter):
+        return [(h.bus, h.bus.p.base_overhead_s) for h in bus.hubs] + \
+            [(lk, lk.p.overhead_s) for lk in bus._links.values()]
+    return [(bus, bus.p.base_overhead_s)]
+
+
+def _raw_totals(bus):
+    """(busy, wire, arbitration, expected_overhead) from unrounded
+    attributes — ``stats()`` rounds to 6 decimals, too coarse here."""
+    busy = wire = arb = overhead = 0.0
+    for dom, per_transfer in _domains(bus):
+        busy += dom.busy_s
+        wire += dom.wire_s
+        arb += getattr(dom, "arbitration_s_total", 0.0)
+        overhead += per_transfer * dom.transfers
+    return busy, wire, arb, overhead
+
+
+@pytest.mark.parametrize("make", MAKERS)
+@given(seq=requests)
+def test_accounting_identity(make, seq):
+    bus = make()
+    _drive(bus, seq)
+    busy, wire, arb, overhead = _raw_totals(bus)
+    assert busy == pytest.approx(wire + arb + overhead, rel=1e-9, abs=1e-12)
+
+
+@pytest.mark.parametrize("make", MAKERS)
+@given(seq=requests)
+def test_free_at_monotone_and_completions_causal(make, seq):
+    bus = make()
+    t, frees = 0.0, {}
+    for gap, nbytes, n_end, src, dst in seq:
+        t += gap
+        if isinstance(bus, FabricRouter):
+            done = bus.transfer(t, nbytes, n_end, src=src, dst=dst)
+        else:
+            done = bus.transfer(t, nbytes, n_end)
+        assert done >= t                    # causality
+        for dom, _ in _domains(bus):
+            prev = frees.get(id(dom), 0.0)
+            assert dom.free_at >= prev      # FIFO never rewinds
+            frees[id(dom)] = dom.free_at
+
+
+@pytest.mark.parametrize("make", MAKERS)
+@given(seq=requests, sup=stn.lists(
+    stn.tuples(stn.integers(1, 400_000),
+               stn.integers(0, N_HUBS - 1),
+               stn.integers(0, N_HUBS - 1)),
+    min_size=1, max_size=10))
+def test_suppress_never_mutates_transfer_accounting(make, seq, sup):
+    bus = make()
+    _drive(bus, seq)
+    if isinstance(bus, FabricRouter):
+        # materialize every link up front so suppression can't change the
+        # domain list between the before/after snapshots
+        for a in range(N_HUBS):
+            for b in range(a + 1, N_HUBS):
+                bus.link(a, b)
+    before = (_raw_totals(bus),
+              [(dom.transfers, dom.bytes_moved, dom.free_at)
+               for dom, _ in _domains(bus)])
+    for nbytes, src, dst in sup:
+        if isinstance(bus, FabricRouter):
+            bus.suppress(nbytes, src=src, dst=dst, t=0.0)
+        else:
+            bus.suppress(nbytes)
+    after = (_raw_totals(bus),
+             [(dom.transfers, dom.bytes_moved, dom.free_at)
+              for dom, _ in _domains(bus)])
+    assert before == after
+    assert bus.suppressed_transfers == len(sup)

@@ -1,0 +1,311 @@
+"""Multi-hub bus fabric: router cost model, hub-partitioned arbitration,
+engine integration (routed handoffs, cross-hub hedging, suppression)."""
+import pytest
+
+from repro.bus import (BusParams, FabricRouter, LinkParams, SharedBus,
+                       TABLE1, calibrated, simulate_broadcast_fps,
+                       uniform_fabric)
+from repro.core import messages as msg
+from repro.core.cartridge import DeviceModel, FnCartridge
+from repro.runtime import (CapabilityRegistry, StreamEngine,
+                           build_cross_hub_hedge_engine,
+                           build_fabric_engine, engine_shard_fps,
+                           fabric_shard_fps, run_fabric)
+
+SPEC = msg.MessageSpec(msg.IMAGE_FRAME)
+
+PARAMS = BusParams("hub", bandwidth=100e6, base_overhead_s=2e-4,
+                   arbitration_s=1e-4)
+LINK = LinkParams(bandwidth=300e6, overhead_s=1e-4)
+
+
+def _router(n_hubs=2, suppression=True):
+    return uniform_fabric(PARAMS, n_hubs, link=LINK, suppression=suppression)
+
+
+# -- router cost model --------------------------------------------------------
+def test_local_route_identical_to_bare_bus():
+    """A one-hub router (and any same-hub route) is bit-identical to the
+    bare SharedBus it wraps."""
+    bus = SharedBus(PARAMS)
+    fab = _router(1)
+    reqs = [(0.0, 150528, 3), (0.001, 40000, 3), (0.5, 150528, 1),
+            (0.5001, 9000, 5)]
+    for t, nbytes, n_end in reqs:
+        assert fab.transfer(t, nbytes, n_end) == \
+            bus.transfer(t, nbytes, n_end)
+    assert fab.hubs[0].bus.stats() == bus.stats()
+
+
+def test_cross_hub_route_serializes_three_legs():
+    fab = _router(2)
+    nbytes = 100_000
+    done = fab.transfer(0.0, nbytes, n_endpoints=2, src=0, dst=1,
+                        dst_endpoints=3)
+    # unloaded route cost: egress + link + ingress, each with its own
+    # overhead/arbitration terms
+    egress = PARAMS.base_overhead_s + PARAMS.arbitration_s * 1 \
+        + nbytes / PARAMS.bandwidth
+    link = LINK.overhead_s + nbytes / LINK.bandwidth
+    ingress = PARAMS.base_overhead_s + PARAMS.arbitration_s * 2 \
+        + nbytes / PARAMS.bandwidth
+    assert done == pytest.approx(egress + link + ingress)
+    assert fab.cross_hub_transfers == 1
+    assert fab.hubs[0].bus.transfers == 1
+    assert fab.hubs[1].bus.transfers == 1
+    assert fab.link(0, 1).transfers == 1
+    # a second transfer queues FIFO behind the first on every leg
+    done2 = fab.transfer(0.0, nbytes, 2, src=0, dst=1, dst_endpoints=3)
+    assert done2 > done
+
+
+def test_one_sided_routes_collapse_to_local():
+    """src-only (egress to host) and dst-only (host fan-in) routes touch
+    exactly one hub bus and no link."""
+    fab = _router(3)
+    fab.transfer(0.0, 1000, 1, src=2)
+    fab.transfer(0.0, 1000, 1, dst=1)
+    assert fab.hubs[2].bus.transfers == 1
+    assert fab.hubs[1].bus.transfers == 1
+    assert fab.hubs[0].bus.transfers == 0
+    assert not fab._links           # no link ever materialized
+    assert fab.cross_hub_transfers == 0
+
+
+def test_router_stats_aggregate_and_breakdown():
+    fab = _router(2)
+    fab.transfer(0.0, 50_000, 2, src=0, dst=1)
+    fab.transfer(0.0, 50_000, 1, src=1, dst=1)
+    s = fab.stats()
+    assert s["n_hubs"] == 2
+    assert s["transfers"] == 4          # 2 hub legs + 1 local + 1 link
+    assert s["cross_hub_transfers"] == 1
+    assert set(s["hubs"]) == {0, 1}
+    assert "0<->1" in s["links"]
+    assert s["busy_s"] == pytest.approx(
+        s["hubs"][0]["busy_s"] + s["hubs"][1]["busy_s"]
+        + s["links"]["0<->1"]["busy_s"], abs=1e-5)
+
+
+def test_suppress_saves_link_and_destination_hub_time():
+    """Cross-hub suppression books savings in every domain on the route —
+    the source hub, the link, AND the destination hub."""
+    fab = _router(2)
+    nbytes = 150_528
+    fab.suppress(nbytes, src=0, dst=1, t=0.0)
+    s = fab.stats()
+    assert s["suppressed_transfers"] == 1
+    assert s["suppressed_bytes"] == nbytes
+    assert s["hubs"][0]["suppressed_transfers"] == 1
+    assert s["hubs"][1]["suppressed_transfers"] == 1
+    assert s["links"]["0<->1"]["suppressed_transfers"] == 1
+    expect = 2 * (PARAMS.base_overhead_s + nbytes / PARAMS.bandwidth) \
+        + LINK.overhead_s + nbytes / LINK.bandwidth
+    assert s["suppressed_saved_s"] == pytest.approx(expect, abs=1e-6)
+    # suppression moved no payload and consumed no bus time
+    assert s["transfers"] == 0
+    assert s["busy_s"] == 0.0
+    # local suppression saves strictly less (no link, no second hub)
+    fab2 = _router(2)
+    fab2.suppress(nbytes, src=0, t=0.0)
+    assert fab2.stats()["suppressed_saved_s"] < expect
+
+
+def test_suppression_disabled_executes_the_wasted_route():
+    fab = _router(2, suppression=False)
+    fab.suppress(100_000, src=0, dst=1, t=0.0)
+    s = fab.stats()
+    assert s["wasted_transfers"] == 1
+    assert s["suppressed_transfers"] == 0
+    assert s["transfers"] == 3          # the route really ran: 3 legs
+    assert s["busy_s"] > 0.0
+
+
+# -- engine on a one-hub fabric == engine on the bare bus ---------------------
+@pytest.mark.parametrize("device", sorted(TABLE1))
+def test_single_hub_fabric_reproduces_table1(device):
+    """Swapping the router in where SharedBus sits today must not move
+    the paper reproduction: a 1-hub fabric broadcast matches the
+    closed-form simulator exactly."""
+    p = calibrated(device)
+    for n in (1, 3, 5):
+        rep = run_fabric([[device] * n], mode="broadcast", n_frames=100)
+        assert rep.throughput() == pytest.approx(
+            simulate_broadcast_fps(p, n, n_frames=100), rel=1e-6)
+
+
+def test_single_hub_fabric_shard_matches_single_bus():
+    base = engine_shard_fps("ncs2", 4, n_frames=150)
+    fab = fabric_shard_fps("ncs2", 1, 4, n_frames=150)
+    assert fab == pytest.approx(base, rel=1e-6)
+
+
+# -- the headline: hub partitioning beats the saturated single bus ------------
+def test_multi_hub_beats_single_bus_at_equal_device_count():
+    single = engine_shard_fps("ncs2", 8, n_frames=200)
+    two_hub = fabric_shard_fps("ncs2", 2, 4, n_frames=200)
+    four_hub = fabric_shard_fps("ncs2", 4, 2, n_frames=200)
+    assert two_hub > single
+    assert four_hub > single
+    # and past the paper's 5-device knee
+    knee = max(engine_shard_fps("ncs2", n, n_frames=200)
+               for n in (4, 5, 6))
+    assert two_hub > knee
+
+
+def test_per_hub_arbitration_domain():
+    """The fabric charges arbitration against the hub's endpoint count,
+    not the fleet's: 2x2 sees max 2 endpoints per hub, 1x4 sees 4."""
+    rep = run_fabric([["ncs2"] * 2, ["ncs2"] * 2], n_frames=60)
+    assert rep.bus["max_endpoints"] == 2
+    assert rep.bus["n_hubs"] == 2
+    single = run_fabric([["ncs2"] * 4], n_frames=60)
+    assert single.bus["max_endpoints"] == 4
+
+
+def test_fabric_engine_conserves_frames_and_reports_hubs():
+    rep = run_fabric([["ncs2"] * 2, ["ncs2"] * 3], n_frames=120)
+    assert rep.frames_out == 120, f"lost {rep.lost}"
+    assert sorted(rep.groups[0]["hubs"]) == [0, 0, 1, 1, 1]
+    per_lane = [rep.stage_stats[n].processed
+                for n in rep.groups[0]["lanes"]]
+    assert sum(per_lane) == 120
+    assert min(per_lane) > 0           # every hub pulled weight
+
+
+# -- registry hub bookkeeping -------------------------------------------------
+def test_registry_hub_placement_roundtrip():
+    reg = CapabilityRegistry()
+    a = FnCartridge("a", lambda p, x: x, SPEC, SPEC, capability_id=7,
+                    device=DeviceModel(service_s=0.02))
+    reg.insert(0, a, hub=1)
+    b, c = a.clone(), a.clone()
+    reg.add_replica(0, b)              # defaults to the primary's hub
+    reg.add_replica(0, c, hub=2)
+    assert reg.hub_of(a) == reg.hub_of(b) == 1
+    assert reg.hub_of(c) == 2
+    assert reg.hubs() == [1, 2]
+    assert reg.n_endpoints_on(1) == 2
+    assert reg.n_endpoints_on(2) == 1
+    assert reg.n_endpoints_on(0) == 0
+    reg.remove_replica(0, c)
+    assert reg.hubs() == [1]
+    reg.remove(0)
+    assert reg.hub_of(a) == 0          # forgotten -> default hub
+
+
+def test_registry_quorum_validation():
+    reg = CapabilityRegistry()
+    cart = FnCartridge("a", lambda p, x: x, SPEC, SPEC, capability_id=7)
+    with pytest.raises(ValueError):
+        reg.insert(0, cart, mode="shard", quorum=2)
+    with pytest.raises(ValueError):
+        reg.insert(0, cart, mode="broadcast", quorum=0)
+    rec = reg.insert(0, cart, mode="broadcast", quorum=2)
+    assert rec.quorum == 2
+
+
+def test_build_fabric_engine_rejects_empty_topology():
+    with pytest.raises(ValueError):
+        build_fabric_engine([])
+    with pytest.raises(ValueError):
+        build_fabric_engine([[]])
+
+
+def test_bad_hub_placement_fails_at_plug_time():
+    """An out-of-range (or negative) hub id must fail loudly when the
+    lane is plugged, not frames later inside a routed transfer — and
+    never wrap to the wrong hub's accounting."""
+    eng = build_fabric_engine([["ncs2"], ["ncs2"]], mode="shard")
+    primary = eng.registry.slots[0].cartridge
+    for bad in (7, -1):
+        eng.schedule_add_replica(0.1, slot=0,
+                                 cart=primary.clone(f"bad#{bad}"), hub=bad)
+        with pytest.raises(ValueError, match="hub"):
+            eng.run(until=1.0)
+        eng.registry.remove_replica(0, eng.registry.slots[0].replicas[-1])
+    # the router itself also refuses bad routes
+    fab = _router(2)
+    with pytest.raises(ValueError, match="hub"):
+        fab.transfer(0.0, 1000, 1, src=0, dst=5)
+
+
+def test_suppression_disabled_requires_request_time():
+    """With suppression off the router executes the wasted route, so a
+    SharedBus-shaped suppress(nbytes) call must fail loudly instead of
+    silently booking a phantom transfer."""
+    fab = _router(2, suppression=False)
+    with pytest.raises(ValueError, match="request"):
+        fab.suppress(1000)
+    fab2 = _router(2, suppression=True)
+    fab2.suppress(1000)                    # accounting-only: t optional
+    assert fab2.suppressed_transfers == 1
+
+
+# -- cross-hub hedging --------------------------------------------------------
+# the scenario builder is shared with benchmarks/fabric_bench.py, so the
+# invariants pinned here hold on the exact workload BENCH_fabric.json
+# reports (jittery lanes on hub 0 hedging onto clean hub-1 lanes)
+_hedged_cross_hub_engine = build_cross_hub_hedge_engine
+
+
+def test_cross_hub_hedge_exactly_once():
+    eng = _hedged_cross_hub_engine()
+    rep = eng.run(until=1e12)
+    assert rep.frames_out == 600, f"lost {rep.lost}"
+    assert rep.hedges["cross_hub"] > 0
+    # every decided hedge race was fully cleaned up
+    assert not eng._hedges
+
+
+def test_cross_hub_hedge_suppression_routed_through_link():
+    """Hedge losers on the fabric are suppressed at the router: the saved
+    time shows up on the link and on BOTH hubs of the route, not just the
+    loser's local bus (the charging primitive itself — ingress-only for
+    copies, full-route for suppressions — is pinned by the router unit
+    tests above)."""
+    rep = _hedged_cross_hub_engine().run(until=1e12)
+    assert rep.hedges["cross_hub"] > 0
+    assert rep.bus["suppressed_saved_s"] > 0.0
+    link_stats = rep.bus["links"].get("0<->1")
+    assert link_stats is not None
+    assert link_stats["suppressed_transfers"] > 0
+    assert rep.bus["hubs"][1]["suppressed_transfers"] > 0
+
+
+def test_cross_hub_migration_charged_and_zero_loss():
+    """A stalled hub-0 lane's queued backlog migrates to hub-1 lanes as a
+    real host re-send: charged ingress on the destination hub, delivered
+    only after the transfer lands, and — unlike a hedge copy — never
+    dropped (each migrated frame is its only live instance)."""
+    bad = DeviceModel(name="bad", service_s=0.02,
+                      jitter_p=1.0, jitter_mult=25.0)
+    good = DeviceModel(name="good", service_s=0.02)
+    reg = CapabilityRegistry()
+    infer = FnCartridge("infer", lambda p, x: x, SPEC, SPEC,
+                        capability_id=7, device=bad)
+    reg.insert(0, infer, mode="shard", hub=0)
+    reg.add_replica(0, infer.clone("infer#g0", device=good), hub=1)
+    reg.add_replica(0, infer.clone("infer#g1", device=good), hub=1)
+    fabric = FabricRouter([BusParams("hub0", base_overhead_s=1e-4),
+                           BusParams("hub1", base_overhead_s=1e-4)],
+                          link=LINK)
+    eng = StreamEngine(reg, fabric, hedge=True)
+    for i in range(60):
+        eng.feed(6, interval_s=0.0, t0=i * 0.045)
+    rep = eng.run(until=1e12)
+    assert rep.frames_out == 360, f"lost {rep.lost}"
+    assert rep.hedges["migrated"] > 0
+    assert not eng._hedges
+
+
+def test_router_suppression_improves_tail():
+    on = _hedged_cross_hub_engine(suppression=True).run(until=1e12)
+    off = _hedged_cross_hub_engine(suppression=False).run(until=1e12)
+    assert on.frames_out == off.frames_out == 600
+    assert off.bus["wasted_transfers"] > 0
+    assert on.bus["wasted_transfers"] == 0
+    assert on.bus["suppressed_transfers"] > 0
+    # suppression never makes the tail worse, and saves real bus time
+    assert on.p99() <= off.p99()
+    assert on.bus["busy_s"] < off.bus["busy_s"]

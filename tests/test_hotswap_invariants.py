@@ -1,13 +1,16 @@
 """Regression suite for the zero-loss hot-swap invariant (paper §4.2):
 ``frames_in == frames_out`` must survive every reconfiguration sequence —
-bridged removals, halt-until-insert gaps, and removals timed to land while
-frames are mid-transfer on the bus."""
+bridged removals, halt-until-insert gaps, removals timed to land while
+frames are mid-transfer on the bus, and replica churn on a *remote hub*
+of the multi-hub fabric (which must degrade that hub's share of the
+throughput without pausing the others)."""
 import pytest
 
 from repro.bus import BusParams, SharedBus
 from repro.core import messages as msg
 from repro.core.cartridge import DeviceModel, FnCartridge
-from repro.runtime import CapabilityRegistry, StreamEngine
+from repro.runtime import (CapabilityRegistry, StreamEngine,
+                           build_fabric_engine)
 
 SPEC = msg.MessageSpec(msg.IMAGE_FRAME)
 
@@ -144,3 +147,86 @@ def test_remove_head_stage_conserves_frames():
     eng.schedule_remove(0.8, slot=0)
     rep = eng.run(until=60)
     _conserved(rep, 70)
+
+
+# -- cross-hub hot-swap (multi-hub fabric) ------------------------------------
+def _remote_replica(eng, hub):
+    reg = eng.registry
+    return next(c for c in reg.slots[0].replicas if reg.hub_of(c) == hub)
+
+
+@pytest.mark.parametrize("t_remove", [0.3, 0.9, 1.7])
+def test_remove_remote_hub_replica_degrades_without_pause(t_remove):
+    """Pulling a stick from hub 1 must not pause hub 0: zero downtime,
+    zero loss, and every surviving lane — on both hubs — keeps working."""
+    eng = build_fabric_engine([["ncs2"] * 2, ["ncs2"] * 2], mode="shard")
+    victim = _remote_replica(eng, hub=1)
+    eng.feed(200, interval_s=0.008)
+    eng.schedule_remove_replica(t_remove, slot=0, cart=victim)
+    rep = eng.run(until=120)
+    _conserved(rep, 200)
+    assert rep.total_downtime() == 0.0       # no pipeline pause
+    assert not rep.alerts                    # no operator alert
+    assert rep.groups[0]["hubs"].count(1) == 1   # hub 1 degraded ...
+    assert rep.groups[0]["hubs"].count(0) == 2   # ... hub 0 untouched
+    for name in rep.groups[0]["lanes"]:
+        assert rep.stage_stats[name].processed > 0
+    assert rep.stage_stats[victim.name].processed > 0  # worked, then left
+
+
+def test_remove_entire_remote_hub_conserves_frames():
+    """Unplugging BOTH hub-1 sticks mid-stream leaves a one-hub group:
+    degraded throughput, zero loss, no pause at any point."""
+    eng = build_fabric_engine([["ncs2"] * 2, ["ncs2"] * 2], mode="shard")
+    reg = eng.registry
+    victims = [c for c in reg.slots[0].replicas if reg.hub_of(c) == 1]
+    eng.feed(160, interval_s=0.01)
+    eng.schedule_remove_replica(0.5, slot=0, cart=victims[0])
+    eng.schedule_remove_replica(0.9, slot=0, cart=victims[1])
+    rep = eng.run(until=120)
+    _conserved(rep, 160)
+    assert rep.total_downtime() == 0.0
+    assert rep.groups[0]["hubs"] == [0, 0]
+    assert reg.hubs() == [0]
+
+
+def test_insert_replica_on_remote_hub_joins_and_speeds_up():
+    """Hot-plugging a stick into a *different* hub mid-stream: no pause,
+    the lane joins after its handshake, and the added hub pulls weight."""
+    def run(add_remote):
+        # second hub pre-provisioned but empty until the hot-plug lands
+        eng = build_fabric_engine([["ncs2"] * 2, []], mode="shard")
+        if add_remote:
+            primary = eng.registry.slots[0].cartridge
+            newbie = primary.clone(
+                "late#h1", device=DeviceModel(name="ncs2",
+                                              service_s=primary.
+                                              device.service_s,
+                                              load_s=0.2))
+            eng.schedule_add_replica(0.3, slot=0, cart=newbie, hub=1)
+        # arrivals keep coming after the join, slightly over 2-stick
+        # capacity, so the late lane has work to steal
+        eng.feed(150, interval_s=0.03)
+        return eng.run(until=300)
+
+    solo = run(False)
+    grown = run(True)
+    assert solo.frames_out == grown.frames_out == 150
+    assert grown.total_downtime() == 0.0
+    assert grown.sim_time < solo.sim_time    # the remote stick helped
+    assert sorted(grown.groups[0]["hubs"]) == [0, 0, 1]
+    assert grown.stage_stats["late#h1"].processed > 0
+
+
+def test_cross_hub_swap_under_hedged_dispatch_conserves_frames():
+    """Replica churn on a remote hub while hedging is live: exactly-once
+    delivery and zero loss must survive the rebuild."""
+    eng = build_fabric_engine([["ncs2"] * 2, ["ncs2"] * 2], mode="shard",
+                              hedge=True)
+    victim = _remote_replica(eng, hub=1)
+    for i in range(40):
+        eng.feed(5, interval_s=0.0, t0=i * 0.05)
+    eng.schedule_remove_replica(0.7, slot=0, cart=victim)
+    rep = eng.run(until=300)
+    _conserved(rep, 200)
+    assert eng._hedges == {}                 # every race fully resolved

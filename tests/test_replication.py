@@ -229,6 +229,108 @@ def test_mid_chain_replicated_group_zero_loss():
     assert mid_total == 120
 
 
+# -- quorum broadcast (first k of N results win) -------------------------------
+@pytest.mark.parametrize("device", sorted(TABLE1))
+def test_quorum_full_preserves_table1_parity(device):
+    """quorum=N is the paper's full barrier: bit-identical FPS to the
+    unqualified broadcast (and therefore to Table 1)."""
+    for n in (2, 5):
+        assert engine_broadcast_fps(device, n, n_frames=80, quorum=n) == \
+            engine_broadcast_fps(device, n, n_frames=80)
+
+
+def test_quorum_relaxes_the_barrier_monotonically():
+    """Smaller quorums decide earlier: fps(k=1) >= fps(k=3) >= fps(k=5),
+    strictly above the full barrier, without losing any replica's work."""
+    full = run_replicated("ncs2", 5, "broadcast", 100)
+    q3 = run_replicated("ncs2", 5, "broadcast", 100, quorum=3)
+    q1 = run_replicated("ncs2", 5, "broadcast", 100, quorum=1)
+    assert q1.throughput() >= q3.throughput() > full.throughput()
+    # every replica still computed every frame (redundancy preserved)
+    for name in q3.groups[0]["lanes"]:
+        assert q3.stage_stats[name].processed == 100
+    assert q3.groups[0]["quorum"] == 3
+
+
+def test_quorum_stragglers_suppressed_on_bus():
+    """Each frame's N-k stragglers lose their result handoff via the
+    existing SharedBus.suppress path (pure accounting, no bus time)."""
+    q3 = run_replicated("ncs2", 5, "broadcast", 60, quorum=3)
+    assert q3.bus["suppressed_transfers"] == 60 * (5 - 3)
+    assert q3.bus["suppressed_bytes"] > 0
+    full = run_replicated("ncs2", 5, "broadcast", 60)
+    assert full.bus["suppressed_transfers"] == 0
+    # frames still conserved end to end
+    assert q3.frames_out == 60
+
+
+def test_quorum_straggler_serializes_and_reports_lag():
+    """A replica cannot be >100% utilized: under quorum each lane's next
+    frame gates on its own previous finish, so a permanently slow stick
+    accumulates visible backlog (``straggler_lag_s``) instead of
+    inflating throughput — and the quorum pace is set by the lanes that
+    actually keep up."""
+    reg = CapabilityRegistry()
+    fast = _cart("fast", service_s=0.03)
+    reg.insert(0, fast, mode="broadcast", quorum=1)
+    reg.add_replica(0, fast.clone("slow", device=DeviceModel(
+        service_s=0.3)))
+    eng = StreamEngine(reg, _bus())
+    eng.feed(120, interval_s=0.0)
+    rep = eng.run(until=1e9)
+    assert rep.frames_out == 120
+    # pace ~= the fast lane's service rate, not faster
+    assert rep.sim_time >= 120 * 0.03
+    lag = dict(zip(rep.groups[0]["lanes"], rep.groups[0]["straggler_lag_s"]))
+    assert lag["fast"] == 0.0
+    assert lag["slow"] > 10.0            # real, visible backlog
+    # full-barrier groups never lag
+    full = run_replicated("ncs2", 3, "broadcast", 40)
+    assert full.groups[0]["straggler_lag_s"] == [0.0, 0.0, 0.0]
+
+
+def test_quorum_ties_still_count_as_stragglers():
+    """On a symmetric multi-hub fabric, replicas on different unloaded
+    hubs finish at exactly the same instant; a tie with the k-th
+    completion is still a loser (only k results are fetched), so the
+    per-frame N-k suppression accounting must hold under exact ties."""
+    from repro.runtime import run_fabric
+
+    rep = run_fabric([["ncs2"], ["ncs2"]], mode="broadcast", n_frames=40,
+                     quorum=1)
+    assert rep.frames_out == 40
+    assert rep.bus["suppressed_transfers"] == 40 * (2 - 1)
+
+
+def test_quorum_larger_than_group_clamps():
+    assert engine_broadcast_fps("coral", 3, n_frames=60, quorum=7) == \
+        engine_broadcast_fps("coral", 3, n_frames=60)
+
+
+def test_quorum_tames_jittery_replica_tail():
+    """The ROADMAP motivation: a redundant group with one stalling stick.
+    Full-barrier broadcast waits out every stall; quorum=2 of 3 decides
+    without the straggler and cuts p99."""
+    def _run(quorum):
+        reg = CapabilityRegistry()
+        primary = _cart("infer", service_s=0.03)
+        reg.insert(0, primary, mode="broadcast", quorum=quorum)
+        reg.add_replica(0, primary.clone())
+        jittery = primary.clone()
+        jittery.device = DeviceModel(service_s=0.03, jitter_p=0.2,
+                                     jitter_mult=10.0)
+        reg.add_replica(0, jittery)
+        eng = StreamEngine(reg, _bus())
+        eng.feed(120, interval_s=0.0)
+        return eng.run(until=1e9)
+
+    full = _run(None)
+    q2 = _run(2)
+    assert full.frames_out == q2.frames_out == 120
+    assert q2.p99() < full.p99()
+    assert q2.throughput() > full.throughput()
+
+
 # -- adaptive micro-batching ---------------------------------------------------
 def test_microbatching_drains_backlog_faster():
     def burst(microbatch):
