@@ -14,14 +14,15 @@ import json
 import time
 
 from benchmarks import (bus_scaling, fabric_bench, gallery_bench, hotswap,
-                        latency_bench, pipeline_latency, power_model,
-                        roofline_report, secure_match)
+                        latency_bench, pipeline_latency, power_bench,
+                        power_model, roofline_report, secure_match)
 
 BENCHES = [
     ("table1_bus_scaling", bus_scaling.run, "pass_pm1fps"),
     ("s4_2_pipeline_latency", pipeline_latency.run, "in_paper_band"),
     ("s4_2_hotswap", hotswap.run, "zero_loss"),
     ("s4_3_power_model", power_model.run, "in_band"),
+    ("s4_3_power_governor", power_bench.run, "pass_power"),
     ("s3_encrypted_matching", secure_match.run, "identical_all"),
     ("identification_fastpath", gallery_bench.run, "pass_fastpath"),
     ("tail_latency_fastpath", latency_bench.run, "pass_tail"),

@@ -218,6 +218,44 @@ class FabricRouter:
                              f"this fabric has hubs 0..{n - 1}")
         return src, dst
 
+    def route_cost(self, src: Optional[int] = None,
+                   dst: Optional[int] = None, nbytes: int = 0,
+                   t: Optional[float] = None) -> float:
+        """Estimated seconds to route ``nbytes`` from ``src`` to ``dst``
+        — the dispatch-time toll a fabric-aware ``pick_lane`` folds into
+        its completion estimate.
+
+        A local route is one hub-bus transfer; a cross-hub route sums
+        its three legs (src egress + link + dst ingress).  With ``t``
+        given, each leg also charges its *current FIFO backlog*
+        (``free_at - t``): a hot link or saturated destination hub makes
+        remote lanes look exactly as expensive as they are right now.
+        Legs queue sequentially, so summing the waits is a (cheap,
+        slightly pessimistic) upper estimate.  Pure query: no counters
+        move, no lazy link is materialized.
+        """
+        s, d = self._route(src, dst)
+        if s == d:
+            h = self.hubs[s]
+            c = h.local_cost(nbytes)
+            if t is not None:
+                c += max(h.bus.free_at - t, 0.0)
+            return c
+        hs, hd = self.hubs[s], self.hubs[d]
+        c = hs.local_cost(nbytes) + hd.local_cost(nbytes)
+        key = (s, d) if s <= d else (d, s)
+        lk = self._links.get(key)
+        if lk is not None:
+            c += lk.cost(nbytes)
+            if t is not None:
+                c += max(lk.free_at - t, 0.0)
+        else:
+            p = self._link_params.get(key, self._default_link)
+            c += p.overhead_s + nbytes / p.bandwidth
+        if t is not None:
+            c += max(hs.bus.free_at - t, 0.0) + max(hd.bus.free_at - t, 0.0)
+        return c
+
     # -- the SharedBus-compatible surface -------------------------------------
     @property
     def bytes_moved(self) -> int:

@@ -11,7 +11,6 @@ dominates the 2 s re-insert pause).
 from __future__ import annotations
 
 import copy
-import itertools
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
@@ -44,6 +43,15 @@ class DeviceModel:
     # calibrated Table 1 devices are jitter-free.
     jitter_p: float = 0.0
     jitter_mult: float = 10.0
+    # Thermal calibration (§4.3 power governor).  ``therm_tau_s`` is the
+    # stick's thermal time constant: the smoothing horizon over which the
+    # governor estimates a hub's electrical draw (enclosure heat mass —
+    # a bare USB stick in free air settles within ~a second).
+    # ``min_duty`` is the deepest duty cycle throttling may impose before
+    # the governor parks the hub instead: below it the per-frame latency
+    # stretch stops being worth the trickle of throughput.
+    therm_tau_s: float = 1.0
+    min_duty: float = 0.2
 
 
 class Cartridge:
@@ -62,6 +70,7 @@ class Cartridge:
             self.name = name
         self._fn = None
         self._loaded = False
+        self._clone_seq = 0
         self.stats = {"processed": 0, "busy_s": 0.0}
 
     # -- lifecycle ----------------------------------------------------------
@@ -90,26 +99,32 @@ class Cartridge:
         return np.zeros(sh, dt)
 
     # -- replication ---------------------------------------------------------
-    _replica_seq = itertools.count(1)
-
     def clone(self, name: Optional[str] = None,
               device: Optional[DeviceModel] = None) -> "Cartridge":
         """A replica of this cartridge on another physical device.
 
         Shares the (immutable) params and compiled fn — the same bitstream
-        flashed onto a second stick — but carries its own identity and
-        runtime stats so the scheduler can track per-lane load.  Pass
-        ``device`` to flash it onto a *different* accelerator type
-        (heterogeneous lane group: e.g. an NCS2 primary with Coral
-        replicas); the contract stays identical, only the calibrated
-        service model changes, and the engine's weighted dispatcher uses
-        it as each lane's seed estimate.
+        flashed onto a second stick — but carries its own identity,
+        runtime stats, and **its own DeviceModel copy**: two sticks never
+        share a calibration record, so per-device mutation (thermal
+        state, calibration drift) cannot silently alias across sibling
+        lanes.  Pass ``device`` to flash it onto a *different*
+        accelerator type (heterogeneous lane group: e.g. an NCS2 primary
+        with Coral replicas); the contract stays identical, only the
+        calibrated service model changes, and the engine's weighted
+        dispatcher uses it as each lane's seed estimate.
+
+        Auto-names are deterministic *per parent* (``name#r1``,
+        ``name#r2``, ...), not drawn from a process-global counter, so
+        the engine's crc32(lane, seq) jitter draws replay identically
+        no matter what else the process cloned first.
         """
+        self._clone_seq += 1
         rep = copy.copy(self)
         rep.stats = {"processed": 0, "busy_s": 0.0}
-        rep.name = name or f"{self.name}#r{next(Cartridge._replica_seq)}"
-        if device is not None:
-            rep.device = device
+        rep._clone_seq = 0             # the replica numbers its own clones
+        rep.name = name or f"{self.name}#r{self._clone_seq}"
+        rep.device = copy.copy(device if device is not None else self.device)
         return rep
 
     # -- compute ------------------------------------------------------------

@@ -82,6 +82,28 @@ N results win); the stragglers keep computing but their result
 handoffs are suppressed on the bus.  ``quorum=None`` (or ``k >= N``)
 reproduces Table 1 exactly.
 
+Power-governed dispatch (paper §4.3).  A ``PowerGovernor``
+(``runtime.power``) rides every engine: per-lane energy is integrated
+from busy/idle time (O(1) per service cycle; ``EngineReport.power``
+carries the per-hub/per-lane breakdown), and when per-hub watt budgets
+are configured (``power_budget_w=``) a thermal state machine throttles
+(duty-stretched service cycles — the stretch is forced idle, and a
+throttled lane's *effective* ``est_s`` inflates in ``pick_lane`` so it
+sheds load) or parks an over-budget hub (no new cycles until the draw
+estimate cools; dispatch routes around parked hubs, their queued frames
+wait — zero loss).  Unbudgeted runs are bit-identical to the
+pre-governor engine.
+
+Fabric-aware dispatch.  On a fabric, ``pick_lane`` is no longer
+hub-blind: the pre-routed handoff decision folds the router's current
+route cost (src egress + link + dst ingress, including each leg's FIFO
+backlog) into the ``(backlog + 1) * est_s`` completion estimate, so a
+cross-hub dispatch only wins when it beats the local queue *including*
+the toll — traffic stays hub-local when the link runs hot.
+``route_aware=False`` keeps the hub-blind discipline as the measurable
+baseline; on a one-hub fabric (or a bare bus) the toll is constant
+across lanes, so behavior is bit-identical either way.
+
 Timing is virtual (deterministic, calibrated DeviceModels); payload compute
 is optionally real JAX (``execute_payloads=True``) so correctness tests can
 assert data flows through reconfigurations unchanged.  Service-time jitter
@@ -104,6 +126,7 @@ from repro.core import messages as msg
 from repro.runtime.events import HeapEventQueue
 from repro.runtime.health import HealthMonitor
 from repro.runtime.metrics import StreamingHistogram
+from repro.runtime.power import PowerGovernor
 from repro.runtime.registry import CapabilityRegistry, SlotRecord
 
 HANDSHAKE_S = 0.35       # detection + addressing + capability handshake
@@ -149,6 +172,14 @@ class EngineReport:
     latency_hist: StreamingHistogram = field(default_factory=StreamingHistogram)
     stage_hist: dict = field(default_factory=dict)    # stage name -> histogram
     hedges: dict = field(default_factory=_hedge_counters)
+    power: dict = field(default_factory=dict)         # PowerGovernor.report()
+
+    def energy_j(self) -> float:
+        """Total electrical energy the fleet drew (joules, virtual time)."""
+        return self.power.get("total_j", 0.0)
+
+    def avg_power_w(self) -> float:
+        return self.power.get("avg_w", 0.0)
 
     @property
     def lost(self) -> int:
@@ -197,6 +228,7 @@ class _Lane:
         self.busy = False
         self.held: Optional[list] = None   # finished batch, downstream full
         self.ready_at = 0.0                # handshake+load gate for live adds
+        self.parked_wait = False           # an unpark retry is already queued
         self.stats = StageStats()
         self.pos = 0                       # last known chain position
         self.slot = -1                     # last known capability slot
@@ -266,7 +298,9 @@ class _LaneGroup:
 
     def pick_lane(self, now: float, weighted: bool = True,
                   exclude: Optional[_Lane] = None,
-                  prefer_hub: Optional[int] = None) -> Optional[_Lane]:
+                  prefer_hub: Optional[int] = None,
+                  toll=None, est_scale=None,
+                  parked=None) -> Optional[_Lane]:
         """Dispatch choice; prefers lanes past their handshake gate.
 
         ``weighted`` (the default) minimizes estimated completion time of
@@ -280,6 +314,17 @@ class _LaneGroup:
         ``prefer_hub`` narrows the pool to one fabric hub when possible —
         a routed handoff already paid to reach that hub, so the arrival
         lands there unless the hub has no lanes left.
+
+        ``toll`` (lane -> seconds) adds the routed transfer cost to the
+        weighted estimate — fabric-aware dispatch: a remote lane only
+        wins when it beats the local queue *including* the route.  On a
+        one-hub fabric the toll is constant across lanes, so the argmin
+        (and therefore the run) is unchanged.  ``est_scale``
+        (lane -> multiplier) inflates a throttled lane's effective
+        ``est_s``.  ``parked`` (hub -> bool) steers work away from
+        power-parked hubs; they remain a last resort so frames are never
+        dropped when every lane of a group is parked (they queue and run
+        after the unpark).
         """
         lanes = self.lanes if exclude is None else \
             [l for l in self.lanes if l is not exclude]
@@ -287,12 +332,26 @@ class _LaneGroup:
             return None
         ready = [l for l in lanes if l.ready_at <= now]
         pool = ready or lanes
+        if parked is not None:
+            awake = [l for l in pool if not parked(l.hub)]
+            if awake:
+                pool = awake
         if prefer_hub is not None:
             on_hub = [l for l in pool if l.hub == prefer_hub]
             if on_hub:
                 pool = on_hub
         if weighted:
-            return min(pool, key=lambda l: (l.backlog() + 1) * l.est_s)
+            if toll is None and est_scale is None:
+                return min(pool, key=lambda l: (l.backlog() + 1) * l.est_s)
+
+            def eta(l):
+                est = (l.backlog() + 1) * l.est_s
+                if est_scale is not None:
+                    est *= est_scale(l)
+                if toll is not None:
+                    est += toll(l)
+                return est
+            return min(pool, key=eta)
         return min(pool, key=lambda l: (len(l.queue) + (1 if l.busy else 0)))
 
 
@@ -304,7 +363,9 @@ class StreamEngine:
                  microbatch: bool = True, event_queue=None,
                  dispatch: str = "ewma", hedge: bool = False,
                  hedge_quantile: float = 0.95, hedge_min_obs: int = 8,
-                 hedge_margin: float = 1.25, ewma_alpha: float = 0.25):
+                 hedge_margin: float = 1.25, ewma_alpha: float = 0.25,
+                 governor: Optional[PowerGovernor] = None,
+                 power_budget_w=None, route_aware: bool = True):
         if dispatch not in DISPATCH_DISCIPLINES:
             raise ValueError(f"unknown dispatch discipline {dispatch!r}")
         self.registry = registry
@@ -315,6 +376,10 @@ class StreamEngine:
         self.execute_payloads = execute_payloads
         self.microbatch = microbatch
         self.dispatch = dispatch
+        # energy metering is always on; budgets engage the state machine
+        self.governor = governor if governor is not None \
+            else PowerGovernor(budget_w=power_budget_w)
+        self.route_aware = route_aware
         self.hedge = hedge
         self.hedge_quantile = hedge_quantile
         self.hedge_min_obs = hedge_min_obs
@@ -413,6 +478,11 @@ class StreamEngine:
         self._live_groups = {id(g) for g in self._groups}
         # records() is slot-sorted, so position == sorted-slot index
         self._slot_index = {g.slot: i for i, g in enumerate(self._groups)}
+        # power meter follows the physical population (detached sticks
+        # stop drawing; new ones start accruing idle immediately)
+        self.governor.sync(self.now, {
+            id(lane.cart): (lane.cart.name, lane.cart.device, lane.hub)
+            for lane in self._lane_by_cart.values()})
 
     def _rescue_lane(self, lane: _Lane, pos: int, held_off: int = 0):
         for m in lane.queue:
@@ -454,18 +524,42 @@ class StreamEngine:
             return self.registry.n_endpoints() or 1
         return self.registry.n_endpoints_on(hub) or 1
 
-    def _route_hub(self, idx: int) -> Optional[int]:
+    def _gov_pick_kwargs(self) -> dict:
+        """Power-aware dispatch hooks for ``pick_lane`` — empty (zero
+        overhead) unless a budget is configured."""
+        if not self.governor.active:
+            return {}
+        gov, now = self.governor, self.now
+        return {"est_scale": lambda l: gov.inflation(now, l.hub),
+                "parked": lambda h: gov.parked(now, h)}
+
+    def _route_hub(self, idx: int, src_hub: Optional[int] = None,
+                   nbytes: int = 0) -> Optional[int]:
         """Where the router should land a handoff bound for stage ``idx``:
         the hub of the lane the group would dispatch to right now.  None
         for the sink, a broadcast group (host-staged: its per-lane ingress
         is charged at broadcast start), or an empty group — those routes
-        stay local to the source hub."""
+        stay local to the source hub.
+
+        With ``src_hub`` given (fabric-aware dispatch, the default) the
+        choice charges each candidate the router's *current* cost of
+        reaching its hub — src egress + link + ingress, including FIFO
+        backlog — so a cross-hub lane only wins when it beats the local
+        queue including the toll.  ``route_aware=False`` (or the naive
+        discipline) keeps the hub-blind estimate as the measurable
+        baseline."""
         if self.fabric is None or idx >= len(self._groups):
             return None
         g = self._groups[idx]
         if g.mode == "broadcast":
             return None
-        lane = g.pick_lane(self.now, weighted=self.dispatch == "ewma")
+        weighted = self.dispatch == "ewma"
+        toll = None
+        if self.route_aware and weighted and src_hub is not None:
+            fab, now = self.fabric, self.now
+            toll = lambda l: fab.route_cost(src_hub, l.hub, nbytes, t=now)
+        lane = g.pick_lane(self.now, weighted=weighted, toll=toll,
+                           **self._gov_pick_kwargs())
         return lane.hub if lane is not None else None
 
     # -- event queue ----------------------------------------------------------
@@ -481,6 +575,7 @@ class StreamEngine:
         self.report.sim_time = self.now
         self.report.bus_bytes = self.bus.bytes_moved
         self.report.bus = self.bus.stats()
+        self.report.power = self.governor.report(self.now)
         self.report.stage_stats.update(self._retired_stats)
         for lane in self._lane_by_cart.values():
             self.report.stage_stats[lane.cart.name] = lane.stats
@@ -543,7 +638,8 @@ class StreamEngine:
             self._try_start_broadcast(g)
             return
         lane = g.pick_lane(self.now, weighted=self.dispatch == "ewma",
-                           prefer_hub=m.meta.pop("_hub", None))
+                           prefer_hub=m.meta.pop("_hub", None),
+                           **self._gov_pick_kwargs())
         if lane is None:
             self._hold_buffer.append((idx, m))
             return
@@ -595,25 +691,60 @@ class StreamEngine:
         if lane.ready_at > self.now:         # replica still handshaking
             self._push_event(lane.ready_at, self._try_start_lane, lane)
             return
-        # adaptive micro-batch: drain the backlog in one service cycle
+        if self.governor.active and self.governor.parked(self.now, lane.hub):
+            # hub over its watt budget even throttled: no new cycles until
+            # the draw estimate cools.  The governor's closed-form decay
+            # gives the recheck time; queued frames wait (zero loss).  One
+            # pending retry per lane — a deep queue must not multiply
+            # identical wake-ups every park interval.
+            if not lane.parked_wait:
+                lane.parked_wait = True
+                eta = self.governor.unpark_eta(self.now, lane.hub)
+                self._push_event(max(eta, self.now + 1e-3),
+                                 self._unpark_retry, lane)
+            return
+        # throttled hub: the cycle is duty-stretched (the stretch is forced
+        # idle — the compute itself is unchanged, so est_s/svc_hist keep
+        # learning the *device*, and dispatch sees the stretch via
+        # est_scale instead of a poisoned EWMA)
+        infl = self.governor.inflation(self.now, lane.hub) \
+            if self.governor.active else 1.0
+        # adaptive micro-batch: drain the backlog in one service cycle.
+        # Under throttle the batch is capped so one duty-stretched cycle
+        # commits at most half the thermal horizon of draw — otherwise a
+        # single stretched 8-frame cycle outlives the control period and
+        # the governor can only watch the budget sail by.
         b = 1
         if self.microbatch and len(lane.queue) >= 2:
             b = min(len(lane.queue), self.queue_cap)
+            if infl > 1.0:
+                dev = lane.cart.device
+                room = 0.5 * self.governor.tau_of(lane.hub) / \
+                    max(dev.service_s * infl, 1e-12)
+                b_cap = 1 + int(max(room - 1.0, 0.0) /
+                                max(dev.batch_marginal, 1e-6))
+                b = max(1, min(b, b_cap))
         batch = [lane.queue.popleft() for _ in range(b)]
         lane.busy = True
         svc, factor = self._service_time(lane, b, batch[0].seq)
+        dur = svc * infl if infl != 1.0 else svc
         if self.hedge and g.mode == "shard" and len(g.lanes) > 1:
-            self._arm_hedges(g, lane, batch, factor)
+            self._arm_hedges(g, lane, batch, factor, infl)
         if self.execute_payloads:
             # one dispatch per micro-batch: match-type stages coalesce the
             # whole batch into a single kernel call (Cartridge.process_batch)
             batch = lane.cart.process_batch(batch)
         self.health.start_request(lane.cart.name, batch[0].seq, self.now)
-        lane.stats.busy_s += svc
+        lane.stats.busy_s += dur
         lane.stats.batches += 1
         lane.stats.max_batch = max(lane.stats.max_batch, b)
-        self._push_event(self.now + svc, self._lane_done, lane, batch,
+        self.governor.on_cycle_start(self.now, lane.cart, dur, svc)
+        self._push_event(self.now + dur, self._lane_done, lane, batch,
                          svc / factor)
+
+    def _unpark_retry(self, lane: _Lane):
+        lane.parked_wait = False
+        self._try_start_lane(lane)
 
     # -- hedged dispatch (tied requests over shard lanes) ---------------------
     def _hedge_deadline(self, lane: _Lane, factor: float) -> float:
@@ -630,15 +761,17 @@ class StreamEngine:
         return base * factor * self.hedge_margin
 
     def _arm_hedges(self, g: _LaneGroup, lane: _Lane, batch: list,
-                    factor: float):
+                    factor: float, infl: float = 1.0):
         """Register hedge tasks for every first-copy message entering
         service, sharing one deadline event per cycle (they finish
-        together, so they stall together)."""
+        together, so they stall together).  ``infl`` scales the deadline
+        by the hub's throttle stretch: a duty-cycled lane is slow by
+        decree, not stalling."""
         fresh = [m for m in batch
                  if (lane.slot, m.seq) not in self._hedges]
         if not fresh:
             return
-        deadline = self._hedge_deadline(lane, factor)
+        deadline = self._hedge_deadline(lane, factor) * infl
         handle = self._push_event(self.now + deadline, self._hedge_check,
                                   g, lane, tuple(m.seq for m in fresh))
         for m in fresh:
@@ -661,7 +794,8 @@ class StreamEngine:
                 continue
             stalled = True
             alt = g.pick_lane(self.now, weighted=self.dispatch == "ewma",
-                              exclude=task.primary)
+                              exclude=task.primary,
+                              **self._gov_pick_kwargs())
             if alt is None or len(alt.queue) >= self.queue_cap:
                 continue                    # no headroom to speculate into
             task.check_handle = None
@@ -724,11 +858,13 @@ class StreamEngine:
             return
         keep: deque = deque()
         weighted = self.dispatch == "ewma"
+        gov_kw = self._gov_pick_kwargs()
         for m in lane.queue:
             if m.meta.get("_hedge_copy"):
                 keep.append(m)
                 continue
-            alt = g.pick_lane(self.now, weighted=weighted, exclude=lane)
+            alt = g.pick_lane(self.now, weighted=weighted, exclude=lane,
+                              **gov_kw)
             if alt is None or len(alt.queue) >= self.queue_cap:
                 keep.append(m)
                 continue
@@ -803,8 +939,9 @@ class StreamEngine:
                 self.report.hedges["wasted"] += 1
                 if self.fabric is not None:
                     g2 = self._group_by_slot.get(slot)
-                    dst = self._route_hub(g2.pos + 1) if g2 is not None \
-                        else None
+                    dst = self._route_hub(g2.pos + 1, src_hub=lane.hub,
+                                          nbytes=self._msg_bytes(m)) \
+                        if g2 is not None else None
                     self.fabric.suppress(
                         self._msg_bytes(m), src=lane.hub, dst=dst,
                         t=self.now, n_endpoints=self._n_endpoints(lane.hub),
@@ -817,6 +954,7 @@ class StreamEngine:
     def _lane_done(self, lane: _Lane, batch: list, svc_norm: float = 0.0):
         lane.stats.processed += len(batch)
         lane.busy = False
+        self.governor.on_cycle_end(self.now, lane.cart)
         if svc_norm > 0.0:
             lane.observe(svc_norm, self.ewma_alpha)
         self.health.finish_request(lane.cart.name, self.now)
@@ -857,8 +995,10 @@ class StreamEngine:
         nbytes = sum(self._msg_bytes(m) for m in batch)
         if self.fabric is not None:
             # host-side routing: egress on the source hub, inter-hub link,
-            # ingress on the routed destination hub (local legs collapse)
-            dst_hub = self._route_hub(nxt)
+            # ingress on the routed destination hub (local legs collapse).
+            # The pre-route decision is fabric-aware: it charges each
+            # candidate lane the current cost of the route to its hub.
+            dst_hub = self._route_hub(nxt, src_hub=lane.hub, nbytes=nbytes)
             done = self.fabric.transfer(
                 self.now, nbytes, self._n_endpoints(lane.hub),
                 src=lane.hub, dst=dst_hub,
@@ -936,16 +1076,23 @@ class StreamEngine:
                 arr = self.bus.transfer(self.now, nbytes,
                                         self._n_endpoints())
             svc, _ = self._service_time(lane, 1, m.seq)
-            lane.stats.busy_s += svc
+            # broadcast lanes are barrier-paced, so a watt budget applies
+            # feed-forward (population duty, no EWMA feedback); with no
+            # budget the stretch is exactly 1.0 — Table 1 is bit-identical
+            binfl = self.governor.duty_inflation(self.now, lane.hub) \
+                if self.governor.active else 1.0
+            dur = svc * binfl if binfl != 1.0 else svc
+            lane.stats.busy_s += dur
             lane.stats.processed += 1
             lane.stats.batches += 1
             lane.stats.max_batch = max(lane.stats.max_batch, 1)
+            self.governor.on_window(self.now, lane.cart, dur, svc)
             # a replica cannot start this frame while still computing the
             # previous one: under a quorum decision a straggler works off
             # its own backlog instead of being >100% utilized.  With the
             # full barrier (quorum=N) every lane finished before the next
             # dispatch, so the gate is a no-op and Table 1 is untouched.
-            finish = max(arr, lane.bfree_at) + svc
+            finish = max(arr, lane.bfree_at) + dur
             lane.bfree_at = finish
             finishes.append(finish)
         # quorum: the frame is decided at the k-th replica completion
@@ -994,7 +1141,8 @@ class StreamEngine:
             return
         if self.fabric is not None:
             src = g.lanes[0].hub if g.lanes else None
-            dst_hub = self._route_hub(nxt)
+            dst_hub = self._route_hub(nxt, src_hub=src,
+                                      nbytes=self._msg_bytes(m))
             done = self.fabric.transfer(
                 self.now, self._msg_bytes(m),
                 self._n_endpoints(src) if src is not None else 1,

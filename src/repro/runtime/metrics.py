@@ -69,15 +69,24 @@ class StreamingHistogram:
         """Interpolated quantile; 0.0 when empty (zero-completion safe)."""
         if not self.count:
             return 0.0
+        if q <= 0.0:
+            return self.min
+        if q >= 1.0:
+            return self.max
         rank = q * (self.count - 1)
         seen = 0
         for i, c in enumerate(self.counts):
             if not c:
                 continue
             if seen + c > rank:
-                frac = (rank - seen + 1) / c          # position inside bin
+                # mid-rank fraction: the k-th of c samples in a bin sits
+                # at (k + 0.5)/c of the bin's span, so a single-count bin
+                # interpolates to its geometric MIDPOINT instead of
+                # pinning to the upper edge (which biased every sparse
+                # low-q quantile a full bin high)
+                frac = (rank - seen + 0.5) / c
                 lo, hi = self._edge(i), self._edge(i + 1)
-                est = lo * (hi / lo) ** min(frac, 1.0)   # geometric interp
+                est = lo * (hi / lo) ** min(max(frac, 0.0), 1.0)
                 # exact extrema beat bin edges at the distribution ends
                 return min(max(est, self.min), self.max)
             seen += c

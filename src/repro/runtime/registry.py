@@ -124,7 +124,11 @@ class CapabilityRegistry:
         return rec
 
     def remove(self, slot: int, t: float = 0.0) -> SlotRecord:
-        rec = self.slots.pop(slot)
+        rec = self.slots.pop(slot, None)
+        if rec is None:
+            raise ValueError(
+                f"slot {slot} is not occupied; plugged slots: "
+                f"{sorted(self.slots) or 'none'}")
         for cart in rec.replicas:
             self._hub_unplug(cart)
         for fn in self._listeners:
@@ -158,7 +162,11 @@ class CapabilityRegistry:
                        t: float = 0.0) -> SlotRecord:
         """Unplug one replica.  Removing the last replica removes the slot
         (equivalent to ``remove``, with its bridge/halt consequences)."""
-        rec = self.slots[slot]
+        rec = self.slots.get(slot)
+        if rec is None:
+            raise ValueError(
+                f"slot {slot} is not occupied; plugged slots: "
+                f"{sorted(self.slots) or 'none'}")
         victim = cart if cart is not None else rec.replicas[-1]
         if victim not in rec.replicas:
             raise ValueError(f"{victim.name} not a replica of slot {slot}")

@@ -156,6 +156,7 @@ def build_fabric_engine(topology: List[list], mode: str = "shard",
                         link: Optional[LinkParams] = None,
                         suppression: bool = True,
                         quorum: Optional[int] = None,
+                        power_budget_w=None,
                         **engine_kw) -> StreamEngine:
     """One lane group whose replicas span a multi-hub bus fabric.
 
@@ -169,6 +170,11 @@ def build_fabric_engine(topology: List[list], mode: str = "shard",
     ``link`` parameters on every inter-hub channel.
     ``suppression=False`` makes the router *execute* hedge losers'
     routed handoffs instead of killing them (the contention baseline).
+
+    ``power_budget_w`` caps each hub's electrical draw (§4.3: the
+    battery budget): a scalar applies the same cap to every hub, a
+    ``{hub: watts}`` dict caps hubs individually, ``None`` meters
+    energy without enforcement.  See ``repro.runtime.power``.
     """
     if not topology or not any(topology):
         raise ValueError("need at least one hub with at least one device")
@@ -191,7 +197,8 @@ def build_fabric_engine(topology: List[list], mode: str = "shard",
             else:
                 reg.add_replica(0, primary.clone(f"{dv.name}#h{h}r{j}",
                                                  device=dv), hub=h)
-    return StreamEngine(reg, fabric, queue_cap=queue_cap, **engine_kw)
+    return StreamEngine(reg, fabric, queue_cap=queue_cap,
+                        power_budget_w=power_budget_w, **engine_kw)
 
 
 def run_fabric(topology: List[list], mode: str = "shard",
@@ -213,6 +220,86 @@ def fabric_shard_fps(device: Union[str, BusParams], n_hubs: int,
     bus because each hub arbitrates only its own endpoints."""
     return run_fabric([[device] * devices_per_hub] * n_hubs,
                       mode="shard", n_frames=n_frames, **kw).throughput()
+
+
+# ---------------------------------------------------------------------------
+# Power-governed scenarios (§4.3 battery budgets + fabric-aware dispatch)
+# ---------------------------------------------------------------------------
+def build_battery_engine(power_budget_w=None, n_devices: int = 4,
+                         device: Union[str, BusParams, DeviceModel] = "ncs2",
+                         n_hubs: int = 1, **engine_kw) -> StreamEngine:
+    """The §4.3 battery kit: ``n_hubs`` hubs of ``n_devices`` calibrated
+    sticks each, shard mode, under a per-hub watt budget.  The canonical
+    budget-sweep workload — shared by ``benchmarks/power_bench.py`` (the
+    tracked FPS/p99-vs-watt-cap curve in ``BENCH_power.json``), the
+    power test suite, and ``examples/power_budget.py``, so the
+    invariants the tests pin are measured on the exact workload the
+    benchmark reports.
+
+    At ncs2 calibration one 4-stick hub draws ~7.2 W flat out against a
+    1.2 W idle floor, so caps between ~2.5 and ~6.5 W exercise the
+    throttle band and caps below ~2.4 W force park/duty cycling."""
+    return build_fabric_engine([[device] * n_devices] * n_hubs,
+                               mode="shard",
+                               power_budget_w=power_budget_w, **engine_kw)
+
+
+def run_battery(power_budget_w=None, n_frames: int = 200,
+                frame_bytes: int = FRAME_BYTES, **kw) -> EngineReport:
+    """Closed-loop burst through the battery kit (the budget-sweep
+    measurement: FPS/p99/average-watts at one cap)."""
+    eng = build_battery_engine(power_budget_w, **kw)
+    eng.feed(n_frames, interval_s=0.0, frame_bytes=frame_bytes)
+    return eng.run(until=float("inf"))
+
+
+def build_routed_pipeline_engine(route_aware: bool = True,
+                                 n_bursts: int = 150,
+                                 load: float = 0.85,
+                                 service_s: float = 0.012,
+                                 **engine_kw) -> StreamEngine:
+    """The canonical fabric-aware-dispatch scenario — a two-stage
+    pipeline whose BOTH stages span two hubs, with a deliberately slow
+    inter-hub link, shared by ``benchmarks/power_bench.py`` (the
+    cross-hub traffic-share comparison in ``BENCH_power.json``) and the
+    test suite.
+
+    Every detect->embed handoff must pick a destination lane: hub-blind
+    dispatch (``route_aware=False``, the pre-PR ``pick_lane``) chases
+    the shortest queue across the fabric and keeps paying
+    egress + link + ingress for marginal wins; fabric-aware dispatch
+    folds the router's current route cost (including the link's FIFO
+    backlog) into the estimate, so traffic stays hub-local unless the
+    local queue really is worth the toll."""
+    fast = DeviceModel(name="coral", service_s=service_s)
+    reg = CapabilityRegistry()
+    spec = msg.MessageSpec(msg.IMAGE_FRAME)
+    det = FnCartridge("detect", lambda p, x: x, spec, spec,
+                      capability_id=7, device=fast)
+    reg.insert(0, det, mode="shard", hub=0)
+    reg.add_replica(0, det.clone("detect#h0r1", device=fast), hub=0)
+    reg.add_replica(0, det.clone("detect#h1r0", device=fast), hub=1)
+    reg.add_replica(0, det.clone("detect#h1r1", device=fast), hub=1)
+    emb = FnCartridge("embed", lambda p, x: x, spec, spec,
+                      capability_id=8, device=fast)
+    reg.insert(1, emb, mode="shard", hub=0)
+    reg.add_replica(1, emb.clone("embed#h0r1", device=fast), hub=0)
+    reg.add_replica(1, emb.clone("embed#h1r0", device=fast), hub=1)
+    reg.add_replica(1, emb.clone("embed#h1r1", device=fast), hub=1)
+    fabric = FabricRouter(
+        [BusParams("hub0", bandwidth=400e6, base_overhead_s=1e-4,
+                   arbitration_s=1e-4),
+         BusParams("hub1", bandwidth=400e6, base_overhead_s=1e-4,
+                   arbitration_s=1e-4)],
+        # the hot link the ROADMAP called out: ~5 ms per routed frame
+        link=LinkParams(bandwidth=30e6, overhead_s=3e-4))
+    eng = StreamEngine(reg, fabric, route_aware=route_aware, **engine_kw)
+    # bursty arrivals at `load` x the detect stage's aggregate capacity:
+    # queues form, so the dispatcher actually faces local-vs-remote calls
+    period = 5 / (load * (4 / service_s))
+    for i in range(n_bursts):
+        eng.feed(5, interval_s=0.0, t0=i * period)
+    return eng
 
 
 def build_cross_hub_hedge_engine(suppression: bool = True,

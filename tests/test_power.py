@@ -1,0 +1,377 @@
+"""Power-governed fabric dispatch: per-lane energy accounting, per-hub
+watt budgets with the nominal -> throttled -> parked thermal state
+machine, fabric-aware (routed-cost) lane picking, and the dispatch-layer
+bug squash (clone device aliasing, registry error contracts)."""
+import pytest
+
+from repro.bus import BusParams, LinkParams, SharedBus, calibrated, \
+    simulate_broadcast_fps
+from repro.bus.fabric import uniform_fabric
+from repro.core import messages as msg
+from repro.core.cartridge import DeviceModel, FnCartridge
+from repro.runtime import (CapabilityRegistry, PowerGovernor, StreamEngine,
+                           build_battery_engine, build_fabric_engine,
+                           build_routed_pipeline_engine,
+                           engine_broadcast_fps, run_battery, run_replicated)
+
+SPEC = msg.MessageSpec(msg.IMAGE_FRAME)
+
+PARAMS = BusParams("hub", bandwidth=100e6, base_overhead_s=2e-4,
+                   arbitration_s=1e-4)
+LINK = LinkParams(bandwidth=300e6, overhead_s=1e-4)
+
+
+def _cart(name, service_s=0.02, power_w=1.8, idle_w=0.3, capability_id=7,
+          **dev):
+    return FnCartridge(name, lambda p, x: x, SPEC, SPEC,
+                       capability_id=capability_id,
+                       device=DeviceModel(service_s=service_s,
+                                          power_w=power_w, idle_w=idle_w,
+                                          **dev))
+
+
+def _bus():
+    return SharedBus(BusParams("test", bandwidth=400e6,
+                               base_overhead_s=1e-4, arbitration_s=2e-4))
+
+
+# -- per-lane energy accounting ------------------------------------------------
+def test_energy_matches_busy_idle_integral():
+    """E = elapsed * idle_w + active_s * (power_w - idle_w), exactly."""
+    reg = CapabilityRegistry()
+    reg.insert(0, _cart("solo", service_s=0.05))
+    eng = StreamEngine(reg, _bus(), microbatch=False)
+    eng.feed(20, interval_s=0.1)           # 50% duty: half busy, half idle
+    rep = eng.run(until=60)
+    assert rep.frames_out == 20
+    lane = rep.power["lanes"]["solo"]
+    assert lane["active_s"] == pytest.approx(20 * 0.05)
+    expect = rep.sim_time * 0.3 + 20 * 0.05 * (1.8 - 0.3)
+    assert lane["energy_j"] == pytest.approx(expect, abs=1e-5)
+    assert rep.energy_j() == pytest.approx(expect, abs=1e-5)
+    assert lane["active_j"] == pytest.approx(20 * 0.05 * 1.8)
+    # average draw sits strictly between idle and active rails
+    assert 0.3 < rep.avg_power_w() < 1.8
+
+
+def test_energy_splits_per_hub():
+    eng = build_fabric_engine([["ncs2"] * 2, ["ncs2"] * 2], mode="shard")
+    eng.feed(80, interval_s=0.0)
+    rep = eng.run(until=1e9)
+    assert rep.frames_out == 80
+    hubs = rep.power["hubs"]
+    assert set(hubs) == {0, 1}
+    assert hubs[0]["lanes"] == hubs[1]["lanes"] == 2
+    for h in hubs.values():
+        assert h["energy_j"] > 0
+        assert h["budget_w"] is None
+        assert h["state"] == "nominal"
+    total = sum(h["energy_j"] for h in hubs.values())
+    assert rep.power["total_j"] == pytest.approx(total, abs=1e-6)
+
+
+def test_detached_lane_stops_drawing_but_keeps_its_energy():
+    reg = CapabilityRegistry()
+    primary = _cart("infer", service_s=0.03)
+    reg.insert(0, primary)
+    r1 = primary.clone()
+    reg.add_replica(0, r1)
+    eng = StreamEngine(reg, _bus())
+    eng.feed(100, interval_s=0.01)
+    eng.schedule_remove_replica(0.4, slot=0, cart=r1)
+    rep = eng.run(until=60)
+    assert rep.frames_out == 100
+    pulled = rep.power["lanes"][r1.name]
+    assert pulled["detached"] is True
+    assert pulled["energy_j"] > 0
+    # the unplugged stick accrued idle only until detach (~0.4s), so its
+    # total energy is bounded by full draw over that window
+    assert pulled["energy_j"] <= 1.8 * 0.45 + 0.1
+
+
+# -- budgets: throttle ---------------------------------------------------------
+def test_unbudgeted_run_is_bit_identical_to_pre_governor():
+    """Metering must be free: a huge budget (state machine armed but
+    never triggered) and no budget at all produce identical runs."""
+    a = run_battery(None, n_frames=120)
+    b = run_battery(1e9, n_frames=120)
+    assert a.sim_time == b.sim_time
+    assert a.latencies == b.latencies
+    assert a.power["total_j"] == b.power["total_j"]
+
+
+def test_throttle_holds_average_power_under_budget():
+    budget = 4.0
+    free = run_battery(None, n_frames=400)
+    capped = run_battery(budget, n_frames=400)
+    hub = capped.power["hubs"][0]
+    assert capped.frames_out == 400, f"lost {capped.lost}"
+    assert hub["throttle_events"] >= 1
+    assert hub["avg_w"] <= budget
+    assert free.power["hubs"][0]["avg_w"] > budget   # the cap actually binds
+    # throughput degrades gracefully, it does not collapse to zero
+    assert 0.0 < capped.throughput() < free.throughput()
+    assert hub["throttled_s"] > 0.0
+
+
+def test_throttled_lane_effective_est_inflates_in_dispatch():
+    """Dispatch must see the duty stretch: while throttled the governor's
+    inflation multiplies the lane's effective est_s."""
+    eng = build_battery_engine(3.0)
+    eng.feed(200, interval_s=0.0)
+    eng.run(until=1e9)
+    gov = eng.governor
+    t = eng.now
+    assert gov.inflation(t, 0) > 1.0 or gov.parked(t, 0) is False
+    # the EWMA itself kept learning the DEVICE, not the throttle
+    lane = eng._groups[0].lanes[0]
+    assert lane.est_s == pytest.approx(calibrated("ncs2").t_comp_s, rel=0.5)
+
+
+def test_budget_sweep_monotone_energy():
+    """Tighter caps -> lower average power (FPS pays for it)."""
+    avgs, fps = [], []
+    for budget in (5.0, 3.5, 2.5):
+        r = run_battery(budget, n_frames=500)
+        assert r.lost == 0
+        avgs.append(r.power["hubs"][0]["avg_w"])
+        fps.append(r.throughput())
+        assert avgs[-1] <= budget
+    assert avgs[0] > avgs[1] > avgs[2]
+    assert fps[0] > fps[1] > fps[2] > 0
+
+
+# -- budgets: park -------------------------------------------------------------
+def test_deep_budget_parks_and_duty_cycles_with_zero_loss():
+    """A cap below the min-duty draw forces park cycling: the hub runs
+    throttled bursts, parks to cool, and every frame still comes out."""
+    r = run_battery(2.0, n_frames=150)
+    hub = r.power["hubs"][0]
+    assert r.lost == 0
+    assert hub["park_events"] >= 1
+    assert hub["parked_s"] > 0.0
+    assert hub["avg_w"] <= 2.0
+    assert not hub["unsatisfiable"]
+
+
+def test_unsatisfiable_budget_flagged_not_deadlocked():
+    """A budget below the idle floor cannot be met by scheduling: the
+    governor flags it and keeps the pipeline moving at deepest throttle
+    instead of parking forever (which could never cool below the
+    floor)."""
+    r = run_battery(1.0, n_frames=60)   # floor = 4 x 0.3 = 1.2 W > 1.0 W
+    hub = r.power["hubs"][0]
+    assert r.lost == 0                   # no deadlock, no loss
+    assert hub["unsatisfiable"] is True
+    assert hub["park_events"] == 0
+    assert hub["state"] == "throttled"
+
+
+def test_per_hub_budget_dict_throttles_only_the_capped_hub():
+    eng = build_fabric_engine([["ncs2"] * 2, ["ncs2"] * 2], mode="shard",
+                              power_budget_w={0: 2.0})
+    # arrivals over time (not one t=0 burst): later frames must see the
+    # throttled hub's inflated est_s and land on the unconstrained hub
+    eng.feed(300, interval_s=0.008)
+    rep = eng.run(until=1e9)
+    assert rep.lost == 0
+    hubs = rep.power["hubs"]
+    assert hubs[0]["budget_w"] == 2.0
+    assert hubs[1]["budget_w"] is None
+    assert hubs[0]["throttle_events"] >= 1
+    assert hubs[1]["throttle_events"] == 0
+    # dispatch shifted load to the unconstrained hub
+    by_hub = {0: 0, 1: 0}
+    g = rep.groups[0]
+    for name, hub in zip(g["lanes"], g["hubs"]):
+        by_hub[hub] += rep.stage_stats[name].processed
+    assert by_hub[1] > by_hub[0]
+
+
+def test_rebudget_off_mid_cycle_settles_uplift():
+    """Dropping the budget while lanes are mid-cycle must settle their
+    draw uplift: a later re-budget would otherwise see a phantom
+    permanent load and could park a hub that can never cool."""
+    eng = build_battery_engine(3.0)
+    eng.feed(100, interval_s=0.0)
+    eng._push_event(0.5, lambda: eng.governor.set_budget(None, eng.now))
+    eng._push_event(2.0, lambda: eng.governor.set_budget(6.0, eng.now))
+    rep = eng.run(until=1e9)
+    assert rep.lost == 0
+    # after the run every cycle has ended: no uplift may linger
+    hs = eng.governor._hubs[0]
+    assert hs.draw_w == pytest.approx(0.0, abs=1e-12)
+
+
+def test_rebudget_below_idle_floor_is_flagged_not_parked_forever():
+    """Tightening the cap below the idle floor mid-run must take the
+    unsatisfiable deepest-duty hold, not the park path (a parked hub
+    could never cool below its own floor)."""
+    eng = build_battery_engine(4.0)          # floor = 1.2 W
+    eng.feed(150, interval_s=0.0)
+    eng._push_event(1.0, lambda: eng.governor.set_budget(0.8, eng.now))
+    rep = eng.run(until=1e9)
+    assert rep.lost == 0                     # no park deadlock
+    hub = rep.power["hubs"][0]
+    assert hub["unsatisfiable"] is True
+    assert hub["state"] == "throttled"
+
+
+def test_rebudget_mid_run_via_set_budget():
+    """Battery saver: tightening the cap mid-mission starts throttling
+    from that point on."""
+    eng = build_battery_engine(None)
+    eng.feed(300, interval_s=0.0)
+    eng._push_event(1.0, lambda: eng.governor.set_budget(3.0, eng.now))
+    rep = eng.run(until=1e9)
+    assert rep.lost == 0
+    hub = rep.power["hubs"][0]
+    assert hub["budget_w"] == 3.0
+    assert hub["throttle_events"] >= 1
+
+
+# -- Table 1 / parity ----------------------------------------------------------
+@pytest.mark.parametrize("device", ["ncs2", "coral"])
+def test_unlimited_budget_broadcast_is_table1_bit_identical(device):
+    p = calibrated(device)
+    for n in (1, 5):
+        assert engine_broadcast_fps(device, n, n_frames=80) == \
+            pytest.approx(simulate_broadcast_fps(p, n, n_frames=80),
+                          rel=1e-12)
+
+
+def test_broadcast_budget_stretches_but_conserves():
+    free = run_replicated("ncs2", 3, "broadcast", 60)
+    eng = build_fabric_engine([["ncs2"] * 3], mode="broadcast",
+                              power_budget_w=2.0)
+    eng.feed(60, interval_s=0.0)
+    capped = eng.run(until=1e9)
+    assert capped.frames_out == 60
+    assert capped.throughput() < free.throughput()
+    assert capped.power["hubs"][0]["avg_w"] <= \
+        free.power["hubs"][0]["avg_w"]
+
+
+# -- fabric-aware dispatch (routed-cost pick_lane) -----------------------------
+def _router(n_hubs=2):
+    return uniform_fabric(PARAMS, n_hubs, link=LINK)
+
+
+def test_route_cost_local_vs_cross():
+    fab = _router(2)
+    nbytes = 100_000
+    local = fab.route_cost(0, 0, nbytes)
+    cross = fab.route_cost(0, 1, nbytes)
+    assert local == pytest.approx(PARAMS.base_overhead_s
+                                  + nbytes / PARAMS.bandwidth)
+    assert cross == pytest.approx(
+        2 * local + LINK.overhead_s + nbytes / LINK.bandwidth)
+    # pure query: nothing moved, no lazy link materialized
+    assert fab.stats()["transfers"] == 0
+    assert not fab._links
+
+
+def test_route_cost_sees_fifo_backlog():
+    """A hot route costs more *right now*: the loaded estimate includes
+    each leg's free_at backlog, so dispatch avoids hot links."""
+    fab = _router(2)
+    unloaded = fab.route_cost(0, 1, 1000, t=0.0)
+    fab.transfer(0.0, 4_000_000, 2, src=0, dst=1)   # heats all three legs
+    loaded = fab.route_cost(0, 1, 1000, t=0.0)
+    assert loaded > unloaded
+    # and cools back down as time passes
+    assert fab.route_cost(0, 1, 1000, t=1e9) == pytest.approx(unloaded)
+
+
+def test_route_aware_dispatch_keeps_traffic_hub_local():
+    """The retired ROADMAP item: folding the routed transfer cost into
+    pick_lane's completion estimate reduces cross-hub traffic at equal
+    offered load without giving up meaningful throughput."""
+    blind = build_routed_pipeline_engine(route_aware=False).run(until=1e12)
+    aware = build_routed_pipeline_engine(route_aware=True).run(until=1e12)
+    assert blind.frames_out == aware.frames_out == 750
+    assert aware.bus["cross_hub_transfers"] < \
+        blind.bus["cross_hub_transfers"]
+    assert aware.throughput() >= 0.9 * blind.throughput()
+
+
+def test_route_aware_is_noop_on_single_hub_fabric():
+    """With one hub the toll is constant across lanes: identical runs."""
+    def run(aware):
+        eng = build_fabric_engine([["ncs2"] * 3], mode="shard",
+                                  route_aware=aware)
+        eng.feed(120, interval_s=0.005)
+        return eng.run(until=1e9)
+
+    a, b = run(True), run(False)
+    assert a.sim_time == b.sim_time
+    assert a.latencies == b.latencies
+
+
+# -- governor construction contracts ------------------------------------------
+def test_governor_rejects_bad_budgets():
+    with pytest.raises(ValueError):
+        PowerGovernor(budget_w=0.0)
+    with pytest.raises(ValueError):
+        PowerGovernor(budget_w={0: -1.0})
+    with pytest.raises(ValueError):
+        PowerGovernor(exit_ratio=1.5)
+    assert PowerGovernor().active is False
+    assert PowerGovernor(budget_w=5.0).active is True
+    assert PowerGovernor(budget_w={1: 5.0}).budget_of(0) is None
+
+
+# -- dispatch-layer bug squash -------------------------------------------------
+def test_clone_device_models_never_alias():
+    """The PR's bugfix: replicas must not share one mutable DeviceModel
+    (per-device thermal state / calibration drift would silently couple
+    sibling lanes)."""
+    primary = _cart("infer")
+    r1 = primary.clone()
+    r2 = primary.clone(device=DeviceModel(name="coral", service_s=0.01))
+    assert r1.device is not primary.device
+    assert r1.device == primary.device         # values preserved
+    assert r2.device is not None
+    # mutating one replica's calibration leaves its siblings untouched
+    r1.device.service_s = 99.0
+    assert primary.device.service_s == 0.02
+    dev = DeviceModel(service_s=0.05)
+    a, b = primary.clone(device=dev), primary.clone(device=dev)
+    assert a.device is not b.device            # even an explicit device=
+    a.device.jitter_p = 1.0
+    assert b.device.jitter_p == 0.0
+
+
+def test_clone_auto_names_deterministic_per_parent():
+    """Auto-names number each parent's clones independently, so the
+    crc32(lane, seq) jitter draws replay identically regardless of what
+    else the process cloned first (engine _service_time)."""
+    a = _cart("infer")
+    burn = _cart("other")
+    burn.clone(), burn.clone(), burn.clone()   # unrelated cloning activity
+    b = _cart("infer")
+    assert [a.clone().name, a.clone().name] == \
+        [b.clone().name, b.clone().name] == ["infer#r1", "infer#r2"]
+    # a replica numbers its own clones from scratch
+    r = a.clone()
+    assert r.clone().name == f"{r.name}#r1"
+
+
+def test_registry_remove_unknown_slot_is_descriptive():
+    reg = CapabilityRegistry()
+    reg.insert(3, _cart("a"))
+    with pytest.raises(ValueError, match="slot 7"):
+        reg.remove(7)
+    with pytest.raises(ValueError, match="slot 9"):
+        reg.remove_replica(9)
+    assert 3 in reg.slots                      # nothing was disturbed
+
+
+def test_registry_remove_error_lists_plugged_slots():
+    reg = CapabilityRegistry()
+    with pytest.raises(ValueError, match="none"):
+        reg.remove(0)
+    reg.insert(1, _cart("a"))
+    reg.insert(4, _cart("b", capability_id=8))
+    with pytest.raises(ValueError, match=r"\[1, 4\]"):
+        reg.remove(2)

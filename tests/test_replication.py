@@ -102,7 +102,10 @@ def test_clone_shares_params_distinct_identity():
     assert rep is not primary
     assert rep.name != primary.name
     assert rep.params is primary.params
-    assert rep.device is primary.device
+    # the calibration record is VALUES-equal but never object-shared:
+    # per-device mutation (thermal state, drift) must not alias replicas
+    assert rep.device is not primary.device
+    assert rep.device == primary.device
     assert rep.stats is not primary.stats
 
 

@@ -73,6 +73,54 @@ def test_histogram_empty_is_zero_not_crash():
     assert h.summary()["count"] == 0
 
 
+def test_histogram_single_count_bins_not_pinned_to_upper_edge():
+    """The PR's quantile bugfix: with every bin holding exactly one
+    sample, low-q quantiles used to return each bin's UPPER geometric
+    edge (frac=(rank-seen+1)/c == 1), biasing them a full bin high.
+    Mid-rank interpolation keeps the estimate within half a bin of the
+    true order statistic."""
+    h = StreamingHistogram(bins_per_decade=32)
+    xs = [10 ** (i / 8) for i in range(-20, 21)]   # 1 sample per 4th bin
+    for x in xs:
+        h.record(x)
+    half_bin = 10 ** (0.5 / 32)
+    for q in (0.1, 0.25, 0.5, 0.75, 0.9):
+        exact = sorted(xs)[round(q * (len(xs) - 1))]
+        est = h.quantile(q)
+        assert exact / (half_bin * 1.001) <= est <= exact * half_bin * 1.001
+
+
+def test_histogram_quantile_tracks_numpy_percentile_oracle():
+    """Hypothesis property: for arbitrary positive samples the histogram
+    quantile lands inside the bracket of the neighboring order
+    statistics, widened by the documented ~7% bin-width bound
+    (10**(1/bins_per_decade) at the default 32 bins/decade)."""
+    hypothesis = pytest.importorskip("hypothesis")
+    import numpy as np
+    from hypothesis import given, settings, strategies as st
+
+    bin_ratio = 10 ** (1 / 32) * (1 + 1e-9)
+
+    @settings(deadline=None, max_examples=200)
+    @given(st.lists(st.floats(min_value=1e-5, max_value=1e4,
+                              allow_nan=False, allow_infinity=False),
+                    min_size=1, max_size=200),
+           st.floats(min_value=0.0, max_value=1.0))
+    def check(xs, q):
+        h = StreamingHistogram()
+        for x in xs:
+            h.record(x)
+        est = h.quantile(q)
+        # the true fractional rank lies between these two samples
+        lo = float(np.percentile(xs, q * 100, method="lower"))
+        hi = float(np.percentile(xs, q * 100, method="higher"))
+        assert lo / bin_ratio <= est <= hi * bin_ratio
+        # extremes stay exact (clamped to the true min/max)
+        assert min(xs) <= est <= max(xs)
+
+    check()
+
+
 # -- EngineReport zero-completion guards ---------------------------------------
 def test_report_guards_zero_completions():
     rep = EngineReport()
