@@ -7,7 +7,12 @@ Two tracked artifacts, written to the repo root:
   against the *pre-fast-path monolithic fp32 baseline* (per-call gallery
   decrypt + full normalize + bn=512 fp32 kernel — exactly what
   ``SecureGallery.match`` did before this PR), plus recall@1 of each fast
-  path against the fp32 oracle.
+  path against the fp32 oracle.  The two-level ANN tier adds a
+  (dtype, nprobe) sweep: its tracked contract is recall@1 >= 0.98 vs the
+  fp32 exact oracle while scoring <= 1/10 of the gallery rows
+  (``rows_scored_ratio`` = gallery rows / rows scored per query — the
+  machine-portable speed lever; interpret-mode wall-clock on CPU is
+  dominated by per-grid-step overhead and is reported but not tracked).
 * ``BENCH_engine.json`` — StreamEngine event-core microbench: simulated
   events/sec of the O(log n) heap queue vs the O(n) linear-scan baseline
   (``repro.runtime.events``) on an identical queued-frame workload.
@@ -36,15 +41,19 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 GALLERY_JSON = os.path.join(ROOT, "BENCH_gallery.json")
 ENGINE_JSON = os.path.join(ROOT, "BENCH_engine.json")
 
-GALLERY_SCHEMA = "champ.gallery_bench.v1"
+GALLERY_SCHEMA = "champ.gallery_bench.v2"
 ENGINE_SCHEMA = "champ.engine_bench.v1"
 
 FULL_CFG = dict(Q=256, D=512, k=5, n_sweep=(16384, 65536),
                 shards=(1, 4), dtypes=("fp32", "bf16", "int8"),
-                accept_n=65536, accept_shards=4, reps=2)
+                accept_n=65536, accept_shards=4, reps=2,
+                ann_q=64, ann_dtypes=("fp32", "bf16", "int8"),
+                ann_nprobe=(4, 8, 16), accept_nprobe=8, ann_max_frac=0.1)
 SMOKE_CFG = dict(Q=64, D=256, k=5, n_sweep=(8192,),
                  shards=(1, 2), dtypes=("fp32", "int8"),
-                 accept_n=8192, accept_shards=2, reps=3)
+                 accept_n=8192, accept_shards=2, reps=3,
+                 ann_q=64, ann_dtypes=("fp32", "int8"),
+                 ann_nprobe=(4, 8), accept_nprobe=4, ann_max_frac=0.1)
 
 FULL_EVENTS = 10_000
 SMOKE_EVENTS = 5_000
@@ -86,7 +95,9 @@ def bench_gallery(cfg) -> dict:
 
     rng = np.random.default_rng(0)
     Q, D, k = cfg["Q"], cfg["D"], cfg["k"]
-    out = {"config": {"Q": Q, "D": D, "k": k}, "baseline": {}, "cells": []}
+    out = {"config": {"Q": Q, "D": D, "k": k, "ann_q": cfg["ann_q"],
+                      "ann_nprobe": list(cfg["ann_nprobe"])},
+           "baseline": {}, "cells": [], "ann_cells": []}
     for N in cfg["n_sweep"]:
         gallery = rng.normal(size=(N, D)).astype(np.float32)
         labels = np.arange(N)
@@ -126,6 +137,44 @@ def bench_gallery(cfg) -> dict:
                     "speedup_vs_fp32_monolithic": round(base_s / dt_s, 2),
                 })
 
+        # -- two-level ANN tier: (dtype, nprobe) sweep at accept_shards.
+        # Tracked metrics are recall@1 vs the exact fp32 oracle and
+        # rows_scored_ratio (gallery rows / rows scored per query) — both
+        # machine-portable.  Wall-clock is reported for context only:
+        # interpret-mode Pallas pays ~ms per grid step on CPU, so ANN
+        # wall time here does NOT reflect the scored-rows saving.
+        Qa = min(cfg["ann_q"], Q)
+        qa, ta = queries[:Qa], truth1[:Qa]
+        astore = SecureGallery(D, seed=3, n_shards=cfg["accept_shards"])
+        astore.enroll(gallery, labels)
+        t0 = time.perf_counter()
+        astore.build_ann_index()
+        build_s = time.perf_counter() - t0
+        out.setdefault("ann_index", {})[str(N)] = {
+            "n_cells": astore._ann_n_cells,
+            "build_ms": round(build_s * 1e3, 1),
+        }
+        for dtype in cfg["ann_dtypes"]:
+            for nprobe in cfg["ann_nprobe"]:
+                astore.match(qa[:1], k=1, dtype=dtype,  # prep + compile
+                             mode="ann", nprobe=nprobe)
+                t0 = time.perf_counter()
+                lab, _ = astore.match(qa, k, dtype=dtype,
+                                      mode="ann", nprobe=nprobe)
+                dt_s = time.perf_counter() - t0
+                st = astore.last_match_stats
+                out["ann_cells"].append({
+                    "N": N, "dtype": dtype,
+                    "shards": cfg["accept_shards"], "nprobe": nprobe,
+                    "ms_per_call": round(dt_s * 1e3, 1),
+                    "recall_at_1": float(np.mean(
+                        lab[:, 0].astype(np.int64) == ta)),
+                    "rows_scored_per_query": round(st["rows_scored"], 1),
+                    "scan_fraction": round(st["scan_fraction"], 4),
+                    "rows_scored_ratio": round(
+                        st["rows_total"] / max(st["rows_scored"], 1.0), 1),
+                })
+
     acc = [c for c in out["cells"]
            if c["N"] == cfg["accept_n"] and c["dtype"] == "int8"
            and c["shards"] == cfg["accept_shards"]][0]
@@ -135,6 +184,19 @@ def bench_gallery(cfg) -> dict:
         "recall_at_1": acc["recall_at_1"],
         "pass_speedup_1p5x": acc["speedup_vs_fp32_monolithic"] >= 1.5,
         "pass_recall_0p99": acc["recall_at_1"] >= 0.99,
+    }
+
+    acc_a = [c for c in out["ann_cells"]
+             if c["N"] == cfg["accept_n"] and c["dtype"] == "int8"
+             and c["nprobe"] == cfg["accept_nprobe"]][0]
+    out["acceptance_ann"] = {
+        "cell": {kk: acc_a[kk] for kk in ("N", "dtype", "shards", "nprobe")},
+        "recall_at_1": acc_a["recall_at_1"],
+        "scan_fraction": acc_a["scan_fraction"],
+        "rows_scored_ratio": acc_a["rows_scored_ratio"],
+        "max_scan_fraction": cfg["ann_max_frac"],
+        "pass_recall_0p98": acc_a["recall_at_1"] >= 0.98,
+        "pass_scan_frac": acc_a["scan_fraction"] <= cfg["ann_max_frac"],
     }
     return out
 
@@ -188,14 +250,22 @@ def bench_engine(n_frames: int) -> dict:
 def validate_gallery(doc: dict):
     assert doc.get("schema") == GALLERY_SCHEMA, "bad/missing schema tag"
     assert doc.get("mode") in ("full", "smoke"), "bad mode"
-    for section in ("config", "baseline", "cells", "acceptance"):
+    for section in ("config", "baseline", "cells", "acceptance",
+                    "ann_cells", "acceptance_ann"):
         assert section in doc, f"missing section {section!r}"
     for c in doc["cells"]:
         for kk in ("N", "dtype", "shards", "queries_per_sec", "recall_at_1",
                    "speedup_vs_fp32_monolithic"):
             assert kk in c, f"cell missing {kk!r}"
+    assert doc["ann_cells"], "empty ann_cells sweep"
+    for c in doc["ann_cells"]:
+        for kk in ("N", "dtype", "nprobe", "recall_at_1", "scan_fraction",
+                   "rows_scored_ratio"):
+            assert kk in c, f"ann cell missing {kk!r}"
     for kk in ("int8_sharded_speedup", "recall_at_1"):
         assert kk in doc["acceptance"], f"acceptance missing {kk!r}"
+    for kk in ("recall_at_1", "scan_fraction", "rows_scored_ratio"):
+        assert kk in doc["acceptance_ann"], f"acceptance_ann missing {kk!r}"
 
 
 def validate_engine(doc: dict):
@@ -239,6 +309,22 @@ def run_check(fresh_gallery: dict, fresh_engine: dict, smoke: bool,
     if fresh_gallery["acceptance"]["recall_at_1"] < 0.99:
         failures.append(f"int8 recall@1 below 0.99: "
                         f"{fresh_gallery['acceptance']['recall_at_1']}")
+    # ANN tier contract: recall floor + scored-rows bound are absolute
+    # (machine-portable — no noise allowance), the scored-rows *ratio* is
+    # additionally pinned against the committed baseline like the speedups.
+    acc_a = fresh_gallery["acceptance_ann"]
+    if acc_a["recall_at_1"] < 0.98:
+        failures.append(f"ANN recall@1 below 0.98: {acc_a['recall_at_1']}")
+    if acc_a["scan_fraction"] > acc_a["max_scan_fraction"]:
+        failures.append(
+            f"ANN scan_fraction {acc_a['scan_fraction']} exceeds "
+            f"{acc_a['max_scan_fraction']} (>=10x fewer scored rows broken)")
+    base_a = committed_g["smoke_baseline_ann"] if smoke \
+        else committed_g["acceptance_ann"]
+    got_ra, want_ra = acc_a["rows_scored_ratio"], base_a["rows_scored_ratio"]
+    if got_ra < 0.8 * want_ra:
+        failures.append(f"ANN rows_scored_ratio regressed >20%: "
+                        f"{got_ra} vs baseline {want_ra}")
     got_ev = fresh_engine["heap_vs_list_speedup"]
     want_ev = base_e["heap_vs_list_speedup"]
     if got_ev < 0.8 * want_ev:
@@ -254,9 +340,12 @@ def run() -> dict:
     e = bench_engine(SMOKE_EVENTS)
     return {
         "gallery_acceptance": g["acceptance"],
+        "ann_acceptance": g["acceptance_ann"],
         "engine_heap_vs_list_speedup": e["heap_vs_list_speedup"],
         "pass_fastpath": bool(g["acceptance"]["pass_speedup_1p5x"]
                               and g["acceptance"]["pass_recall_0p99"]
+                              and g["acceptance_ann"]["pass_recall_0p98"]
+                              and g["acceptance_ann"]["pass_scan_frac"]
                               and e["heap_vs_list_speedup"] >= 2.0),
     }
 
@@ -301,16 +390,24 @@ def main():
         g_samples, e_samples = [], []
         sg_path = os.path.join(ROOT, "BENCH_gallery.smoke.json")
         se_path = os.path.join(ROOT, "BENCH_engine.smoke.json")
+        ga_samples = []
         for _ in range(3):
             subprocess.run([sys.executable, os.path.abspath(__file__),
                             "--smoke"], check=True, cwd=ROOT)
-            g_samples.append(json.load(open(sg_path))["acceptance"])
+            smoke_g = json.load(open(sg_path))
+            g_samples.append(smoke_g["acceptance"])
+            ga_samples.append(smoke_g["acceptance_ann"])
             e_samples.append(json.load(open(se_path)))
         os.remove(sg_path)
         os.remove(se_path)
         worst_g = min(g_samples, key=lambda a: a["int8_sharded_speedup"])
         gallery_doc["smoke_baseline"] = dict(
             worst_g, samples=[a["int8_sharded_speedup"] for a in g_samples])
+        # ANN smoke baseline: scored-rows ratio is deterministic given the
+        # config, but keep the same min-of-samples discipline as the rest
+        worst_a = min(ga_samples, key=lambda a: a["rows_scored_ratio"])
+        gallery_doc["smoke_baseline_ann"] = dict(
+            worst_a, samples=[a["rows_scored_ratio"] for a in ga_samples])
         e_ratios = [e["heap_vs_list_speedup"] for e in e_samples]
         engine_doc["smoke_baseline"] = {
             "heap_vs_list_speedup": min(e_ratios), "samples": e_ratios}
@@ -325,6 +422,7 @@ def main():
         json.dump(engine_doc, f, indent=2)
     print(f"[gallery_bench] wrote {g_path} and {e_path}")
     print(json.dumps({"gallery_acceptance": gallery_doc["acceptance"],
+                      "ann_acceptance": gallery_doc["acceptance_ann"],
                       "engine": {kk: engine_doc[kk] for kk in
                                  ("heap_vs_list_speedup", "pass_3x")}},
                      indent=2))

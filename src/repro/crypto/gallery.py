@@ -21,6 +21,20 @@ bf16-cast or int8 per-row quantize with scales), built lazily and
 invalidated by ``enroll``/``rekey``/``reshard``; ``seal()`` drops the
 plaintext views so only the encrypted-at-rest blobs remain resident.
 Match dtypes: ``"fp32"`` (oracle), ``"bf16"``, ``"int8"``.
+
+Planet-scale tier (two-level ANN).  Exact per-shard scan is linear in N;
+``build_ann_index()`` trains one global spherical-k-means codebook (K
+cells, encrypted at rest like everything else) and assigns every row to
+a cell, and ``match(mode="ann", nprobe=c)`` scores only K centroids plus
+the rows of each query's top-c cells (``kernels/ann_match``: coarse
+centroid scan → exact rescore in the probed cells, both storage-dtype
+aware).  Index maintenance is **incremental**: ``enroll`` assigns new
+rows to existing cells (never retrains), ``rekey`` rotates the codebook
+through the key change (cosine geometry is rotation-invariant, so
+assignments survive), and ``reshard`` only re-packs the per-shard
+physical layouts — ``ann_stats["trainings"]`` stays at one unless
+``build_ann_index`` is called again explicitly.  ``last_match_stats``
+reports rows scored vs rows resident, the tracked ≤1/10 contract.
 """
 from __future__ import annotations
 
@@ -34,6 +48,30 @@ from repro.crypto.templates import (KeyedRotation, decrypt_array,
                                     encrypt_array)
 
 MATCH_DTYPES = ("fp32", "bf16", "int8")
+MATCH_MODES = ("exact", "ann")
+
+
+def _deficit_alloc(sizes: np.ndarray, n_new: int) -> np.ndarray:
+    """How many of ``n_new`` rows each shard gets so final sizes are as
+    level as possible *without moving existing rows*: water-fill the
+    smallest shards up to a common level, remainder to the smallest
+    results first (stable by shard id, so allocation is deterministic)."""
+    sizes = np.asarray(sizes, np.int64)
+    if n_new <= 0:
+        return np.zeros(len(sizes), np.int64)
+    lo, hi = int(sizes.min()), int(sizes.max()) + n_new
+    while lo < hi:                     # max level T reachable with n_new
+        mid = (lo + hi + 1) // 2
+        if int(np.maximum(mid - sizes, 0).sum()) <= n_new:
+            lo = mid
+        else:
+            hi = mid - 1
+    alloc = np.maximum(lo - sizes, 0)
+    rem = n_new - int(alloc.sum())
+    if rem:
+        order = np.argsort(sizes + alloc, kind="stable")
+        alloc[order[:rem]] += 1
+    return alloc
 
 
 class SecureGallery:
@@ -56,20 +94,39 @@ class SecureGallery:
         self._prep: List[dict] = [{} for _ in range(n_shards)]
         self._labels: list = []
         self._n = 0
+        # two-level ANN tier: encrypted global codebook + per-gid cell
+        # assignment (ints, not biometric data); physical packed layouts
+        # live in the per-shard _prep caches
+        self._ann_blob: Optional[dict] = None      # encrypted (K, D) f32
+        self._ann_codebook: Optional[np.ndarray] = None   # decrypt-once
+        self._ann_assign = np.empty((0,), np.int32)       # gid -> cell
+        self._ann_n_cells = 0
+        self.ann_stats = {"trainings": 0, "assign_calls": 0, "packs": 0}
+        self.last_match_stats: dict = {}
 
     # -- enrollment ------------------------------------------------------------
     def enroll(self, raw_templates: np.ndarray, labels):
         """raw (N, dim) embeddings -> protected + encrypted at rest,
-        distributed across shards (least-full first, so replica lanes stay
-        balanced as the watchlist grows)."""
+        distributed across shards by *deficit* (each shard receives
+        enough rows to level the sizes — ``np.array_split`` over the
+        least-full order ignored existing imbalance, so uneven
+        enroll/reshard sequences skewed per-replica latency)."""
         prot = np.asarray(self.rotation.protect(jnp.asarray(raw_templates)))
         prot = prot.astype(np.float32)
         n_new = prot.shape[0]
         gids = np.arange(self._n, self._n + n_new, dtype=np.int64)
-        order = np.argsort([len(ids) for ids in self._shard_ids],
-                           kind="stable")
-        splits = np.array_split(np.arange(n_new), self.n_shards)
-        for shard, rows in zip(order, splits):
+        if self._ann_blob is not None and n_new:
+            # incremental index maintenance: new rows join existing cells
+            # (nearest centroid in protected space); the codebook is NOT
+            # retrained — ann_stats["trainings"] must not move here
+            from repro.kernels.ann_match import assign_cells
+            new_cells = assign_cells(prot, self._codebook())
+            self._ann_assign = np.concatenate([self._ann_assign, new_cells])
+            self.ann_stats["assign_calls"] += 1
+        alloc = _deficit_alloc([len(ids) for ids in self._shard_ids], n_new)
+        offsets = np.concatenate([[0], np.cumsum(alloc)])
+        for shard in range(self.n_shards):
+            rows = np.arange(offsets[shard], offsets[shard + 1])
             if len(rows) == 0:
                 continue
             self._append_to_shard(int(shard), prot[rows], gids[rows])
@@ -124,9 +181,11 @@ class SecureGallery:
         return prep
 
     def seal(self):
-        """Drop every plaintext match-time view; only the encrypted-at-rest
-        shard blobs stay resident (next ``match`` re-prepares)."""
+        """Drop every plaintext match-time view — including the decrypted
+        ANN codebook and packed cell layouts; only the encrypted-at-rest
+        blobs stay resident (next ``match`` re-prepares)."""
         self._prep = [{} for _ in self._shards]
+        self._ann_codebook = None
 
     def _match_shard(self, s: int, q: jax.Array, k: int, dtype: str):
         from repro.kernels import ops as K
@@ -136,45 +195,192 @@ class SecureGallery:
         gn = prep["gn_bf16"] if dtype == "bf16" else prep["gn"]
         return K.gallery_match_fused(q, gn, k=k)
 
+    # -- two-level ANN tier ------------------------------------------------------
+    def build_ann_index(self, *, n_cells: Optional[int] = None,
+                        iters: int = 6, seed: int = 0):
+        """Train the global centroid codebook (spherical k-means-lite over
+        every row) and assign each row to a cell.  The one expensive,
+        explicit operation — everything after it (enroll/rekey/reshard)
+        maintains the index incrementally."""
+        assert self._n > 0, "empty gallery"
+        from repro.kernels.ann_match import assign_cells, kmeans_lite
+        gn = np.empty((self._n, self.dim), np.float32)
+        for s in range(self.n_shards):
+            if len(self._shard_ids[s]):
+                gn[self._shard_ids[s]] = np.asarray(self._prepare(s, "fp32")
+                                                    ["gn"])
+        if n_cells is None:
+            n_cells = max(1, int(round(float(np.sqrt(self._n)))))
+        n_cells = max(1, min(n_cells, self._n))
+        codebook = kmeans_lite(gn, n_cells, iters=iters, seed=seed)
+        self._ann_n_cells = codebook.shape[0]
+        self._ann_blob = encrypt_array(self._cipher_key, codebook)
+        self._ann_codebook = codebook
+        self._ann_assign = assign_cells(gn, codebook)
+        self.ann_stats["trainings"] += 1
+        for s in range(self.n_shards):             # packed layouts are stale
+            self._prep[s].pop("ann", None)
+
+    @property
+    def ann_indexed(self) -> bool:
+        return self._ann_blob is not None
+
+    def _codebook(self) -> np.ndarray:
+        """Decrypt-once cached codebook (dropped by ``seal``)."""
+        if self._ann_codebook is None:
+            self._ann_codebook = decrypt_array(self._cipher_key,
+                                               self._ann_blob)
+        return self._ann_codebook
+
+    def _prepare_ann(self, s: int, dtype: str) -> dict:
+        """Padded cell-major physical view of shard ``s`` for ``dtype``,
+        built lazily from the prepared (decrypt-once) view + the global
+        assignment — an *affected-shard-only* repack, never a retrain."""
+        prep = self._prepare(s, dtype)
+        if "ann" not in prep:
+            from repro.kernels.ann_match import build_cell_layout
+            assign = self._ann_assign[self._shard_ids[s]]
+            prep["ann"] = {"layout": build_cell_layout(
+                assign, self._ann_n_cells)}
+            self.ann_stats["packs"] += 1
+        ann = prep["ann"]
+        layout = ann["layout"]
+        if dtype == "int8" and "q8" not in ann:
+            from repro.kernels.ann_match import pack_cells_quant
+            ann["q8"], ann["scale"] = pack_cells_quant(
+                np.asarray(prep["gn"]), layout)
+        elif dtype in ("fp32", "bf16") and "packed" not in ann:
+            from repro.kernels.ann_match import pack_cells
+            ann["packed"] = pack_cells(np.asarray(prep["gn"]), layout)
+        if dtype == "bf16" and "packed_bf16" not in ann:
+            ann["packed_bf16"] = jnp.asarray(ann["packed"]).astype(
+                jnp.bfloat16)
+        return prep
+
+    def _coarse_scan(self, q: jax.Array, nprobe: int, dtype: str):
+        """Query-vs-codebook probe selection in the match dtype (the
+        codebook is small, so its quantized forms are derived on the
+        fly from the decrypt-once cache)."""
+        from repro.kernels import ops as K
+        codebook = self._codebook()
+        if dtype == "int8":
+            from repro.kernels.ann_match import quantize_gallery
+            c8, cs = quantize_gallery(jnp.asarray(codebook))
+            return K.centroid_topc_quant(q, c8, cs, c=nprobe)
+        cents = jnp.asarray(codebook)
+        if dtype == "bf16":
+            cents = cents.astype(jnp.bfloat16)
+        return K.centroid_topc(q, cents, c=nprobe)
+
+    def _match_shard_ann(self, s: int, q: jax.Array, cell_ids: jax.Array,
+                         k: int, dtype: str):
+        """Exact rescore of shard ``s`` restricted to the probed cells;
+        returns (scores, global ids, rows_scored) with -1 ids on
+        unfilled slots."""
+        from repro.kernels import ops as K
+        prep = self._prepare_ann(s, dtype)
+        ann = prep["ann"]
+        layout = ann["layout"]
+        lens = jnp.asarray(layout.cell_lens)
+        if dtype == "int8":
+            scores, pos = K.cell_rescore_quant(
+                q, jnp.asarray(ann["q8"]), jnp.asarray(ann["scale"]),
+                cell_ids, lens, k=k, L=layout.L)
+        else:
+            packed = ann["packed_bf16"] if dtype == "bf16" \
+                else jnp.asarray(ann["packed"])
+            scores, pos = K.cell_rescore(q, packed, cell_ids, lens,
+                                         k=k, L=layout.L)
+        pos = np.asarray(pos)
+        rows = np.where(pos >= 0,
+                        layout.pos_to_row[np.clip(pos, 0, None)], -1)
+        gids = np.where(rows >= 0,
+                        self._shard_ids[s][np.clip(rows, 0, None)], -1)
+        ids = np.asarray(cell_ids)
+        # average gallery rows rescored per query in this shard
+        scored = float(layout.cell_lens[ids.clip(0)][ids >= 0].sum()
+                       / max(ids.shape[0], 1))
+        return np.asarray(scores), gids, scored
+
+    # -- matching entry ----------------------------------------------------------
     def match(self, raw_queries: jax.Array, k: int = 5,
-              dtype: Optional[str] = None):
+              dtype: Optional[str] = None, *, mode: str = "exact",
+              nprobe: int = 8):
         """Match raw query embeddings; returns (labels, scores).
 
         Queries are protected with the same rotation, then matched in
         protected space (cosine is invariant under the shared rotation).
-        Each shard is searched independently (one kernel call per shard,
-        i.e. per replica lane) and the per-shard top-k merge to a global
-        top-k; ``dtype`` selects the score path (default: the store's
-        ``match_dtype``).
+        ``mode="exact"``: each shard is searched in full (one kernel call
+        per shard, i.e. per replica lane).  ``mode="ann"``: one coarse
+        scan against the global codebook picks each query's top-``nprobe``
+        cells, then every shard rescores only the probed cells — rows
+        scored per query drops from N to ~K + nprobe·N/K (tracked in
+        ``last_match_stats``).  Per-shard top-k merge to a global top-k
+        breaks score ties by **global id**, so results are invariant to
+        the shard topology; ``dtype`` selects the score path (default:
+        the store's ``match_dtype``).
         """
         assert self._n > 0, "empty gallery"
         dtype = dtype or self.match_dtype
         if dtype not in MATCH_DTYPES:
             raise ValueError(f"dtype must be one of {MATCH_DTYPES}")
+        if mode not in MATCH_MODES:
+            raise ValueError(f"mode must be one of {MATCH_MODES}")
+        if mode == "ann" and not self.ann_indexed:
+            raise ValueError("ANN index not built — call "
+                             "build_ann_index() before match(mode='ann')")
         k = min(k, self._n)
         q = self.rotation.protect(jnp.asarray(raw_queries))
+        centroid_rows = 0
+        cell_rows = 0
+        if mode == "ann":
+            nprobe = max(1, min(nprobe, self._ann_n_cells))
+            _, cell_ids = self._coarse_scan(q, nprobe, dtype)
+            centroid_rows = self._ann_n_cells
         shard_scores, shard_gids = [], []
         for s in range(self.n_shards):
             n_s = len(self._shard_ids[s])
             if n_s == 0:
                 continue
             ks = min(k, n_s)
-            scores, idx = self._match_shard(s, q, ks, dtype)
-            shard_scores.append(np.asarray(scores))
-            shard_gids.append(self._shard_ids[s][np.asarray(idx)])
+            if mode == "ann":
+                scores, gids, scored = self._match_shard_ann(
+                    s, q, cell_ids, ks, dtype)
+                cell_rows += scored
+            else:
+                scores, idx = self._match_shard(s, q, ks, dtype)
+                scores = np.asarray(scores)
+                gids = self._shard_ids[s][np.asarray(idx)]
+                cell_rows += n_s          # exact: the whole shard scored
+            shard_scores.append(scores)
+            shard_gids.append(gids)
         all_s = np.concatenate(shard_scores, axis=1)       # (Q, sum ks)
         all_g = np.concatenate(shard_gids, axis=1)
-        if len(shard_scores) > 1:                          # top-k merge
-            top = np.argsort(-all_s, axis=1, kind="stable")[:, :k]
+        if len(shard_scores) > 1 or mode == "ann":         # top-k merge
+            # primary key: score desc; tie-break: global id asc — equal
+            # scores order identically for every reshard() topology
+            # (sentinel slots sink: NEG scores with id -1)
+            sort_g = np.where(all_g < 0, np.iinfo(np.int64).max, all_g)
+            top = np.lexsort((sort_g, -all_s), axis=1)[:, :k]
             all_s = np.take_along_axis(all_s, top, axis=1)
             all_g = np.take_along_axis(all_g, top, axis=1)
-        labels = np.asarray(self._labels, object)[all_g]
+        self.last_match_stats = {
+            "mode": mode, "dtype": dtype, "rows_total": self._n,
+            "centroid_rows": centroid_rows, "cell_rows": cell_rows,
+            "rows_scored": centroid_rows + cell_rows,
+            "scan_fraction": (centroid_rows + cell_rows) / self._n,
+        }
+        label_arr = np.asarray(self._labels, object)
+        labels = np.where(all_g >= 0, label_arr[np.clip(all_g, 0, None)],
+                          None)
         return labels, jnp.asarray(all_s)
 
     # -- topology ----------------------------------------------------------------
     def reshard(self, n_shards: int):
         """Re-split the gallery across ``n_shards`` shards (mirror the lane
-        group gaining/losing a replica cartridge)."""
+        group gaining/losing a replica cartridge).  The ANN codebook and
+        per-row cell assignments survive untouched — only the per-shard
+        packed layouts are rebuilt (lazily, on next ANN match)."""
         if n_shards < 1:
             raise ValueError("n_shards must be >= 1")
         if self._n == 0:
@@ -194,7 +400,10 @@ class SecureGallery:
 
     # -- revocation --------------------------------------------------------------
     def rekey(self, new_seed: int):
-        """Cancellable biometrics: re-protect the gallery under a new key."""
+        """Cancellable biometrics: re-protect the gallery under a new key.
+        The ANN codebook rides the rotation change (cosine geometry is
+        rotation-invariant), so cell assignments — and recall — survive
+        without retraining or reassignment."""
         assert self._n > 0, "empty gallery"
         raws = []
         for s in range(self.n_shards):
@@ -204,6 +413,10 @@ class SecureGallery:
                     self.rotation.unprotect(jnp.asarray(g))))
             else:
                 raws.append(None)
+        raw_codebook = None
+        if self._ann_blob is not None:
+            raw_codebook = np.asarray(self.rotation.unprotect(
+                jnp.asarray(self._codebook())))
         self.rotation = KeyedRotation(self.dim, new_seed)
         self._cipher_key = jax.random.PRNGKey(new_seed ^ 0x5EC2E7)
         for s, raw in enumerate(raws):
@@ -213,3 +426,8 @@ class SecureGallery:
             self._shards[s] = encrypt_array(self._cipher_key,
                                             prot.astype(np.float32))
             self._prep[s] = {}
+        if raw_codebook is not None:
+            codebook = np.asarray(self.rotation.protect(
+                jnp.asarray(raw_codebook))).astype(np.float32)
+            self._ann_blob = encrypt_array(self._cipher_key, codebook)
+            self._ann_codebook = codebook

@@ -1,1 +1,1 @@
-from repro.kernels import ops, ref  # noqa
+from repro.kernels import ann_match, ops, ref  # noqa

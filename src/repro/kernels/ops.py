@@ -12,6 +12,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.ann_match import (cell_rescore_pallas,
+                                     centroid_topc_pallas)
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.gallery_match import (gallery_match_pallas,
                                          gallery_match_quant_pallas,
@@ -58,6 +60,39 @@ def gallery_match_quant(q, g_q, g_scale, *, k: int = 5, bq: int = 256,
 def prepare_gallery_quant(gn):
     """Enrollment-time int8 preparation of a normalized gallery."""
     return quantize_gallery(gn)
+
+
+# -- two-level ANN fast path --------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("c", "bq", "bn"))
+def centroid_topc(q, centroids, *, c: int, bq: int = 256, bn=None):
+    """Coarse probe selection: raw queries vs the (K, D) codebook (f32 or
+    bf16 storage), fused query normalization; returns top-``c`` cell ids."""
+    return centroid_topc_pallas(q, centroids, c=c, bq=bq, bn=bn,
+                                fuse_norm=True, interpret=_on_cpu())
+
+
+@functools.partial(jax.jit, static_argnames=("c", "bq", "bn"))
+def centroid_topc_quant(q, c_q, c_scale, *, c: int, bq: int = 256, bn=None):
+    """int8-codebook coarse scan (per-row quantized centroids)."""
+    return centroid_topc_pallas(q, c_q, c_scale, c=c, bq=bq, bn=bn,
+                                fuse_norm=True, interpret=_on_cpu())
+
+
+@functools.partial(jax.jit, static_argnames=("k", "L"))
+def cell_rescore(q, cells, cell_ids, cell_lens, *, k: int, L: int):
+    """Exact rescore of each query against its probed cells only (f32 or
+    bf16 packed cell-major storage); returns padded positions."""
+    return cell_rescore_pallas(q, cells, cell_ids, cell_lens, k=k, L=L,
+                               fuse_norm=True, interpret=_on_cpu())
+
+
+@functools.partial(jax.jit, static_argnames=("k", "L"))
+def cell_rescore_quant(q, cells_q, cell_scale, cell_ids, cell_lens, *,
+                       k: int, L: int):
+    """int8 packed-cell rescore (per-row quantized, fp32 accumulation)."""
+    return cell_rescore_pallas(q, cells_q, cell_ids, cell_lens, cell_scale,
+                               k=k, L=L, fuse_norm=True,
+                               interpret=_on_cpu())
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window"))

@@ -27,6 +27,58 @@ def gallery_match_quant_ref(q, g_q, g_scale, *, k: int = 5):
     return gallery_match_ref(q, g, k=k)
 
 
+def centroid_topc_ref(q, centroids, *, c: int):
+    """Coarse-scan oracle: top-``c`` cells by cosine (same contract as
+    ``gallery_match_ref`` — ``c > K`` pads with (-3e38, -1) sentinels)."""
+    return gallery_match_ref(q, centroids, k=c)
+
+
+def cell_rescore_ref(q, cells, cell_ids, cell_lens, *, k: int, L: int):
+    """Rescore oracle in the padded cell-major layout: score q (Q, D)
+    against the (K*L, D) packed array, mask pad rows (row >= cell_len)
+    and every position outside each query's probed cells, then top-k.
+    Returns (scores (Q, k) f32, padded positions (Q, k) i32) with
+    (-3e38, -1) sentinels for unfilled slots."""
+    q = q.astype(jnp.float32)
+    qn = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-9)
+    s = qn @ cells.astype(jnp.float32).T                  # (Q, K*L)
+    K = cell_lens.shape[0]
+    pos_cell = jnp.arange(K * L, dtype=jnp.int32) // L
+    pos_row = jnp.arange(K * L, dtype=jnp.int32) % L
+    occupied = pos_row < cell_lens[pos_cell]              # (K*L,)
+    probed = jnp.any(cell_ids[:, :, None] == pos_cell[None, None, :],
+                     axis=1)                              # (Q, K*L)
+    live = probed & occupied[None, :]
+    s = jnp.where(live, s, -3.0e38)
+    scores, pos = jax.lax.top_k(s, k)
+    dead = scores <= -3.0e38 / 2
+    return (jnp.where(dead, -3.0e38, scores),
+            jnp.where(dead, -1, pos).astype(jnp.int32))
+
+
+def ann_match_ref(q, gn, centroids, assign, *, nprobe: int, k: int):
+    """End-to-end two-level oracle against the *flat* shard gallery:
+    probe the top-``nprobe`` cells per query, then exact top-k restricted
+    to gallery rows assigned to a probed cell.  Returns (scores, row ids)
+    with (-3e38, -1) sentinels when fewer than k rows were probed."""
+    q = q.astype(jnp.float32)
+    qn = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-9)
+    _, cells = centroid_topc_ref(qn, centroids, c=nprobe)
+    probed = jnp.any(assign[None, None, :] == cells[:, :, None],
+                     axis=1)                              # (Q, N)
+    s = qn @ gn.astype(jnp.float32).T
+    s = jnp.where(probed, s, -3.0e38)
+    scores, idx = jax.lax.top_k(s, min(k, gn.shape[0]))
+    if scores.shape[1] < k:
+        pad = k - scores.shape[1]
+        scores = jnp.pad(scores, ((0, 0), (0, pad)),
+                         constant_values=-3.0e38)
+        idx = jnp.pad(idx, ((0, 0), (0, pad)), constant_values=-1)
+    dead = scores <= -3.0e38 / 2
+    return (jnp.where(dead, -3.0e38, scores),
+            jnp.where(dead, -1, idx).astype(jnp.int32))
+
+
 def flash_attention_ref(q, k, v, *, causal=True, scale=None, window=0):
     """q: (B,H,Sq,D), k/v: (B,Kh,Sk,D[v]). Plain softmax attention, f32."""
     B, H, Sq, D = q.shape

@@ -99,6 +99,11 @@ class WatchlistCartridge(Cartridge):
     queued embedding frames, ``process_batch`` coalesces them into one
     ``SecureGallery.match`` call — a single gallery-match kernel dispatch
     per engine service cycle instead of one per frame.
+
+    ``mode="ann"`` routes the coalesced batch through the two-level ANN
+    tier (coarse centroid scan + probed-cell rescore, ``nprobe`` cells
+    per query) — the planet-scale watchlist path; the gallery must have
+    ``build_ann_index()`` called after enrollment.
     """
 
     capability_id = 9
@@ -106,9 +111,12 @@ class WatchlistCartridge(Cartridge):
     consumes = msg.MessageSpec(msg.EMBEDDING, (EMB_DIM,))
     produces = msg.MessageSpec(msg.MATCH_RESULT)
 
-    def __init__(self, gallery: SecureGallery):
+    def __init__(self, gallery: SecureGallery, *, mode: str = "exact",
+                 nprobe: int = 8):
         super().__init__(device=DeviceModel(service_s=0.010, load_s=0.8))
         self.gallery = gallery
+        self.mode = mode
+        self.nprobe = nprobe
         self.stats["match_calls"] = 0
 
     def fn(self, params, emb):
@@ -122,7 +130,8 @@ class WatchlistCartridge(Cartridge):
         if not live:
             return ms
         q = np.stack([np.asarray(m.payload) for m in live])   # (B, D)
-        labels, scores = self.gallery.match(q, k=1)           # one kernel call
+        labels, scores = self.gallery.match(                  # one kernel call
+            q, k=1, mode=self.mode, nprobe=self.nprobe)
         self.stats["match_calls"] += 1
         self.stats["processed"] += len(live)
         results = iter(zip(labels[:, 0], np.asarray(scores)[:, 0]))
@@ -143,7 +152,8 @@ class WatchlistCartridge(Cartridge):
 
 
 def build_biometric_pipeline(seed=0, with_quality=True, n_shards=1,
-                             match_dtype="fp32"):
+                             match_dtype="fp32", match_mode="exact",
+                             nprobe=8):
     key = jax.random.PRNGKey(seed)
     ks = jax.random.split(key, 4)
     reg = CapabilityRegistry()
@@ -154,7 +164,8 @@ def build_biometric_pipeline(seed=0, with_quality=True, n_shards=1,
     # one gallery shard per watchlist replica lane (cartridge scaling)
     gallery = SecureGallery(EMB_DIM, seed=7, n_shards=n_shards,
                             match_dtype=match_dtype)
-    reg.insert(3, WatchlistCartridge(gallery))
+    reg.insert(3, WatchlistCartridge(gallery, mode=match_mode,
+                                     nprobe=nprobe))
     return reg, gallery
 
 

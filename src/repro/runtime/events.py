@@ -71,14 +71,22 @@ class HeapEventQueue:
             self._dead.discard(heapq.heappop(self._heap)[1])
 
     def pop(self) -> Event:
+        """Pop the earliest live event.  Raises a descriptive
+        ``IndexError`` on an exhausted queue *without* touching the
+        ``popped`` counter — a failed pop must not corrupt the
+        events/sec stats ``BENCH_engine.json`` tracks."""
         self._drop_dead()
-        self.popped += 1
+        if not self._heap:
+            raise IndexError("pop from empty HeapEventQueue")
         ev = heapq.heappop(self._heap)
+        self.popped += 1
         self._live.discard(ev[1])
         return ev
 
     def peek_time(self) -> float:
         self._drop_dead()
+        if not self._heap:
+            raise IndexError("peek_time on empty HeapEventQueue")
         return self._heap[0][0]
 
     def __len__(self) -> int:
@@ -112,6 +120,8 @@ class ListEventQueue:
         return False
 
     def pop(self) -> Event:
+        if not self._q:                # mirror HeapEventQueue's contract
+            raise IndexError("pop from empty ListEventQueue")
         # seq numbers are unique, so tuple comparison never reaches fn
         ev = min(self._q)
         self._q.remove(ev)
@@ -119,6 +129,8 @@ class ListEventQueue:
         return ev
 
     def peek_time(self) -> float:
+        if not self._q:
+            raise IndexError("peek_time on empty ListEventQueue")
         return min(self._q)[0]
 
     def __len__(self) -> int:

@@ -1,0 +1,421 @@
+"""Two-level ANN matching: kernel parity, SecureGallery lifecycle
+round-trips, incremental index maintenance, and the sharded-gallery bug
+squash (enroll balancing, topology-invariant tie-breaks, event-queue
+empty-pop discipline).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:                        # property tests need hypothesis; the rest don't
+    from hypothesis import given, settings, strategies as stn
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    def given(**kw):        # leave decorated tests collectable (skipped)
+        return lambda fn: pytest.mark.skip("hypothesis not installed")(fn)
+
+    class _StnStub:         # strategy expressions evaluate at import time
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    stn = _StnStub()
+
+from repro.crypto import SecureGallery
+from repro.crypto.gallery import _deficit_alloc
+from repro.kernels import ann_match as A
+from repro.kernels import ops as K
+from repro.kernels import ref as R
+from repro.kernels.ann_match import NEG
+
+if HAVE_HYPOTHESIS:
+    settings.register_profile("ci", max_examples=25, deadline=None)
+    settings.load_profile("ci")
+
+DTYPES = ("fp32", "bf16", "int8")
+
+
+def _normed(rng, n, d):
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    return x / np.maximum(np.linalg.norm(x, axis=-1, keepdims=True), 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# kernel parity: coarse scan + probed-cell rescore vs the oracles
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_rescore_kernel_matches_oracle(dtype):
+    rng = np.random.default_rng(5)
+    N, D, Q, n_cells, c, k = 300, 32, 7, 12, 4, 5
+    gn = _normed(rng, N, D)
+    q = gn[rng.integers(0, N, Q)] + \
+        0.05 * rng.normal(size=(Q, D)).astype(np.float32)
+    cent = A.kmeans_lite(gn, n_cells, seed=1)
+    layout = A.build_cell_layout(A.assign_cells(gn, cent), n_cells)
+    lens = jnp.asarray(layout.cell_lens)
+    _, ids = K.centroid_topc(jnp.asarray(q), jnp.asarray(cent), c=c)
+    q_oracle = q
+    if dtype == "bf16":
+        # the oracle must see the same storage-rounded queries the
+        # kernel casts (fp32 accumulation on both sides)
+        q_oracle = np.asarray(jnp.asarray(q).astype(jnp.bfloat16)
+                              .astype(jnp.float32))
+    if dtype == "int8":
+        p8, ps = A.pack_cells_quant(gn, layout)
+        s, pos = K.cell_rescore_quant(jnp.asarray(q), jnp.asarray(p8),
+                                      jnp.asarray(ps), ids, lens,
+                                      k=k, L=layout.L)
+        packed_oracle = np.asarray(A.dequantize_gallery(
+            jnp.asarray(p8), jnp.asarray(ps)))
+    else:
+        packed = A.pack_cells(gn, layout)
+        if dtype == "bf16":
+            pb = jnp.asarray(packed).astype(jnp.bfloat16)
+            s, pos = K.cell_rescore(jnp.asarray(q), pb, ids, lens,
+                                    k=k, L=layout.L)
+            packed_oracle = np.asarray(pb.astype(jnp.float32))
+        else:
+            s, pos = K.cell_rescore(jnp.asarray(q), jnp.asarray(packed),
+                                    ids, lens, k=k, L=layout.L)
+            packed_oracle = packed
+    sr, posr = R.cell_rescore_ref(jnp.asarray(q_oracle),
+                                  jnp.asarray(packed_oracle),
+                                  ids, lens, k=k, L=layout.L)
+    s, pos, sr, posr = (np.asarray(x) for x in (s, pos, sr, posr))
+    np.testing.assert_allclose(s, sr, atol=2e-5, rtol=1e-5)
+    # positions agree except across exact-tie permutations
+    tie = np.isclose(s, sr, atol=2e-5)
+    assert np.all((pos == posr) | tie)
+    assert np.all(np.diff(s, axis=1) <= 1e-6)            # descending
+
+
+def test_rescore_edges_c_exceeds_cells_and_k_exceeds_probed():
+    """c > K pads the probe table with -1 sentinels; k beyond the probed
+    row count fills (NEG, -1) output slots — both masked, never stale."""
+    rng = np.random.default_rng(6)
+    gn = _normed(rng, 3, 16)                              # single-row cells
+    cent = A.kmeans_lite(gn, 3, seed=0)
+    layout = A.build_cell_layout(A.assign_cells(gn, cent), 3)
+    packed = A.pack_cells(gn, layout)
+    q = jnp.asarray(gn[[0, 2]])
+    _, ids = K.centroid_topc(q, jnp.asarray(cent), c=5)   # c > K
+    assert np.all(np.asarray(ids)[:, 3:] == -1)
+    s, pos = K.cell_rescore(q, jnp.asarray(packed), ids,
+                            jnp.asarray(layout.cell_lens), k=7, L=layout.L)
+    s, pos = np.asarray(s), np.asarray(pos)
+    assert np.all(pos[:, 3:] == -1) and np.all(s[:, 3:] == NEG)
+    rows = layout.pos_to_row[pos[:, 0]]
+    np.testing.assert_array_equal(rows, [0, 2])           # exact self-match
+
+
+def test_end_to_end_matches_flat_ann_oracle():
+    """coarse scan -> rescore -> pos_to_row mapping equals the flat-gallery
+    two-level oracle (same probes, exact scores, same row ids)."""
+    rng = np.random.default_rng(7)
+    N, D, Q, n_cells, c, k = 400, 24, 9, 16, 5, 4
+    gn = _normed(rng, N, D)
+    q = gn[rng.integers(0, N, Q)] + \
+        0.03 * rng.normal(size=(Q, D)).astype(np.float32)
+    cent = A.kmeans_lite(gn, n_cells, seed=2)
+    assign = A.assign_cells(gn, cent)
+    layout = A.build_cell_layout(assign, n_cells)
+    packed = A.pack_cells(gn, layout)
+    _, ids = K.centroid_topc(jnp.asarray(q), jnp.asarray(cent), c=c)
+    s, pos = K.cell_rescore(jnp.asarray(q), jnp.asarray(packed), ids,
+                            jnp.asarray(layout.cell_lens), k=k, L=layout.L)
+    sr, rowsr = R.ann_match_ref(jnp.asarray(q), jnp.asarray(gn),
+                                jnp.asarray(cent), jnp.asarray(assign),
+                                nprobe=c, k=k)
+    pos = np.asarray(pos)
+    rows = np.where(pos >= 0, layout.pos_to_row[np.clip(pos, 0, None)], -1)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), atol=2e-5)
+    tie = np.isclose(np.asarray(s), np.asarray(sr), atol=2e-5)
+    assert np.all((rows == np.asarray(rowsr)) | tie)
+
+
+def test_kmeans_lite_deterministic_and_normalized():
+    rng = np.random.default_rng(8)
+    gn = _normed(rng, 200, 16)
+    c1 = A.kmeans_lite(gn, 8, seed=3)
+    c2 = A.kmeans_lite(gn, 8, seed=3)
+    np.testing.assert_array_equal(c1, c2)
+    np.testing.assert_allclose(np.linalg.norm(c1, axis=-1), 1.0, atol=1e-5)
+    assert A.kmeans_lite(gn, 500, seed=0).shape[0] == 200  # clamped to N
+
+
+# ---------------------------------------------------------------------------
+# hypothesis round-trip: enroll -> reshard -> rekey -> seal -> match
+# ---------------------------------------------------------------------------
+def _lifecycle_roundtrip(seed, n, shards, reshards, k, dtype):
+    rng = np.random.default_rng(seed)
+    D = 16
+    g = rng.normal(size=(n, D)).astype(np.float32)
+    q = g[rng.integers(0, n, 3)] + \
+        0.02 * rng.normal(size=(3, D)).astype(np.float32)
+    store = SecureGallery(D, seed=seed % 97, n_shards=shards)
+    cut = rng.integers(0, n + 1)
+    if cut:
+        store.enroll(g[:cut], list(range(cut)))           # split enrollment
+    if n - cut:
+        store.enroll(g[cut:], list(range(cut, n)))
+    n_cells = int(rng.integers(1, n + 1))                 # 1-row cells likely
+    store.build_ann_index(n_cells=n_cells)
+    store.reshard(reshards)                               # may empty shards
+    store.rekey((seed % 89) + 1)
+    store.seal()
+
+    # fp32 raw-space oracle (rotation preserves cosine exactly)
+    qn = q / np.maximum(np.linalg.norm(q, axis=-1, keepdims=True), 1e-9)
+    gn = g / np.maximum(np.linalg.norm(g, axis=-1, keepdims=True), 1e-9)
+    sr, ir = (np.asarray(x) for x in
+              R.gallery_match_ref(jnp.asarray(qn), jnp.asarray(gn), k=k))
+
+    lab, s = store.match(q, k=k, dtype="fp32")            # exact path
+    s = np.asarray(s)
+    k_eff = min(k, n)
+    np.testing.assert_allclose(s[:, :k_eff], sr[:, :k_eff],
+                               atol=3e-4, rtol=1e-4)
+    # self-consistency: each returned score IS the cosine of its label row
+    got = np.take_along_axis(qn @ gn.T,
+                             lab[:, :k_eff].astype(np.int64), axis=1)
+    np.testing.assert_allclose(s[:, :k_eff], got, atol=3e-4, rtol=1e-4)
+
+    # ANN with every cell probed == exhaustive: scores match the oracle
+    lab_a, s_a = store.match(q, k=k, dtype=dtype, mode="ann",
+                             nprobe=store._ann_n_cells)
+    s_a = np.asarray(s_a)
+    assert store.ann_stats["trainings"] == 1              # never retrained
+    live = lab_a[:, :k_eff] != None                       # noqa: E711
+    assert np.all(live)                                   # full probe: k rows
+    if dtype == "fp32":
+        np.testing.assert_allclose(s_a[:, :k_eff], sr[:, :k_eff],
+                                   atol=3e-4, rtol=1e-4)
+    else:                                                 # quantized paths:
+        got_a = np.take_along_axis(                       # self-consistent
+            qn @ gn.T, lab_a[:, :k_eff].astype(np.int64), axis=1)
+        np.testing.assert_allclose(s_a[:, :k_eff], got_a, atol=0.05)
+
+
+@given(seed=stn.integers(0, 2**31 - 1),
+       n=stn.integers(1, 40),
+       shards=stn.integers(1, 6),
+       reshards=stn.integers(1, 6),
+       k=stn.integers(1, 6),
+       dtype=stn.sampled_from(DTYPES))
+def test_lifecycle_roundtrip_exact_and_ann_vs_fp32_oracle(
+        seed, n, shards, reshards, k, dtype):
+    _lifecycle_roundtrip(seed, n, shards, reshards, k, dtype)
+
+
+@pytest.mark.parametrize("seed,n,shards,reshards,k,dtype", [
+    (0, 1, 1, 1, 1, "fp32"),        # single row, single shard
+    (1, 3, 6, 5, 5, "fp32"),        # empty shards + k > N
+    (2, 17, 2, 4, 3, "int8"),       # single-row cells likely (n_cells~N)
+    (3, 40, 4, 2, 6, "bf16"),
+    (4, 9, 3, 1, 12, "int8"),       # k far beyond N
+])
+def test_lifecycle_roundtrip_edges(seed, n, shards, reshards, k, dtype):
+    """Deterministic pin of the hypothesis round-trip across the edges the
+    property explores (empty shards, k > N, single-row cells) — runs even
+    where hypothesis isn't installed."""
+    _lifecycle_roundtrip(seed, n, shards, reshards, k, dtype)
+
+
+def test_ann_before_index_raises():
+    store = SecureGallery(8, seed=1)
+    store.enroll(np.eye(4, 8, dtype=np.float32), list(range(4)))
+    with pytest.raises(ValueError, match="build_ann_index"):
+        store.match(np.eye(1, 8, dtype=np.float32), k=1, mode="ann")
+
+
+# ---------------------------------------------------------------------------
+# incremental index maintenance (the no-silent-full-rebuild contract)
+# ---------------------------------------------------------------------------
+def test_enroll_rekey_reshard_never_retrain_index():
+    rng = np.random.default_rng(20)
+    D, n = 24, 300
+    g = rng.normal(size=(n, D)).astype(np.float32)
+    store = SecureGallery(D, seed=4, n_shards=3)
+    store.enroll(g[:200], list(range(200)))
+    store.build_ann_index(n_cells=16)
+    assert store.ann_stats == {"trainings": 1, "assign_calls": 0, "packs": 0}
+
+    q = g[[5, 150]] + 0.02 * rng.normal(size=(2, D)).astype(np.float32)
+    store.match(q, k=1, mode="ann", nprobe=4)
+    packs0 = store.ann_stats["packs"]
+    assert packs0 == 3                                    # one per shard
+
+    # enroll: new rows join existing cells; only receiving shards repack
+    store.enroll(g[200:], list(range(200, n)))
+    assert store.ann_stats["trainings"] == 1
+    assert store.ann_stats["assign_calls"] == 1
+    assert len(store._ann_assign) == n
+    store.match(q, k=1, mode="ann", nprobe=4)
+
+    # rekey rotates the codebook in place: no retrain, no reassignment
+    assign_before = store._ann_assign.copy()
+    store.rekey(55)
+    assert store.ann_stats["trainings"] == 1
+    np.testing.assert_array_equal(store._ann_assign, assign_before)
+    lab, _ = store.match(q, k=1, mode="ann", nprobe=4)
+    assert lab[0, 0] == 5 and lab[1, 0] == 150
+
+    # reshard re-packs layouts only; assignments and codebook survive
+    store.reshard(5)
+    assert store.ann_stats["trainings"] == 1
+    np.testing.assert_array_equal(store._ann_assign, assign_before)
+    lab, _ = store.match(q, k=1, mode="ann", nprobe=4)
+    assert lab[0, 0] == 5 and lab[1, 0] == 150
+    assert store.ann_stats["trainings"] == 1
+
+
+def test_seal_drops_codebook_and_packed_views_then_reprepares():
+    rng = np.random.default_rng(21)
+    D = 16
+    g = rng.normal(size=(60, D)).astype(np.float32)
+    store = SecureGallery(D, seed=6, n_shards=2)
+    store.enroll(g, list(range(60)))
+    store.build_ann_index(n_cells=8)
+    store.match(g[[3]], k=1, mode="ann", nprobe=3)
+    assert store._ann_codebook is not None
+    store.seal()
+    assert store._ann_codebook is None                    # plaintext dropped
+    assert all(not p for p in store._prep)
+    lab, _ = store.match(g[[3]], k=1, mode="ann", nprobe=3)
+    assert lab[0, 0] == 3                                 # re-prepared
+    assert store.ann_stats["trainings"] == 1
+
+
+def test_ann_scan_fraction_tracked_and_small():
+    rng = np.random.default_rng(22)
+    D, n = 32, 2048
+    g = rng.normal(size=(n, D)).astype(np.float32)
+    store = SecureGallery(D, seed=8, n_shards=2)
+    store.enroll(g, list(range(n)))
+    store.build_ann_index(n_cells=64)
+    q = g[rng.integers(0, n, 16)] + \
+        0.05 * rng.normal(size=(16, D)).astype(np.float32)
+    store.match(q, k=1, mode="ann", nprobe=4)
+    st = store.last_match_stats
+    assert st["mode"] == "ann" and st["rows_total"] == n
+    assert st["rows_scored"] < 0.5 * n                    # far below exhaustive
+    store.match(q, k=1, mode="exact")
+    assert store.last_match_stats["rows_scored"] == n
+
+
+# ---------------------------------------------------------------------------
+# bug squash: enroll balancing
+# ---------------------------------------------------------------------------
+def test_deficit_alloc_levels_and_is_deterministic():
+    sizes = np.array([10, 0, 3, 7])
+    alloc = _deficit_alloc(sizes, 20)
+    assert alloc.sum() == 20
+    final = sizes + alloc
+    assert final.max() - final.min() <= 1
+    np.testing.assert_array_equal(alloc, _deficit_alloc(sizes, 20))
+    # not enough rows to level: everything goes to the emptiest shards
+    alloc2 = _deficit_alloc(sizes, 2)
+    np.testing.assert_array_equal(alloc2, [0, 2, 0, 0])
+    assert _deficit_alloc(sizes, 0).sum() == 0
+
+
+def test_enroll_rebalances_after_uneven_history():
+    """Regression: np.array_split over the least-full order ignored the
+    existing imbalance — a shard 10 rows ahead stayed ~10 ahead forever,
+    skewing per-replica-lane latency."""
+    rng = np.random.default_rng(23)
+    D = 8
+    store = SecureGallery(D, seed=2, n_shards=3)
+    # shard 0 gets a head start (single-shard enrollment, then reshard(1)
+    # concentrates, then reshard back)
+    store.enroll(rng.normal(size=(30, D)).astype(np.float32),
+                 list(range(30)))
+    store.reshard(3)
+    # drop to an uneven state: enroll tiny batches repeatedly
+    base = 30
+    for b in (7, 1, 5, 2, 11):
+        store.enroll(rng.normal(size=(b, D)).astype(np.float32),
+                     list(range(base, base + b)))
+        base += b
+        sizes = store.shard_sizes()
+        assert max(sizes) - min(sizes) <= 1, sizes
+    assert sum(store.shard_sizes()) == base
+    # matching still returns every row exactly once
+    lab, _ = store.match(rng.normal(size=(1, D)).astype(np.float32), k=base)
+    assert sorted(lab[0].astype(np.int64)) == list(range(base))
+
+
+# ---------------------------------------------------------------------------
+# bug squash: topology-invariant tie-breaks in the cross-shard merge
+# ---------------------------------------------------------------------------
+def test_merge_tiebreak_invariant_across_reshard_counts():
+    """Regression: equal-score results used to reorder across reshard()
+    counts (merge tie-broke by shard concatenation order).  Duplicate
+    templates give exactly equal fp32 scores; the merge must return the
+    lowest global ids first for every topology."""
+    rng = np.random.default_rng(24)
+    D, n_dup, n_bg = 16, 6, 30
+    dup = rng.normal(size=(1, D)).astype(np.float32)
+    bg = rng.normal(size=(n_bg, D)).astype(np.float32)
+    g = np.concatenate([np.repeat(dup, n_dup, axis=0), bg])
+    order = rng.permutation(len(g))
+    g = g[order]
+    dup_gids = sorted(np.where(order < n_dup)[0])
+    results = []
+    for shards in (1, 2, 3, 5):
+        store = SecureGallery(D, seed=5, n_shards=shards)
+        store.enroll(g, list(range(len(g))))
+        lab, s = store.match(dup, k=4, dtype="fp32")
+        results.append((lab[0].astype(np.int64).tolist(),
+                        np.asarray(s)[0].round(5).tolist()))
+    for got in results[1:]:
+        assert got == results[0], results
+    assert results[0][0] == dup_gids[:4]                  # lowest gids win
+
+
+def test_ann_merge_tiebreak_invariant_across_reshard_counts():
+    rng = np.random.default_rng(25)
+    D = 16
+    dup = rng.normal(size=(1, D)).astype(np.float32)
+    g = np.concatenate([np.repeat(dup, 4, axis=0),
+                        rng.normal(size=(40, D)).astype(np.float32)])
+    results = []
+    for shards in (1, 3, 4):
+        store = SecureGallery(D, seed=5, n_shards=shards)
+        store.enroll(g, list(range(len(g))))
+        store.build_ann_index(n_cells=6)
+        lab, _ = store.match(dup, k=3, dtype="fp32", mode="ann", nprobe=6)
+        results.append(lab[0].astype(np.int64).tolist())
+    assert results[0] == [0, 1, 2]
+    for got in results[1:]:
+        assert got == results[0], results
+
+
+# ---------------------------------------------------------------------------
+# bug squash: event-queue empty pop/peek discipline
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("qcls_name", ["HeapEventQueue", "ListEventQueue"])
+def test_event_queue_empty_pop_raises_without_counter_corruption(qcls_name):
+    """Regression: HeapEventQueue.pop incremented ``popped`` before
+    heappop could raise, corrupting the events/sec stats; peek_time
+    raised a bare IndexError.  Both now raise descriptively and leave
+    every counter untouched; ListEventQueue mirrors the contract."""
+    from repro.runtime import events as E
+    q = getattr(E, qcls_name)()
+    with pytest.raises(IndexError, match=qcls_name):
+        q.pop()
+    assert q.popped == 0 and q.pushed == 0
+    with pytest.raises(IndexError, match=qcls_name):
+        q.peek_time()
+    h = q.push(1.0, None, ())
+    q.cancel(h)
+    with pytest.raises(IndexError, match=qcls_name):      # only-dead queue
+        q.pop()
+    assert q.popped == 0 and q.cancelled == 1
+    q.push(2.0, None, ("x",))
+    assert q.pop()[3] == ("x",)                           # still functional
+    assert q.popped == 1
+    with pytest.raises(IndexError, match=qcls_name):
+        q.pop()
+    assert q.popped == 1                                  # stats intact
