@@ -1,0 +1,303 @@
+"""Chaos-fabric benchmark — the tracked zero-loss / recovery contract.
+
+One tracked artifact, written to the repo root:
+
+* ``BENCH_chaos.json`` — the canonical chaos scenario (two-stage
+  detect->embed pipeline spanning two hubs, hedged shard dispatch; see
+  ``repro.runtime.replication.build_chaos_engine``) swept over a seeded
+  fault-storm grid: fault kind (lane crash, lane hang, transfer
+  corruption, link flap, everything-at-once storm) x intensity x seed.
+  Every cell must deliver **every** offered frame exactly once — zero
+  loss and zero duplicates under any seeded storm is the hard contract,
+  not a statistic — and the sweep tracks goodput retention (cell
+  goodput / fault-free goodput) and p99 inflation as the degradation
+  telemetry.
+
+Acceptance:
+
+* zero frame loss and exactly-once delivery in every cell;
+* goodput retention >= 0.7 at the headline intensity (the full storm
+  at the high rate);
+* chaos machinery off == chaos machinery absent: with an empty
+  ``FaultPlan`` the Table 1 broadcast FPS is **bit-identical** (exact
+  float equality) to an engine built without any fault plan.
+
+The committed file embeds a ``smoke_baseline`` so CI can re-run
+``--smoke --check`` and compare retention like-for-like (>20%
+regression or any frame loss fails).  All metrics are virtual-time
+deterministic — identical on any machine.
+
+Run:  PYTHONPATH=src python benchmarks/chaos_bench.py [--smoke] [--check]
+"""
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")  # reproducible CI numbers
+
+import argparse
+import json
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+CHAOS_JSON = os.path.join(ROOT, "BENCH_chaos.json")
+
+CHAOS_SCHEMA = "champ.chaos_bench.v1"
+
+FULL_CFG = dict(n_bursts=150, seeds=(1, 2, 3),
+                rates=(2.0, 6.0), corrupt_ps=(0.02, 0.08),
+                table1_frames=200)
+SMOKE_CFG = dict(n_bursts=60, seeds=(1,),
+                 rates=(2.0, 6.0), corrupt_ps=(0.02, 0.08),
+                 table1_frames=100)
+
+# intensity index -> storm kwargs, parameterized by (rate, corrupt_p).
+# "storm" is the headline: every fault kind at once.
+KINDS = {
+    "crash":     lambda r, p: dict(crash_rate=r),
+    "hang":      lambda r, p: dict(hang_rate=r),
+    "corrupt":   lambda r, p: dict(corrupt_p=p),
+    "link_flap": lambda r, p: dict(link_down_rate=r, link_down_s=0.1),
+    "storm":     lambda r, p: dict(crash_rate=r, hang_rate=0.5 * r,
+                                   hub_loss_rate=0.3, link_down_rate=0.5 * r,
+                                   link_down_s=0.1, corrupt_p=p),
+}
+
+
+def _quarantine():
+    """Bench lease tuning: short leases so quarantined lanes rejoin
+    within the measurement window instead of sitting out the run."""
+    from repro.runtime.faults import QuarantinePolicy
+    return QuarantinePolicy(lease_s=0.2, probation_s=0.2)
+
+
+def _run_cell(plan, n_bursts: int):
+    from repro.runtime import run_chaos
+    return run_chaos(plan, quarantine=_quarantine(), n_bursts=n_bursts)
+
+
+def _goodput(rep) -> float:
+    """Delivered frames per second of *delivery* span — robust to
+    trailing fault/reinstate events inflating sim_time after the last
+    frame left the pipeline."""
+    return rep.frames_out / max(rep.last_out_t, 1e-9)
+
+
+def bench_storm_sweep(cfg) -> dict:
+    """The (kind x intensity x seed) grid.  Each cell reports loss,
+    duplicates, goodput retention vs the fault-free baseline, p99
+    inflation, and the recovery counters that explain them."""
+    from repro.runtime import chaos_lane_names
+    from repro.runtime.faults import FaultPlan
+
+    base = _run_cell(None, cfg["n_bursts"])
+    base_goodput = _goodput(base)
+    # the fault window covers the whole offered-load span
+    horizon = max(base.last_out_t, 0.5)
+    lanes = chaos_lane_names()
+
+    out = {
+        "baseline": {
+            "frames": base.frames_out,
+            "goodput_fps": round(base_goodput, 2),
+            "p99_ms": round(base.p99() * 1e3, 2),
+        },
+        "cells": {},
+    }
+    all_zero_loss = True
+    all_exactly_once = True
+    for kind, mk in KINDS.items():
+        for i, (rate, cp) in enumerate(zip(cfg["rates"], cfg["corrupt_ps"])):
+            level = ("low", "high")[min(i, 1)]
+            worst = None
+            for seed in cfg["seeds"]:
+                plan = FaultPlan.storm(
+                    seed=seed, horizon_s=horizon, lanes=lanes,
+                    hubs=(0, 1), links=((0, 1),), **mk(rate, cp))
+                rep = _run_cell(plan, cfg["n_bursts"])
+                lost = rep.frames_in - rep.frames_out
+                dup = rep.faults["duplicates"]
+                all_zero_loss &= (lost == 0)
+                all_exactly_once &= (dup == 0)
+                cell = {
+                    "seed": seed,
+                    "faults_injected": rep.faults["injected"],
+                    "frames_lost": lost,
+                    "duplicates": dup,
+                    "goodput_retention": round(
+                        _goodput(rep) / base_goodput, 4),
+                    "p99_inflation": round(
+                        rep.p99() / max(base.p99(), 1e-9), 2),
+                    "recovery": {k: rep.faults[k] for k in
+                                 ("hang_promoted", "redispatched", "retries",
+                                  "corrupt_detected", "resends",
+                                  "quarantined", "reinstated",
+                                  "reroute_blocked")},
+                }
+                if (worst is None or cell["goodput_retention"]
+                        < worst["goodput_retention"]):
+                    worst = cell
+            out["cells"][f"{kind}/{level}"] = worst
+    out["all_zero_loss"] = all_zero_loss
+    out["all_exactly_once"] = all_exactly_once
+    return out
+
+
+def bench_bit_identity(cfg) -> dict:
+    """Chaos off must be chaos absent: an engine built with an *empty*
+    FaultPlan replays the Table 1 broadcast experiment bit-identically
+    (exact float equality, not a tolerance) to one built with no plan."""
+    from repro.runtime import run_replicated
+    from repro.runtime.faults import FaultPlan
+
+    n = cfg["table1_frames"]
+    plain = run_replicated("ncs2", 5, "broadcast", n)
+    chaos = run_replicated("ncs2", 5, "broadcast", n,
+                           fault_plan=FaultPlan())
+    return {
+        "workload": f"broadcast ncs2 x5, {n} frames (Table 1 shape)",
+        "fps_no_plan": plain.throughput(),
+        "fps_empty_plan": chaos.throughput(),
+        "p99_no_plan": plain.p99(),
+        "p99_empty_plan": chaos.p99(),
+        "bit_identical": bool(
+            plain.throughput() == chaos.throughput()
+            and plain.p99() == chaos.p99()
+            and plain.frames_out == chaos.frames_out),
+    }
+
+
+def _acceptance(sweep: dict, ident: dict) -> dict:
+    head = sweep["cells"]["storm/high"]
+    return {
+        "scenario": "storm/high (all fault kinds, high rate, worst seed)",
+        "all_zero_loss": sweep["all_zero_loss"],
+        "all_exactly_once": sweep["all_exactly_once"],
+        "headline_goodput_retention": head["goodput_retention"],
+        "pass_retention_0p7": head["goodput_retention"] >= 0.7,
+        "headline_p99_inflation": head["p99_inflation"],
+        "bit_identical_fault_free": ident["bit_identical"],
+        "pass_chaos": bool(sweep["all_zero_loss"]
+                           and sweep["all_exactly_once"]
+                           and head["goodput_retention"] >= 0.7
+                           and ident["bit_identical"]),
+    }
+
+
+# ---------------------------------------------------------------------------
+# schema validation + regression check
+# ---------------------------------------------------------------------------
+def validate_chaos(doc: dict):
+    assert doc.get("schema") == CHAOS_SCHEMA, "bad/missing schema tag"
+    assert doc.get("mode") in ("full", "smoke"), "bad mode"
+    for section in ("storm_sweep", "bit_identity", "acceptance"):
+        assert section in doc, f"missing section {section!r}"
+    for cell in ("crash/high", "hang/high", "corrupt/high",
+                 "link_flap/high", "storm/high"):
+        assert cell in doc["storm_sweep"]["cells"], f"missing cell {cell!r}"
+    for kk in ("all_zero_loss", "all_exactly_once",
+               "headline_goodput_retention", "bit_identical_fault_free"):
+        assert kk in doc["acceptance"], f"acceptance missing {kk!r}"
+    if doc["mode"] == "full":
+        assert "smoke_baseline" in doc, "missing smoke_baseline"
+        assert "headline_goodput_retention" in doc["smoke_baseline"], \
+            "smoke_baseline missing headline_goodput_retention"
+
+
+def load_committed():
+    try:
+        doc = json.load(open(CHAOS_JSON))
+        validate_chaos(doc)
+    except Exception as e:
+        return None, [f"committed BENCH_chaos.json malformed: {e}"]
+    return doc, []
+
+
+def run_check(fresh: dict, smoke: bool, committed: dict) -> list:
+    failures = []
+    acc = fresh["acceptance"]
+    if not acc["all_zero_loss"]:
+        failures.append("frame loss under seeded faults (zero-loss "
+                        "contract broken)")
+    if not acc["all_exactly_once"]:
+        failures.append("duplicate delivery under seeded faults "
+                        "(exactly-once contract broken)")
+    if not acc["bit_identical_fault_free"]:
+        failures.append("empty FaultPlan no longer bit-identical to "
+                        "fault-free engine")
+    base = committed["smoke_baseline"] if smoke else committed["acceptance"]
+    got = acc["headline_goodput_retention"]
+    want = base["headline_goodput_retention"]
+    if got < 0.8 * want:
+        failures.append(f"goodput retention regressed >20%: "
+                        f"{got} vs baseline {want}")
+    if not acc["pass_retention_0p7"]:
+        failures.append(f"headline goodput retention below 0.7: {got}")
+    return failures
+
+
+def run() -> dict:
+    """Validation-suite entry (``benchmarks/run.py``): smoke-size check
+    that every seeded storm still delivers every frame exactly once."""
+    sweep = bench_storm_sweep(SMOKE_CFG)
+    ident = bench_bit_identity(SMOKE_CFG)
+    acc = _acceptance(sweep, ident)
+    return {"acceptance": acc, "pass_chaos": acc["pass_chaos"]}
+
+
+# ---------------------------------------------------------------------------
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes; writes BENCH_chaos.smoke.json "
+                         "instead of overwriting the committed baseline")
+    ap.add_argument("--check", action="store_true",
+                    help="validate committed BENCH_chaos.json and fail on "
+                         "frame loss or >20% retention regression")
+    args = ap.parse_args()
+
+    cfg = SMOKE_CFG if args.smoke else FULL_CFG
+    mode = "smoke" if args.smoke else "full"
+    committed = None
+    if args.check:
+        committed, failures = load_committed()
+        if failures:
+            raise SystemExit("benchmark check failed: " + "; ".join(failures))
+
+    print(f"[chaos_bench] mode={mode} bursts={cfg['n_bursts']} "
+          f"seeds={cfg['seeds']} rates={cfg['rates']}")
+    doc = {"schema": CHAOS_SCHEMA, "mode": mode}
+    doc["storm_sweep"] = bench_storm_sweep(cfg)
+    doc["bit_identity"] = bench_bit_identity(cfg)
+    doc["acceptance"] = _acceptance(doc["storm_sweep"], doc["bit_identity"])
+
+    if not args.smoke:
+        # every metric is virtual-time deterministic, so the CI smoke
+        # baseline is just the smoke-config run — no subprocess sampling
+        print("[chaos_bench] measuring smoke baseline for CI")
+        s_sweep = bench_storm_sweep(SMOKE_CFG)
+        s_ident = bench_bit_identity(SMOKE_CFG)
+        s_acc = _acceptance(s_sweep, s_ident)
+        doc["smoke_baseline"] = {
+            "headline_goodput_retention":
+                s_acc["headline_goodput_retention"],
+            "headline_p99_inflation": s_acc["headline_p99_inflation"],
+        }
+
+    if args.check:
+        # check BEFORE writing: a failed check must not clobber the
+        # committed baseline it was compared against
+        failures = run_check(doc, args.smoke, committed)
+        if failures:
+            raise SystemExit("benchmark check failed: " + "; ".join(failures))
+        print("[chaos_bench] check OK — no tracked contract regressed")
+
+    path = CHAOS_JSON if not args.smoke else \
+        os.path.join(ROOT, "BENCH_chaos.smoke.json")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+    print(f"[chaos_bench] wrote {path}")
+    print(json.dumps(doc["acceptance"], indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -13,8 +13,8 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")  # reproducible benchmark numbers
 import json
 import time
 
-from benchmarks import (bus_scaling, fabric_bench, gallery_bench, hotswap,
-                        latency_bench, pipeline_latency, power_bench,
+from benchmarks import (bus_scaling, chaos_bench, fabric_bench, gallery_bench,
+                        hotswap, latency_bench, pipeline_latency, power_bench,
                         power_model, roofline_report, secure_match)
 
 BENCHES = [
@@ -27,6 +27,7 @@ BENCHES = [
     ("identification_fastpath", gallery_bench.run, "pass_fastpath"),
     ("tail_latency_fastpath", latency_bench.run, "pass_tail"),
     ("multi_hub_fabric", fabric_bench.run, "pass_fabric"),
+    ("chaos_fabric", chaos_bench.run, "pass_chaos"),
     ("roofline_report", roofline_report.run, None),
 ]
 

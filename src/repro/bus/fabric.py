@@ -76,6 +76,8 @@ class InterHubLink:
 
     def reset(self):
         self.free_at = 0.0
+        self.up = True
+        self.downs = 0
         self.transfers = 0
         self.bytes_moved = 0
         self.busy_s = 0.0
@@ -90,6 +92,10 @@ class InterHubLink:
         return self.p.overhead_s + nbytes / self.p.bandwidth
 
     def transfer(self, t_req: float, nbytes: int) -> float:
+        if not self.up:
+            raise RuntimeError(
+                f"link {self.a}<->{self.b} is down; the router must not "
+                f"schedule transfers over a dead link")
         start = max(t_req, self.free_at)
         wire = nbytes / self.p.bandwidth
         dur = self.p.overhead_s + wire
@@ -118,6 +124,8 @@ class InterHubLink:
             "suppressed_transfers": self.suppressed_transfers,
             "suppressed_bytes": self.suppressed_bytes,
             "suppressed_s": round(self.suppressed_s, 6),
+            "up": self.up,
+            "downs": self.downs,
         }
 
 
@@ -171,6 +179,7 @@ class FabricRouter:
         self._reset_counters()
 
     def _reset_counters(self):
+        self._down_links = 0      # reset() revives every link (lk.reset())
         self.cross_hub_transfers = 0
         self.suppressed_transfers = 0
         self.suppressed_bytes = 0
@@ -201,6 +210,36 @@ class FabricRouter:
                 key[0], key[1],
                 self._link_params.get(key, self._default_link))
         return lk
+
+    # -- link fault state ------------------------------------------------------
+    def set_link_state(self, a: int, b: int, up: bool):
+        """Mark the ``a<->b`` link up or down.  While down, ``route_cost``
+        over it is +inf (so cost-aware dispatch falls back to alternate
+        hubs) and ``transfer`` refuses to schedule over it.  In-flight
+        transfers are not interrupted: a link fault stops *new* routes."""
+        self._route(a, b)
+        if a == b:
+            raise ValueError("a hub has no link to itself")
+        lk = self.link(a, b)
+        if lk.up != up:
+            lk.up = up
+            if not up:
+                lk.downs += 1
+                self._down_links += 1
+            else:
+                self._down_links -= 1
+
+    def link_ok(self, a: Optional[int], b: Optional[int]) -> bool:
+        """Is the route between these hubs usable?  Local routes (same
+        hub, or a missing side) never traverse a link, so always True."""
+        if a is None or b is None or a == b:
+            return True
+        key = (a, b) if a <= b else (b, a)
+        lk = self._links.get(key)
+        return lk is None or lk.up
+
+    def has_down_links(self) -> bool:
+        return self._down_links > 0
 
     def _route(self, src: Optional[int], dst: Optional[int]) -> Tuple[int, int]:
         """Normalize a (src, dst) pair: a missing side collapses to the
@@ -241,6 +280,8 @@ class FabricRouter:
             if t is not None:
                 c += max(h.bus.free_at - t, 0.0)
             return c
+        if not self.link_ok(s, d):
+            return float("inf")
         hs, hd = self.hubs[s], self.hubs[d]
         c = hs.local_cost(nbytes) + hd.local_cost(nbytes)
         key = (s, d) if s <= d else (d, s)
@@ -341,6 +382,7 @@ class FabricRouter:
             "wasted_transfers": self.wasted_transfers,
             "wasted_bytes": self.wasted_bytes,
             "cross_hub_transfers": self.cross_hub_transfers,
+            "down_links": self._down_links,
             "n_hubs": self.n_hubs,
             "hubs": hubs,
             "links": links,

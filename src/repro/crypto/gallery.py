@@ -102,6 +102,7 @@ class SecureGallery:
         self._ann_assign = np.empty((0,), np.int32)       # gid -> cell
         self._ann_n_cells = 0
         self.ann_stats = {"trainings": 0, "assign_calls": 0, "packs": 0}
+        self.failovers = 0                 # shard rebuilds after lane death
         self.last_match_stats: dict = {}
 
     # -- enrollment ------------------------------------------------------------
@@ -376,6 +377,41 @@ class SecureGallery:
         return labels, jnp.asarray(all_s)
 
     # -- topology ----------------------------------------------------------------
+    def failover_shard(self, dead: int, into: Optional[int] = None) -> int:
+        """A replica lane died: absorb its shard into a survivor.
+
+        The rebuild reads the dead shard's *encrypted-at-rest* blob —
+        never a decrypted ``_prep`` view — so failover works after
+        ``seal()`` and a crashed lane's plaintext working set is never
+        the recovery source.  Global row ids ride along, so the ANN
+        codebook and per-gid cell assignments survive untouched (the
+        absorbing shard's packed layout rebuilds lazily on its next ANN
+        match).  The dead shard stays in the topology as an empty slot —
+        matching a lane group running one replica short until the
+        operator reshards.  Returns the absorbing shard's index."""
+        if not 0 <= dead < self.n_shards:
+            raise ValueError(f"no shard {dead}; this gallery has "
+                             f"{self.n_shards}")
+        if self.n_shards < 2:
+            raise ValueError("cannot fail over a single-shard gallery: "
+                             "no surviving shard to absorb into")
+        if into is None:
+            survivors = [s for s in range(self.n_shards) if s != dead]
+            into = min(survivors,
+                       key=lambda s: (len(self._shard_ids[s]), s))
+        elif into == dead or not 0 <= into < self.n_shards:
+            raise ValueError(f"bad failover target {into} for dead "
+                             f"shard {dead}")
+        if self._shards[dead] is not None and len(self._shard_ids[dead]):
+            prot = decrypt_array(self._cipher_key, self._shards[dead])
+            self._append_to_shard(into, np.asarray(prot),
+                                  self._shard_ids[dead])
+        self._shards[dead] = None
+        self._shard_ids[dead] = np.empty((0,), np.int64)
+        self._prep[dead] = {}
+        self.failovers += 1
+        return into
+
     def reshard(self, n_shards: int):
         """Re-split the gallery across ``n_shards`` shards (mirror the lane
         group gaining/losing a replica cartridge).  The ANN codebook and

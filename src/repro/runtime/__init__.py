@@ -1,20 +1,25 @@
 from repro.runtime.registry import CapabilityRegistry, SlotRecord
 from repro.runtime.engine import StreamEngine, EngineReport, validate_chain
 from repro.runtime.events import HeapEventQueue, ListEventQueue
+from repro.runtime.faults import (FaultEvent, FaultPlan, QuarantinePolicy,
+                                  RetryPolicy, frame_checksum)
 from repro.runtime.metrics import StreamingHistogram
 from repro.runtime.power import PowerGovernor
 from repro.runtime.replication import (build_battery_engine,
+                                       build_chaos_engine,
                                        build_cross_hub_hedge_engine,
                                        build_fabric_engine,
                                        build_mixed_engine,
                                        build_replicated_engine,
                                        build_routed_pipeline_engine,
+                                       chaos_lane_names,
                                        engine_broadcast_fps,
                                        engine_shard_fps,
                                        fabric_shard_fps,
                                        make_inference_cartridge,
                                        run_battery,
+                                       run_chaos,
                                        run_fabric,
                                        run_replicated)
-from repro.runtime.health import HealthMonitor, quantile
+from repro.runtime.health import HealthMonitor, QuarantineLedger, quantile
 from repro.runtime.elastic import ElasticController, largest_mesh

@@ -26,12 +26,16 @@ import numpy as np
 @dataclass
 class ElasticEvent:
     t_step: int
-    kind: str           # "fail" | "join" | "remesh" | "restore"
+    kind: str           # "fail" | "join" | "remesh" | "restore" | "paused"
     detail: str = ""
 
 
 def largest_mesh(n_devices: int, model_parallel: int) -> tuple:
-    """(data, model) for the largest usable power-of-two data axis."""
+    """(data, model) for the largest usable power-of-two data axis.
+    ``(0, 0)`` when no devices remain — the all-failed case must degrade
+    upstream, not divide by zero here."""
+    if n_devices <= 0:
+        return (0, 0)
     model = min(model_parallel, n_devices)
     data = n_devices // model
     data = 2 ** int(math.log2(data)) if data else 1
@@ -59,8 +63,24 @@ class ElasticController:
         self.events.append(ElasticEvent(step, "join", f"device {idx}"))
 
     # -- re-meshing ---------------------------------------------------------------
+    @property
+    def paused(self) -> bool:
+        """True while no healthy devices exist (training cannot proceed;
+        the next ``join`` + ``remesh`` resumes)."""
+        return self.mesh is None
+
     def remesh(self, step: int):
         devs = [self.all_devices[i] for i in sorted(self.healthy)]
+        if not devs:
+            # every device failed: degrade to a paused state instead of
+            # crashing on a 0-device mesh (0 // 0, log2(0)); state stays
+            # committed in the checkpoint store, so a later join picks up
+            # exactly where the last committed step left off
+            self.mesh = None
+            self.events.append(ElasticEvent(
+                step, "paused",
+                "0 healthy devices; training paused awaiting join"))
+            return None
         data, model = largest_mesh(len(devs), self.model_parallel)
         use = devs[: data * model]
         arr = np.array(use).reshape(data, model)

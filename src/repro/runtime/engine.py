@@ -124,7 +124,10 @@ from repro.bus.simulator import BusParams, SharedBus
 from repro.core.cartridge import Cartridge, PassThrough
 from repro.core import messages as msg
 from repro.runtime.events import HeapEventQueue
-from repro.runtime.health import HealthMonitor
+from repro.runtime import faults as flt
+from repro.runtime.faults import (FaultPlan, QuarantinePolicy, RetryPolicy,
+                                  frame_checksum)
+from repro.runtime.health import HealthMonitor, QuarantineLedger
 from repro.runtime.metrics import StreamingHistogram
 from repro.runtime.power import PowerGovernor
 from repro.runtime.registry import CapabilityRegistry, SlotRecord
@@ -136,6 +139,11 @@ REMOVE_PAUSE_S = 0.5     # paper §4.2: ~0.5 s reconfiguration on removal
 BROADCAST_RESULT_BYTES = 256
 
 DISPATCH_DISCIPLINES = ("ewma", "naive")
+
+# routed handoff verdict: the destination group exists but no lane of it
+# is reachable right now (dead lanes / down links) — hold and retry, never
+# pretend the route is local
+_BLOCKED = object()
 
 
 @dataclass
@@ -151,6 +159,15 @@ def _hedge_counters() -> dict:
     return {"issued": 0, "won_by_backup": 0, "wasted": 0,
             "cancelled_queued": 0, "migrated": 0,
             "cross_hub": 0, "dropped_in_flight": 0}
+
+
+def _fault_counters() -> dict:
+    return {"injected": 0, "lane_crash": 0, "lane_hang": 0,
+            "hub_power_loss": 0, "link_down": 0, "link_up": 0,
+            "hang_promoted": 0, "redispatched": 0, "retries": 0,
+            "budget_exhausted": 0, "corrupt_detected": 0, "resends": 0,
+            "quarantined": 0, "reinstated": 0,
+            "reroute_blocked": 0, "duplicates": 0}
 
 
 @dataclass
@@ -173,6 +190,9 @@ class EngineReport:
     stage_hist: dict = field(default_factory=dict)    # stage name -> histogram
     hedges: dict = field(default_factory=_hedge_counters)
     power: dict = field(default_factory=dict)         # PowerGovernor.report()
+    faults: dict = field(default_factory=_fault_counters)
+    last_out_t: float = 0.0    # when the last frame completed — goodput
+                               # denominator robust to trailing fault events
 
     def energy_j(self) -> float:
         """Total electrical energy the fleet drew (joules, virtual time)."""
@@ -214,8 +234,30 @@ class EngineReport:
             "hedges": dict(self.hedges),
         }
 
+    def merged_downtime(self) -> list:
+        """Downtime windows with overlaps coalesced.  Swap pauses stack
+        (``_pause`` extends ``paused_until``) and a halt window can span
+        a pause, so the raw ``downtime`` entries may overlap; summing
+        them double-counts the shared seconds.  Returns disjoint
+        ``(t0, t1)`` intervals, sorted."""
+        spans = sorted((t0, t1) for t0, t1, _ in self.downtime if t1 > t0)
+        merged: list = []
+        for t0, t1 in spans:
+            if merged and t0 <= merged[-1][1]:
+                merged[-1][1] = max(merged[-1][1], t1)
+            else:
+                merged.append([t0, t1])
+        return [(t0, t1) for t0, t1 in merged]
+
     def total_downtime(self) -> float:
-        return sum(t1 - t0 for t0, t1, _ in self.downtime)
+        return sum(t1 - t0 for t0, t1 in self.merged_downtime())
+
+    def availability(self) -> float:
+        """Fraction of the run the pipeline accepted work, computed over
+        the merged (non-overlapping) downtime windows."""
+        if self.sim_time <= 0.0:
+            return 1.0
+        return max(0.0, 1.0 - self.total_downtime() / self.sim_time)
 
 
 class _Lane:
@@ -235,6 +277,11 @@ class _Lane:
         self.hub = 0                       # fabric hub this device plugs into
         self.bfree_at = 0.0                # broadcast: this replica's own
                                            # previous frame's finish time
+        # chaos-fabric state (inert unless a FaultPlan is installed)
+        self.inflight = None               # (svc_handle, batch) in service
+        self.wd_handle: Optional[int] = None  # armed watchdog event
+        self.cycle_seq = 0                 # guards stale watchdog firings
+        self.hang_next = False             # hang fault latched while idle
         # per-lane service-time model: EWMA point estimate (seeded from the
         # calibrated DeviceModel) + streaming distribution for the hedge
         # deadline quantile.  Both are per batch-normalized frame cost.
@@ -300,7 +347,7 @@ class _LaneGroup:
                   exclude: Optional[_Lane] = None,
                   prefer_hub: Optional[int] = None,
                   toll=None, est_scale=None,
-                  parked=None) -> Optional[_Lane]:
+                  parked=None, dead=None) -> Optional[_Lane]:
         """Dispatch choice; prefers lanes past their handshake gate.
 
         ``weighted`` (the default) minimizes estimated completion time of
@@ -325,9 +372,16 @@ class _LaneGroup:
         power-parked hubs; they remain a last resort so frames are never
         dropped when every lane of a group is parked (they queue and run
         after the unpark).
+
+        ``dead`` (lane -> bool) is a *hard* exclusion — a crashed or
+        quarantined lane must never be picked, not even as a last
+        resort.  With every lane dead the pick returns None and the
+        caller buffers the frame (zero loss; reinstatement drains it).
         """
         lanes = self.lanes if exclude is None else \
             [l for l in self.lanes if l is not exclude]
+        if dead is not None:
+            lanes = [l for l in lanes if not dead(l)]
         if not lanes:
             return None
         ready = [l for l in lanes if l.ready_at <= now]
@@ -365,7 +419,11 @@ class StreamEngine:
                  hedge_quantile: float = 0.95, hedge_min_obs: int = 8,
                  hedge_margin: float = 1.25, ewma_alpha: float = 0.25,
                  governor: Optional[PowerGovernor] = None,
-                 power_budget_w=None, route_aware: bool = True):
+                 power_budget_w=None, route_aware: bool = True,
+                 fault_plan: Optional[FaultPlan] = None,
+                 retry: Optional[RetryPolicy] = None,
+                 quarantine: Optional[QuarantinePolicy] = None,
+                 watchdog_margin: float = 8.0):
         if dispatch not in DISPATCH_DISCIPLINES:
             raise ValueError(f"unknown dispatch discipline {dispatch!r}")
         self.registry = registry
@@ -407,8 +465,20 @@ class StreamEngine:
         self._hold_buffer: deque = deque()   # frames buffered during pauses
         self._hedges: dict = {}              # (slot, seq) -> _HedgeTask
         self._frame_seq = itertools.count()
+        # chaos fabric: everything below is inert (and every chaos branch
+        # in the hot path is skipped) until a non-empty FaultPlan is
+        # installed, so fault-free runs stay bit-identical to Table 1
+        self.faults: FaultPlan = fault_plan or FaultPlan()
+        self.retry = retry or RetryPolicy()
+        self.qledger = QuarantineLedger(quarantine)
+        self.watchdog_margin = watchdog_margin
+        self._chaos = False
+        self._down: set = set()              # id(lane) of failed lanes
+        self._delivered: set = set()         # seqs delivered (chaos only)
         registry.subscribe(self._on_registry_event)
         self._rebuild()
+        if fault_plan is not None:
+            self.install_fault_plan(fault_plan)
 
     # -- pipeline construction ------------------------------------------------
     def _rebuild(self):
@@ -480,9 +550,16 @@ class StreamEngine:
         self._slot_index = {g.slot: i for i, g in enumerate(self._groups)}
         # power meter follows the physical population (detached sticks
         # stop drawing; new ones start accruing idle immediately)
+        self._sync_governor()
+
+    def _sync_governor(self):
+        """Reconcile the power meter with the *powered* population: a
+        crashed lane or a hub that lost power stops drawing exactly like
+        a detached stick (and resumes idle draw on reinstatement)."""
         self.governor.sync(self.now, {
             id(lane.cart): (lane.cart.name, lane.cart.device, lane.hub)
-            for lane in self._lane_by_cart.values()})
+            for lane in self._lane_by_cart.values()
+            if id(lane) not in self._down})
 
     def _rescue_lane(self, lane: _Lane, pos: int, held_off: int = 0):
         for m in lane.queue:
@@ -533,6 +610,26 @@ class StreamEngine:
         return {"est_scale": lambda l: gov.inflation(now, l.hub),
                 "parked": lambda h: gov.parked(now, h)}
 
+    def _pick_kwargs(self) -> dict:
+        """All dispatch hooks for ``pick_lane``: the governor's (when a
+        budget is active) plus — under a fault plan — the chaos fabric's
+        hard exclusion of down lanes and the quarantine ledger's
+        probation penalty (a reinstated lane re-earns traffic instead of
+        re-entering the EWMA loop at full weight)."""
+        kw = self._gov_pick_kwargs()
+        if not self._chaos:
+            return kw
+        down = self._down
+        kw["dead"] = lambda l: id(l) in down
+        ql, now = self.qledger, self.now
+        gov_scale = kw.get("est_scale")
+        if gov_scale is None:
+            kw["est_scale"] = lambda l: ql.penalty(l.cart.name, now)
+        else:
+            kw["est_scale"] = \
+                lambda l: gov_scale(l) * ql.penalty(l.cart.name, now)
+        return kw
+
     def _route_hub(self, idx: int, src_hub: Optional[int] = None,
                    nbytes: int = 0) -> Optional[int]:
         """Where the router should land a handoff bound for stage ``idx``:
@@ -547,7 +644,13 @@ class StreamEngine:
         backlog — so a cross-hub lane only wins when it beats the local
         queue including the toll.  ``route_aware=False`` (or the naive
         discipline) keeps the hub-blind estimate as the measurable
-        baseline."""
+        baseline.
+
+        Under a fault plan the choice is also reachability-aware: down
+        lanes are excluded, and with any fabric link down so are lanes
+        the source hub cannot reach.  If the group has lanes but none is
+        reachable, returns the ``_BLOCKED`` sentinel — the caller must
+        hold the batch and retry, never route as if local."""
         if self.fabric is None or idx >= len(self._groups):
             return None
         g = self._groups[idx]
@@ -558,8 +661,17 @@ class StreamEngine:
         if self.route_aware and weighted and src_hub is not None:
             fab, now = self.fabric, self.now
             toll = lambda l: fab.route_cost(src_hub, l.hub, nbytes, t=now)
-        lane = g.pick_lane(self.now, weighted=weighted, toll=toll,
-                           **self._gov_pick_kwargs())
+        kw = self._pick_kwargs()
+        guarded = False
+        if self._chaos and src_hub is not None \
+                and self.fabric.has_down_links():
+            guarded = True
+            fab2, prev_dead = self.fabric, kw.get("dead")
+            kw["dead"] = lambda l: ((prev_dead is not None and prev_dead(l))
+                                    or not fab2.link_ok(src_hub, l.hub))
+        lane = g.pick_lane(self.now, weighted=weighted, toll=toll, **kw)
+        if lane is None and g.lanes and (guarded or self._chaos):
+            return _BLOCKED
         return lane.hub if lane is not None else None
 
     # -- event queue ----------------------------------------------------------
@@ -576,6 +688,8 @@ class StreamEngine:
         self.report.bus_bytes = self.bus.bytes_moved
         self.report.bus = self.bus.stats()
         self.report.power = self.governor.report(self.now)
+        if self._chaos:
+            self.report.faults["quarantine"] = self.qledger.summary()
         self.report.stage_stats.update(self._retired_stats)
         for lane in self._lane_by_cart.values():
             self.report.stage_stats[lane.cart.name] = lane.stats
@@ -639,8 +753,10 @@ class StreamEngine:
             return
         lane = g.pick_lane(self.now, weighted=self.dispatch == "ewma",
                            prefer_hub=m.meta.pop("_hub", None),
-                           **self._gov_pick_kwargs())
+                           **self._pick_kwargs())
         if lane is None:
+            # no live lane right now (all down/quarantined): buffer, zero
+            # loss — reinstatement drains the hold buffer
             self._hold_buffer.append((idx, m))
             return
         lane.queue.append(m)
@@ -683,6 +799,8 @@ class StreamEngine:
         g = self._group_of_lane(lane)
         if g is None or self.halted_since is not None:
             return
+        if self._chaos and id(lane) in self._down:
+            return                           # quarantined: no new cycles
         if lane.busy or lane.held is not None or not lane.queue:
             return
         if self.now < self.paused_until:
@@ -739,8 +857,20 @@ class StreamEngine:
         lane.stats.batches += 1
         lane.stats.max_batch = max(lane.stats.max_batch, b)
         self.governor.on_cycle_start(self.now, lane.cart, dur, svc)
-        self._push_event(self.now + dur, self._lane_done, lane, batch,
-                         svc / factor)
+        handle = self._push_event(self.now + dur, self._lane_done, lane,
+                                  batch, svc / factor)
+        if self._chaos:
+            # remember the cycle so a crash can cancel it and recover the
+            # batch; arm the watchdog that promotes a hang into a failure
+            lane.cycle_seq += 1
+            lane.inflight = (handle, batch)
+            if lane.hang_next:
+                lane.hang_next = False       # the service never completes
+                self._events.cancel(handle)
+            lane.wd_handle = self._push_event(
+                self.now + max(self._watchdog_deadline(lane, factor) * infl,
+                               dur + 1e-6),
+                self._watchdog_fire, lane, lane.cycle_seq)
 
     def _unpark_retry(self, lane: _Lane):
         lane.parked_wait = False
@@ -795,7 +925,7 @@ class StreamEngine:
             stalled = True
             alt = g.pick_lane(self.now, weighted=self.dispatch == "ewma",
                               exclude=task.primary,
-                              **self._gov_pick_kwargs())
+                              **self._pick_kwargs())
             if alt is None or len(alt.queue) >= self.queue_cap:
                 continue                    # no headroom to speculate into
             task.check_handle = None
@@ -858,7 +988,7 @@ class StreamEngine:
             return
         keep: deque = deque()
         weighted = self.dispatch == "ewma"
-        gov_kw = self._gov_pick_kwargs()
+        gov_kw = self._pick_kwargs()
         for m in lane.queue:
             if m.meta.get("_hedge_copy"):
                 keep.append(m)
@@ -942,6 +1072,8 @@ class StreamEngine:
                     dst = self._route_hub(g2.pos + 1, src_hub=lane.hub,
                                           nbytes=self._msg_bytes(m)) \
                         if g2 is not None else None
+                    if dst is _BLOCKED:     # nothing reachable to save:
+                        dst = None          # book the local egress only
                     self.fabric.suppress(
                         self._msg_bytes(m), src=lane.hub, dst=dst,
                         t=self.now, n_endpoints=self._n_endpoints(lane.hub),
@@ -952,6 +1084,11 @@ class StreamEngine:
         return deliver
 
     def _lane_done(self, lane: _Lane, batch: list, svc_norm: float = 0.0):
+        if self._chaos:
+            lane.inflight = None
+            if lane.wd_handle is not None:   # cycle completed: disarm
+                self._events.cancel(lane.wd_handle)
+                lane.wd_handle = None
         lane.stats.processed += len(batch)
         lane.busy = False
         self.governor.on_cycle_end(self.now, lane.cart)
@@ -999,6 +1136,22 @@ class StreamEngine:
             # The pre-route decision is fabric-aware: it charges each
             # candidate lane the current cost of the route to its hub.
             dst_hub = self._route_hub(nxt, src_hub=lane.hub, nbytes=nbytes)
+            if dst_hub is _BLOCKED:
+                # every destination lane is down or unreachable over the
+                # surviving links: hold the serviced batch at the source
+                # and re-probe the route with backoff (zero loss — link
+                # restore or lane reinstatement unblocks it)
+                self.report.faults["reroute_blocked"] += 1
+                lane.held = batch
+                m0 = batch[0]
+                attempt = m0.meta.get("_retries", 0)
+                m0.meta["_retries"] = attempt + 1
+                self._note_retry(m0)
+                self._push_event(
+                    self.now + self.retry.backoff(attempt,
+                                                  key=f"route:{m0.seq}"),
+                    self._retry_handoff, lane)
+                return
             done = self.fabric.transfer(
                 self.now, nbytes, self._n_endpoints(lane.hub),
                 src=lane.hub, dst=dst_hub,
@@ -1012,7 +1165,8 @@ class StreamEngine:
         else:
             done = self.bus.transfer(self.now, nbytes, self._n_endpoints())
         nxt_group = self._groups[nxt] if nxt < len(self._groups) else None
-        self._push_event(done, self._arrive_next, nxt_group, batch)
+        self._send_batch(done, lane.hub if self.fabric is not None else None,
+                         nxt_group, batch)
         self._try_start_lane(lane)
 
     @staticmethod
@@ -1040,7 +1194,17 @@ class StreamEngine:
             self._enqueue(nxt_group.pos, m)
 
     def _complete(self, m: msg.Message):
+        if self._chaos:
+            # exactly-once audit: every recovery path must deliver each
+            # frame once.  A duplicate is counted (and the chaos bench
+            # fails on it), never silently dropped — masking a recovery
+            # bug would be worse than double delivery.
+            if m.seq in self._delivered:
+                self.report.faults["duplicates"] += 1
+            else:
+                self._delivered.add(m.seq)
         self.report.frames_out += 1
+        self.report.last_out_t = self.now
         lat = self.now - m.t_created
         self.report.latencies.append(lat)
         self.report.latency_hist.record(lat)
@@ -1054,9 +1218,16 @@ class StreamEngine:
         if self.now < self.paused_until:
             self._push_event(self.paused_until, self._try_start_broadcast, g)
             return
-        lanes = [l for l in g.lanes if l.ready_at <= self.now]
+        pool = g.lanes
+        if self._chaos and self._down:
+            pool = [l for l in pool if id(l) not in self._down]
+            if not pool:
+                # every replica is down: the frame waits in bqueue and
+                # reinstatement re-kicks the group (zero loss)
+                return
+        lanes = [l for l in pool if l.ready_at <= self.now]
         if not lanes:
-            self._push_event(min(l.ready_at for l in g.lanes),
+            self._push_event(min(l.ready_at for l in pool),
                              self._try_start_broadcast, g)
             return
         m = g.bqueue.popleft()
@@ -1139,10 +1310,22 @@ class StreamEngine:
             g.bheld = m
             self._push_event(self.now + 1e-3, self._retry_broadcast, g)
             return
+        src = None
         if self.fabric is not None:
             src = g.lanes[0].hub if g.lanes else None
             dst_hub = self._route_hub(nxt, src_hub=src,
                                       nbytes=self._msg_bytes(m))
+            if dst_hub is _BLOCKED:
+                self.report.faults["reroute_blocked"] += 1
+                g.bheld = m
+                attempt = m.meta.get("_retries", 0)
+                m.meta["_retries"] = attempt + 1
+                self._note_retry(m)
+                self._push_event(
+                    self.now + self.retry.backoff(attempt,
+                                                  key=f"route:{m.seq}"),
+                    self._retry_broadcast, g)
+                return
             done = self.fabric.transfer(
                 self.now, self._msg_bytes(m),
                 self._n_endpoints(src) if src is not None else 1,
@@ -1154,7 +1337,7 @@ class StreamEngine:
         else:
             done = self.bus.transfer(self.now, self._msg_bytes(m),
                                      self._n_endpoints())
-        self._push_event(done, self._arrive_next, self._groups[nxt], [m])
+        self._send_batch(done, src, self._groups[nxt], [m])
         self._try_start_broadcast(g)
 
     def _retry_broadcast(self, g: _LaneGroup):
@@ -1162,6 +1345,299 @@ class StreamEngine:
             return
         m, g.bheld = g.bheld, None
         self._broadcast_handoff(g, m)
+
+    # -- chaos fabric (fault injection + recovery) ----------------------------
+    # Every branch below is gated on self._chaos, which only a non-empty
+    # FaultPlan sets: a fault-free engine pushes exactly the same events
+    # in exactly the same order as before this subsystem existed, so
+    # Table 1 (and every committed BENCH headline) stays bit-identical.
+
+    def install_fault_plan(self, plan: FaultPlan):
+        """Arm a fault plan: schedules its events into the engine queue
+        and enables the recovery machinery.  Call before ``run`` (the
+        usual path is the ``fault_plan=`` constructor argument)."""
+        self.faults = plan
+        if plan.empty:
+            return
+        self._chaos = True
+        for ev in plan.events:
+            self._push_event(ev.t, self._fault_event, ev)
+
+    def _note_retry(self, m: msg.Message):
+        """Book one retry against a frame's budget.  The budget never
+        drops the frame (zero loss is the contract) — exhausting it
+        raises an operator alert so pathological cells are visible."""
+        self.report.faults["retries"] += 1
+        if m.meta.get("_retries", 0) == self.retry.budget + 1:
+            self.report.faults["budget_exhausted"] += 1
+            self.report.alerts.append(
+                (self.now, f"frame {m.seq}: retry budget "
+                           f"({self.retry.budget}) exhausted; still "
+                           f"retrying with capped backoff"))
+
+    def _retry_dispatch(self, pos: int, m: msg.Message):
+        """Re-dispatch a recovered frame with exponential backoff +
+        deterministic jitter (keyed on the frame, so replays agree)."""
+        attempt = m.meta.get("_retries", 0)
+        m.meta["_retries"] = attempt + 1
+        self._note_retry(m)
+        self._push_event(
+            self.now + self.retry.backoff(attempt, key=str(m.seq)),
+            self._reinject, pos, m)
+
+    # .. transfer integrity (frame checksum on bus handoffs) ..................
+    def _send_batch(self, done: float, src_hub: Optional[int],
+                    nxt_group: Optional[_LaneGroup], batch: list):
+        """Schedule a transferred batch's arrival.  Fault-free (or with a
+        zero corruption rate) this is exactly the old direct
+        ``_arrive_next`` push; under a corruption rate each frame is
+        stamped with a checksum and the arrival verifies it."""
+        if not self._chaos or self.faults.corrupt_p <= 0.0:
+            self._push_event(done, self._arrive_next, nxt_group, batch)
+            return
+        for m in batch:
+            m.meta["_csum"] = frame_checksum(m)
+        m0 = batch[0]
+        xmit = m0.meta.get("_xmit", 0)
+        m0.meta["_xmit"] = xmit + 1
+        if self.faults.corrupt_draw(m0.seq, xmit):
+            m0.meta["_csum"] ^= 1           # wire bit-flip
+        self._push_event(done, self._arrive_checked, src_hub, nxt_group,
+                         batch)
+
+    def _arrive_checked(self, src_hub: Optional[int],
+                        nxt_group: Optional[_LaneGroup], batch: list):
+        """Receiver-side checksum verification: a clean batch proceeds,
+        a corrupted one is re-sent from the host's source-side buffer
+        after a backoff (detection signal: checksum mismatch; recovery:
+        bounded re-send; the frame is never delivered corrupted)."""
+        clean = all(m.meta.pop("_csum", None) == frame_checksum(m)
+                    for m in batch)
+        if clean:
+            self._arrive_next(nxt_group, batch)
+            return
+        for m in batch:
+            m.meta.pop("_csum", None)       # strip survivors' stale stamps
+        self.report.faults["corrupt_detected"] += 1
+        m0 = batch[0]
+        attempt = m0.meta.get("_retries", 0)
+        m0.meta["_retries"] = attempt + 1
+        self._note_retry(m0)
+        self._push_event(
+            self.now + self.retry.backoff(attempt, key=f"csum:{m0.seq}"),
+            self._resend_batch, src_hub, nxt_group, batch)
+
+    def _resend_batch(self, src_hub: Optional[int],
+                      nxt_group: Optional[_LaneGroup], batch: list):
+        """Re-send a corrupted batch over the same route (the host still
+        holds the source-side buffer).  If the route's link died in the
+        meantime, wait it out with backoff — restore unblocks it."""
+        nbytes = sum(self._msg_bytes(m) for m in batch)
+        dst_hub = batch[0].meta.get("_hub")
+        if self.fabric is not None:
+            if not self.fabric.link_ok(src_hub, dst_hub):
+                self.report.faults["reroute_blocked"] += 1
+                m0 = batch[0]
+                attempt = m0.meta.get("_retries", 0)
+                m0.meta["_retries"] = attempt + 1
+                self._note_retry(m0)
+                self._push_event(
+                    self.now + self.retry.backoff(attempt,
+                                                  key=f"resend:{m0.seq}"),
+                    self._resend_batch, src_hub, nxt_group, batch)
+                return
+            done = self.fabric.transfer(
+                self.now, nbytes,
+                self._n_endpoints(src_hub) if src_hub is not None else 1,
+                src=src_hub, dst=dst_hub,
+                dst_endpoints=self._n_endpoints(dst_hub)
+                if dst_hub is not None else 1)
+        else:
+            done = self.bus.transfer(self.now, nbytes, self._n_endpoints())
+        self.report.faults["resends"] += 1
+        self._send_batch(done, src_hub, nxt_group, batch)
+
+    # .. watchdog (timeout promotion of hangs into failures) ..................
+    def _watchdog_deadline(self, lane: _Lane, factor: float) -> float:
+        """How long a cycle may run before a hang is declared: the hedge
+        machinery's own service histogram quantile (p99 of the lane's
+        observed batch-normalized service time) with a wide margin, so a
+        jittery-but-alive cycle never trips it; cold lanes fall back to
+        the straggler factor over the EWMA estimate."""
+        h = lane.svc_hist
+        if h.count >= self.hedge_min_obs:
+            base = max(h.quantile(0.99), lane.est_s)
+        else:
+            base = lane.est_s * max(self.health.straggler_factor, 1.0)
+        return base * factor * self.watchdog_margin
+
+    def _watchdog_fire(self, lane: _Lane, cycle: int):
+        """The service cycle outlived its deadline: promote the hang into
+        a failure — same recovery as a crash (the device may be wedged in
+        a way only a power cycle fixes)."""
+        lane.wd_handle = None
+        if not self._chaos or not lane.busy or lane.cycle_seq != cycle:
+            return
+        if self._group_of_lane(lane) is None or id(lane) in self._down:
+            return
+        self.report.faults["hang_promoted"] += 1
+        self._fail_lane(lane, "hang promoted by watchdog")
+
+    # .. fault events ..........................................................
+    def _fault_event(self, ev: flt.FaultEvent):
+        self.report.faults["injected"] += 1
+        if ev.kind == flt.LANE_CRASH:
+            lane = self._find_lane(ev.target)
+            if lane is not None and id(lane) not in self._down:
+                self.report.faults["lane_crash"] += 1
+                self._fail_lane(lane, "crash", min_lease_s=ev.duration)
+        elif ev.kind == flt.LANE_HANG:
+            lane = self._find_lane(ev.target)
+            if lane is not None and id(lane) not in self._down:
+                self.report.faults["lane_hang"] += 1
+                if lane.busy and lane.inflight is not None:
+                    # the in-service cycle silently never completes; the
+                    # watchdog armed with it will promote the hang
+                    self._events.cancel(lane.inflight[0])
+                else:
+                    lane.hang_next = True    # idle: the next cycle hangs
+        elif ev.kind == flt.HUB_POWER_LOSS:
+            hub = int(ev.target)
+            victims = [l for l in self._lane_by_cart.values()
+                       if l.hub == hub and id(l) not in self._down]
+            if victims:
+                self.report.faults["hub_power_loss"] += 1
+                self.report.alerts.append(
+                    (self.now, f"hub {ev.target} power loss "
+                               f"({len(victims)} lanes)"))
+                for lane in victims:
+                    self._fail_lane(lane, f"hub {ev.target} power loss",
+                                    min_lease_s=ev.duration)
+        elif ev.kind == flt.LINK_DOWN:
+            if self.fabric is not None:
+                a, b = ev.target
+                self.fabric.set_link_state(a, b, up=False)
+                self.report.faults["link_down"] += 1
+                if ev.duration > 0:
+                    self._push_event(self.now + ev.duration,
+                                     self._fault_link_restore, (a, b))
+
+    def _fault_link_restore(self, pair: tuple):
+        self.fabric.set_link_state(pair[0], pair[1], up=True)
+        self.report.faults["link_up"] += 1
+        # blocked handoffs re-probe on their own backoff timers; frames
+        # parked in the hold buffer can flow again now
+        self._drain_hold_buffer()
+
+    def _find_lane(self, name) -> Optional[_Lane]:
+        for lane in self._lane_by_cart.values():
+            if lane.cart.name == name:
+                return lane
+        return None
+
+    # .. failure + recovery ....................................................
+    def _fail_lane(self, lane: _Lane, reason: str, min_lease_s: float = 0.0):
+        """The device is gone (crash, hub power loss, or a promoted
+        hang): quarantine it, recover every frame it owned, stop its
+        power draw, and schedule the lease-expiry reinstatement."""
+        name = lane.cart.name
+        until = self.qledger.quarantine(name, self.now,
+                                        min_lease_s=min_lease_s)
+        self._down.add(id(lane))
+        self.registry.set_failed(lane.cart, True)
+        self.report.faults["quarantined"] += 1
+        self.report.swap_log.append(
+            (self.now, "fault", f"{name}: {reason}; quarantined until "
+                                f"{until:.3f}"))
+        lane.hang_next = False
+        if lane.wd_handle is not None:
+            self._events.cancel(lane.wd_handle)
+            lane.wd_handle = None
+        if lane.busy:
+            inflight_batch: list = []
+            if lane.inflight is not None:
+                handle, inflight_batch = lane.inflight
+                self._events.cancel(handle)  # False if already hung: fine
+                lane.inflight = None
+            lane.busy = False
+            # settle the energy uplift and clear the health ledger without
+            # teaching either that the aborted cycle was a completion
+            self.governor.on_cycle_end(self.now, lane.cart)
+            self.health.abort_request(name, self.now)
+            self._recover_copies(lane, inflight_batch)
+        if lane.queue:
+            queued = list(lane.queue)
+            lane.queue.clear()
+            self._recover_copies(lane, queued)
+        if lane.held is not None:
+            # the serviced results died in the device's output buffer:
+            # recompute (re-dispatch at the lane's own stage)
+            held, lane.held = lane.held, None
+            self._recover_copies(lane, held)
+        self._sync_governor()                # a dead stick stops drawing
+        self._push_event(until, self._reinstate_lane, lane)
+
+    def _recover_copies(self, lane: _Lane, msgs: list):
+        """Re-dispatch frames a dead lane owned, preserving exactly-once
+        through the hedge ledger: if another live copy of a frame exists
+        the dead copy is simply dropped (the loser-suppression accounting
+        already guarantees single delivery); the last live copy is
+        stripped of hedge state and re-dispatched with backoff."""
+        pos = self._slot_index.get(lane.slot, lane.pos)
+        for m in msgs:
+            key = (lane.slot, m.seq)
+            task = self._hedges.get(key)
+            if task is not None:
+                if task.winner is not None:
+                    # race already decided elsewhere: this copy is a dead
+                    # loser whose suppression now happens for free
+                    task.copies -= 1
+                    if task.copies <= 0:
+                        self._hedges.pop(key, None)
+                    continue
+                if task.copies > 1:
+                    # another live copy survives: drop this one
+                    task.copies -= 1
+                    if lane is task.backup or m.meta.get("_hedge_copy"):
+                        task.backup = None
+                    self.report.hedges["cancelled_queued"] += 1
+                    continue
+                # last live copy: promote to sole owner and re-dispatch
+                if task.check_handle is not None:
+                    self._events.cancel(task.check_handle)
+                self._hedges.pop(key, None)
+                m.meta.pop("_hedge_copy", None)
+            self.report.faults["redispatched"] += 1
+            self._retry_dispatch(pos, m)
+
+    def _reinstate_lane(self, lane: _Lane):
+        """Lease expiry: return a quarantined lane to service — on
+        probation (its pick-loop estimate carries the probation penalty
+        until the window passes cleanly)."""
+        if id(lane) not in self._down:
+            return                           # already reinstated/handled
+        name = lane.cart.name
+        if self._group_of_lane(lane) is None:
+            # unplugged while benched; registry cleared its fault state
+            self._down.discard(id(lane))
+            return
+        if self.qledger.quarantined(name, self.now):
+            # a flap extended the lease while this event was in flight
+            self._push_event(self.qledger.until(name),
+                             self._reinstate_lane, lane)
+            return
+        self._down.discard(id(lane))
+        self.registry.set_failed(lane.cart, False)
+        self.qledger.reinstate(name, self.now)
+        self.report.faults["reinstated"] += 1
+        self.report.swap_log.append(
+            (self.now, "reinstate", f"{name} (on probation)"))
+        self._sync_governor()                # idle draw resumes
+        self._drain_hold_buffer()
+        for g in list(self._groups):
+            if g.mode == "broadcast":
+                self._try_start_broadcast(g)
+        self._try_start_lane(lane)
 
     # -- hot-swap (paper §3.2/§4.2) -------------------------------------------
     def schedule_remove(self, t: float, slot: int):
@@ -1188,8 +1664,11 @@ class StreamEngine:
     def _drain_hold_buffer(self):
         if self.now < self.paused_until or self.halted_since is not None:
             return
-        while self._hold_buffer:
-            idx, m = self._hold_buffer.popleft()
+        # snapshot: with chaos active _enqueue may re-buffer a frame whose
+        # whole group is still down — draining in place would spin forever
+        pending = list(self._hold_buffer)
+        self._hold_buffer.clear()
+        for idx, m in pending:
             self._enqueue(min(idx, len(self._groups)), m)
 
     def _resume(self):

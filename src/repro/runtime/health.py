@@ -22,6 +22,8 @@ from collections import defaultdict, deque
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
+from .faults import QuarantinePolicy
+
 
 def quantile(xs, q: float) -> float:
     """Nearest-rank quantile of a sequence; +inf when empty (so straggler
@@ -71,6 +73,15 @@ class HealthMonitor:
         w.done += 1
         w.last_heartbeat = t
 
+    def abort_request(self, worker: str, t: float):
+        """The in-flight request died with its worker (crash, or a hang
+        promoted by the watchdog): clear it *without* recording a latency
+        sample — the request never completed, and a fault must not teach
+        the straggler threshold that slow is normal."""
+        w = self.workers[worker]
+        w.inflight_since = w.inflight_id = None
+        self.events.append((t, "aborted", worker))
+
     def record_backup(self, worker: str, t: float,
                       req_id: Optional[int] = None):
         """Note that ``worker``'s in-flight request was backup-dispatched
@@ -99,3 +110,82 @@ class HealthMonitor:
                 stragglers.append((name, w.inflight_id))
                 self.record_backup(name, t, w.inflight_id)
         return dead, stragglers
+
+
+@dataclass
+class _Lease:
+    until: float = 0.0            # quarantined while now < until
+    lease_s: float = 0.0          # the lease this bench was granted
+    probation_until: float = 0.0  # penalized (and flap-sensitive) window
+    faults: int = 0
+    flaps: int = 0
+    reinstatements: int = 0
+
+
+class QuarantineLedger:
+    """Lease-based lane quarantine with probationary reinstatement.
+
+    The engine benches a faulted lane here; while quarantined the lane is
+    excluded from every pick set (shard, hedge backup, broadcast, route
+    fallback).  When the lease expires the lane re-enters *on probation*:
+    its completion estimate is inflated by ``policy.probation_penalty``
+    so it earns traffic back gradually instead of re-entering the EWMA
+    loop at full weight.
+
+    Hysteresis: a fault during probation — the signature of a flapper —
+    doubles the lease (``policy.flap_factor``, capped at
+    ``policy.lease_cap_s``).  A lane that fails at exactly the probation
+    period therefore sits out 1×, 2×, 4×, … leases rather than
+    oscillating in and out of the pick set every cycle; the boundary
+    itself (``t == probation_until``) counts as a flap so the oscillation
+    period has no resonant fixed point.
+    """
+
+    def __init__(self, policy: Optional[QuarantinePolicy] = None):
+        self.policy = policy or QuarantinePolicy()
+        self._st: Dict[str, _Lease] = {}
+
+    def quarantine(self, name: str, t: float,
+                   min_lease_s: float = 0.0) -> float:
+        """Bench ``name`` at time ``t``; returns the lease expiry."""
+        p = self.policy
+        st = self._st.setdefault(name, _Lease())
+        if st.faults > 0 and t <= st.probation_until:
+            # Faulted while quarantined or on probation: flap — escalate.
+            st.flaps += 1
+            st.lease_s = min(max(st.lease_s, p.lease_s) * p.flap_factor,
+                             p.lease_cap_s)
+        else:
+            st.lease_s = p.lease_s
+        st.lease_s = max(st.lease_s, min_lease_s)
+        st.faults += 1
+        st.until = t + st.lease_s
+        st.probation_until = st.until + p.probation_s
+        return st.until
+
+    def quarantined(self, name: str, t: float) -> bool:
+        st = self._st.get(name)
+        return st is not None and t < st.until
+
+    def until(self, name: str) -> float:
+        st = self._st.get(name)
+        return st.until if st is not None else 0.0
+
+    def penalty(self, name: str, t: float) -> float:
+        """Completion-estimate multiplier for the pick loop: the
+        probation penalty while on probation, 1.0 once clean."""
+        st = self._st.get(name)
+        if st is None or t >= st.probation_until or t < st.until:
+            return 1.0
+        return self.policy.probation_penalty
+
+    def reinstate(self, name: str, t: float):
+        st = self._st.get(name)
+        if st is not None:
+            st.reinstatements += 1
+
+    def summary(self) -> dict:
+        return {name: {"faults": st.faults, "flaps": st.flaps,
+                       "reinstatements": st.reinstatements,
+                       "lease_s": st.lease_s}
+                for name, st in sorted(self._st.items())}

@@ -87,12 +87,16 @@ class CapabilityRegistry:
         self._listeners: List[Callable[[str, SlotRecord], None]] = []
         self._hub_of: Dict[int, int] = {}    # id(cartridge) -> hub id
         self._hub_counts: Dict[int, int] = {}  # hub id -> plugged devices
+        self._failed: set = set()            # id(cartridge), powered off
+        self._failed_on: Dict[int, int] = {}  # hub id -> failed devices
 
     def _hub_plug(self, cart: Cartridge, hub: int):
         self._hub_of[id(cart)] = hub
         self._hub_counts[hub] = self._hub_counts.get(hub, 0) + 1
 
     def _hub_unplug(self, cart: Cartridge):
+        if id(cart) in self._failed:         # unplugging clears fault state
+            self.set_failed(cart, False)
         hub = self._hub_of.pop(id(cart), None)
         if hub is not None:
             n = self._hub_counts.get(hub, 0) - 1
@@ -202,8 +206,39 @@ class CapabilityRegistry:
         return self.slots[slot].devices()
 
     def n_endpoints(self) -> int:
-        """Total physical devices on the bus (arbitration contention)."""
-        return sum(len(r.replicas) for r in self.slots.values())
+        """Total *powered* devices on the bus (arbitration contention).
+        A crashed or powered-off device stops arbitrating, so failed
+        lanes are excluded — chaos runs see contention relax exactly as
+        real hardware would."""
+        return sum(len(r.replicas) for r in self.slots.values()) \
+            - len(self._failed)
+
+    # -- fault state (chaos fabric) -------------------------------------------
+    def set_failed(self, cart: Cartridge, failed: bool = True):
+        """Mark a plugged device failed (crashed / hub power loss) or
+        recovered.  Failed devices stay *plugged* — the slot still owns
+        them and reinstatement is cheap — but they leave the arbitration
+        counts: a dead stick neither drives nor arbitrates the bus."""
+        key = id(cart)
+        hub = self._hub_of.get(key)
+        if hub is None:
+            raise ValueError(f"{cart.name} is not plugged in")
+        if failed and key not in self._failed:
+            self._failed.add(key)
+            self._failed_on[hub] = self._failed_on.get(hub, 0) + 1
+        elif not failed and key in self._failed:
+            self._failed.discard(key)
+            n = self._failed_on.get(hub, 1) - 1
+            if n > 0:
+                self._failed_on[hub] = n
+            else:
+                self._failed_on.pop(hub, None)
+
+    def is_failed(self, cart: Cartridge) -> bool:
+        return id(cart) in self._failed
+
+    def n_failed(self) -> int:
+        return len(self._failed)
 
     # -- hub placement (multi-hub fabric) -------------------------------------
     def hub_of(self, cart: Cartridge) -> int:
@@ -211,10 +246,10 @@ class CapabilityRegistry:
         return self._hub_of.get(id(cart), 0)
 
     def n_endpoints_on(self, hub: int) -> int:
-        """Devices sharing one hub's arbitration domain — the contention
-        count a hub-partitioned fabric charges per transfer.  O(1): the
-        engine asks for this several times per handoff."""
-        return self._hub_counts.get(hub, 0)
+        """Powered devices sharing one hub's arbitration domain — the
+        contention count a hub-partitioned fabric charges per transfer.
+        O(1): the engine asks for this several times per handoff."""
+        return self._hub_counts.get(hub, 0) - self._failed_on.get(hub, 0)
 
     def hubs(self) -> List[int]:
         """Hub ids with at least one plugged device, sorted."""

@@ -302,6 +302,76 @@ def build_routed_pipeline_engine(route_aware: bool = True,
     return eng
 
 
+# ---------------------------------------------------------------------------
+# Chaos fabric scenarios (deterministic fault injection, PR 7)
+# ---------------------------------------------------------------------------
+def chaos_lane_names() -> List[str]:
+    """The deterministic cart names of the canonical chaos scenario's
+    lanes, in lane order — the targets a ``FaultPlan.storm`` draws crash
+    and hang victims from."""
+    return ["detect", "detect#h0r1", "detect#h1r0", "detect#h1r1",
+            "embed", "embed#h0r1", "embed#h1r0", "embed#h1r1"]
+
+
+def build_chaos_engine(fault_plan=None, retry=None, quarantine=None,
+                       n_bursts: int = 150, load: float = 0.7,
+                       service_s: float = 0.012,
+                       **engine_kw) -> StreamEngine:
+    """The canonical fault-injection scenario — shared by
+    ``benchmarks/chaos_bench.py`` (the zero-loss / goodput-retention
+    contract in ``BENCH_chaos.json``) and the chaos test suite, so the
+    invariants the tests pin are measured on the exact workload the
+    benchmark reports.
+
+    Same shape as the routed pipeline: a two-stage detect->embed
+    pipeline with both stages spanning two hubs (2 lanes per stage per
+    hub), hedged dispatch, bursty arrivals at moderate load so every
+    recovery path gets headroom to act.  The topology gives every fault
+    kind something to survive: a lane crash leaves three siblings, a
+    hub power loss leaves the whole pipeline alive on the other hub,
+    and a link-down forces reroute-or-hold on cross-hub handoffs.
+    """
+    fast = DeviceModel(name="coral", service_s=service_s)
+    reg = CapabilityRegistry()
+    spec = msg.MessageSpec(msg.IMAGE_FRAME)
+    det = FnCartridge("detect", lambda p, x: x, spec, spec,
+                      capability_id=7, device=fast)
+    reg.insert(0, det, mode="shard", hub=0)
+    reg.add_replica(0, det.clone("detect#h0r1", device=fast), hub=0)
+    reg.add_replica(0, det.clone("detect#h1r0", device=fast), hub=1)
+    reg.add_replica(0, det.clone("detect#h1r1", device=fast), hub=1)
+    emb = FnCartridge("embed", lambda p, x: x, spec, spec,
+                      capability_id=8, device=fast)
+    reg.insert(1, emb, mode="shard", hub=0)
+    reg.add_replica(1, emb.clone("embed#h0r1", device=fast), hub=0)
+    reg.add_replica(1, emb.clone("embed#h1r0", device=fast), hub=1)
+    reg.add_replica(1, emb.clone("embed#h1r1", device=fast), hub=1)
+    fabric = FabricRouter(
+        [BusParams("hub0", bandwidth=400e6, base_overhead_s=1e-4,
+                   arbitration_s=1e-4),
+         BusParams("hub1", bandwidth=400e6, base_overhead_s=1e-4,
+                   arbitration_s=1e-4)],
+        link=LinkParams(bandwidth=120e6, overhead_s=2e-4))
+    eng = StreamEngine(reg, fabric, hedge=True,
+                       fault_plan=fault_plan, retry=retry,
+                       quarantine=quarantine, **engine_kw)
+    period = 5 / (load * (4 / service_s))
+    for i in range(n_bursts):
+        eng.feed(5, interval_s=0.0, t0=i * period)
+    return eng
+
+
+def run_chaos(fault_plan=None, retry=None, quarantine=None,
+              n_bursts: int = 150, **kw) -> EngineReport:
+    """Run the canonical chaos scenario to quiescence and return its
+    report.  ``until=inf`` lets every retry, quarantine lease, and
+    reinstatement play out, so a zero-loss plan delivers all
+    ``5 * n_bursts`` frames by the time the queue drains."""
+    eng = build_chaos_engine(fault_plan, retry=retry, quarantine=quarantine,
+                             n_bursts=n_bursts, **kw)
+    return eng.run(until=float("inf"))
+
+
 def build_cross_hub_hedge_engine(suppression: bool = True,
                                  n_bursts: int = 120,
                                  load: float = 0.45) -> StreamEngine:

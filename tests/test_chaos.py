@@ -1,0 +1,376 @@
+"""Chaos fabric: deterministic fault injection, recovery guarantees,
+quarantine hysteresis, and the fault-free bit-identity contract."""
+import numpy as np
+import pytest
+
+from repro.runtime import (EngineReport, build_chaos_engine,
+                           chaos_lane_names, run_chaos, run_replicated)
+from repro.runtime.elastic import ElasticController, largest_mesh
+from repro.runtime.faults import (FAULT_KINDS, HUB_POWER_LOSS, LANE_CRASH,
+                                  LANE_HANG, LINK_DOWN, FaultEvent,
+                                  FaultPlan, QuarantinePolicy, RetryPolicy,
+                                  frame_checksum)
+from repro.runtime.health import QuarantineLedger
+
+QUICK = QuarantinePolicy(lease_s=0.2, probation_s=0.2)
+
+
+def _chaos(plan, n_bursts=40, **kw):
+    return run_chaos(plan, quarantine=QUICK, n_bursts=n_bursts, **kw)
+
+
+def _assert_zero_loss_exactly_once(rep):
+    assert rep.frames_out == rep.frames_in, \
+        f"lost {rep.frames_in - rep.frames_out} frames"
+    assert rep.faults["duplicates"] == 0, \
+        f"{rep.faults['duplicates']} duplicate deliveries"
+
+
+# -- plan determinism ---------------------------------------------------------
+def test_storm_is_replay_stable():
+    kw = dict(horizon_s=3.0, lanes=chaos_lane_names(), hubs=(0, 1),
+              links=((0, 1),), crash_rate=2.0, hang_rate=1.0,
+              hub_loss_rate=0.5, link_down_rate=1.0, corrupt_p=0.05)
+    a = FaultPlan.storm(seed=9, **kw)
+    b = FaultPlan.storm(seed=9, **kw)
+    assert a.events == b.events
+    assert [a.corrupt_draw(s, 0) for s in range(50)] == \
+        [b.corrupt_draw(s, 0) for s in range(50)]
+    c = FaultPlan.storm(seed=10, **kw)
+    assert a.events != c.events
+
+
+def test_storm_respects_window_and_targets():
+    lanes = chaos_lane_names()
+    plan = FaultPlan.storm(seed=3, horizon_s=2.0, lanes=lanes,
+                           links=((0, 1),), crash_rate=5.0,
+                           link_down_rate=2.0, t0=0.1)
+    assert plan.events, "a 5 faults/s storm over ~2 s must emit events"
+    for ev in plan.events:
+        assert 0.1 <= ev.t <= 2.0
+        assert ev.kind in FAULT_KINDS
+        if ev.kind == LANE_CRASH:
+            assert ev.target in lanes
+        if ev.kind == LINK_DOWN:
+            assert ev.target == (0, 1)
+            assert ev.duration > 0        # outages always have a window
+
+
+def test_fault_event_validation():
+    with pytest.raises(ValueError):
+        FaultEvent(0.1, "meteor_strike", "detect")
+    with pytest.raises(ValueError):
+        FaultEvent(-0.1, LANE_CRASH, "detect")
+    with pytest.raises(ValueError):
+        FaultPlan(corrupt_p=1.0)
+
+
+def test_empty_plan_and_describe():
+    assert FaultPlan().empty
+    assert not FaultPlan(corrupt_p=0.1).empty
+    plan = FaultPlan.storm(seed=1, horizon_s=2.0,
+                           lanes=chaos_lane_names(), crash_rate=3.0)
+    d = plan.describe()
+    assert d["n_events"] == len(plan.events) > 0
+    assert d["by_kind"][LANE_CRASH] == len(plan.events)
+
+
+def test_retry_backoff_shape():
+    r = RetryPolicy(base_s=0.01, factor=2.0, max_s=0.1, jitter=0.0)
+    assert r.backoff(0) == pytest.approx(0.01)
+    assert r.backoff(2) == pytest.approx(0.04)
+    assert r.backoff(10) == pytest.approx(0.1)       # capped
+    j = RetryPolicy(base_s=0.01, jitter=0.5)
+    # jitter is deterministic per (key, attempt) and bounded
+    assert j.backoff(1, key="a") == j.backoff(1, key="a")
+    assert j.backoff(1, key="a") != j.backoff(1, key="b")
+    assert 0.01 <= j.backoff(1, key="a") <= 0.03
+
+
+def test_frame_checksum_covers_identity():
+    class M:
+        def __init__(self, seq, kind, b):
+            self.seq, self.kind, self.meta = seq, kind, {"bytes": b}
+    a, b = M(1, "image", 100), M(2, "image", 100)
+    assert frame_checksum(a) != frame_checksum(b)
+    assert frame_checksum(a) == frame_checksum(M(1, "image", 100))
+
+
+# -- recovery guarantees ------------------------------------------------------
+def test_lane_crash_zero_loss():
+    plan = FaultPlan(events=(FaultEvent(0.1, LANE_CRASH, "detect"),
+                             FaultEvent(0.2, LANE_CRASH, "embed#h1r0")))
+    rep = _chaos(plan)
+    _assert_zero_loss_exactly_once(rep)
+    assert rep.faults["lane_crash"] == 2
+    assert rep.faults["quarantined"] == 2
+    assert rep.faults["reinstated"] == 2
+
+
+def test_lane_hang_promoted_by_watchdog():
+    plan = FaultPlan(events=(FaultEvent(0.15, LANE_HANG, "detect"),))
+    eng = build_chaos_engine(plan, quarantine=QUICK, n_bursts=40)
+    rep = eng.run(until=float("inf"))
+    _assert_zero_loss_exactly_once(rep)
+    assert rep.faults["lane_hang"] == 1
+    assert rep.faults["hang_promoted"] == 1
+    # the hung cycle was aborted, not measured as a latency sample
+    assert any(k == "aborted" for _, k, _ in eng.health.events)
+
+
+def test_hub_power_loss_survives_on_other_hub():
+    plan = FaultPlan(events=(FaultEvent(0.2, HUB_POWER_LOSS, 0),))
+    rep = _chaos(plan)
+    _assert_zero_loss_exactly_once(rep)
+    assert rep.faults["hub_power_loss"] == 1
+    assert rep.faults["quarantined"] == 4      # both stages' hub-0 lanes
+    assert any("power loss" in a for _, a in rep.alerts)
+
+
+def test_link_down_reroutes_or_holds():
+    plan = FaultPlan.storm(seed=5, horizon_s=1.5, links=((0, 1),),
+                           link_down_rate=3.0, link_down_s=0.2)
+    rep = _chaos(plan)
+    _assert_zero_loss_exactly_once(rep)
+    assert rep.faults["link_down"] == rep.faults["link_up"] > 0
+
+
+def test_transfer_corruption_detected_and_resent():
+    rep = _chaos(FaultPlan(corrupt_p=0.08, seed=11))
+    _assert_zero_loss_exactly_once(rep)
+    assert rep.faults["corrupt_detected"] > 0
+    assert rep.faults["resends"] >= rep.faults["corrupt_detected"]
+
+
+def test_full_storm_zero_loss_exactly_once_multiseed():
+    for seed in (1, 2, 3):
+        plan = FaultPlan.storm(
+            seed=seed, horizon_s=2.0, lanes=chaos_lane_names(),
+            hubs=(0, 1), links=((0, 1),), crash_rate=4.0, hang_rate=2.0,
+            hub_loss_rate=0.5, link_down_rate=1.0, corrupt_p=0.05)
+        rep = _chaos(plan)
+        _assert_zero_loss_exactly_once(rep)
+        assert rep.faults["injected"] == len(plan.events)
+
+
+def test_chaos_runs_are_deterministic():
+    plan = FaultPlan.storm(seed=4, horizon_s=1.5,
+                           lanes=chaos_lane_names(), crash_rate=3.0,
+                           hang_rate=1.0, corrupt_p=0.03)
+    a, b = _chaos(plan), _chaos(plan)
+    assert a.throughput() == b.throughput()
+    assert a.p99() == b.p99()
+    assert a.faults == b.faults
+
+
+def test_empty_plan_bit_identical_to_no_plan():
+    plain = run_replicated("ncs2", 5, "broadcast", 120)
+    chaos = run_replicated("ncs2", 5, "broadcast", 120,
+                           fault_plan=FaultPlan())
+    assert plain.throughput() == chaos.throughput()   # exact, not approx
+    assert plain.p99() == chaos.p99()
+    assert plain.frames_out == chaos.frames_out
+
+
+# -- quarantine hysteresis (lease state machine) ------------------------------
+def test_quarantine_lease_and_probation_windows():
+    led = QuarantineLedger(QuarantinePolicy(lease_s=1.0, probation_s=0.5,
+                                            probation_penalty=4.0))
+    until = led.quarantine("lane", t=0.0)
+    assert until == pytest.approx(1.0)
+    assert led.quarantined("lane", 0.5)
+    assert not led.quarantined("lane", 1.0)
+    assert led.penalty("lane", 0.5) == 1.0          # benched, not penalized
+    assert led.penalty("lane", 1.2) == 4.0          # on probation
+    assert led.penalty("lane", 1.6) == 1.0          # clean
+
+
+def test_flap_at_exact_probation_boundary_escalates():
+    """Satellite 6: a lane that faults at *exactly* the probation period
+    must not oscillate in/out of the pick set with a constant period —
+    each boundary flap doubles the lease up to the cap."""
+    p = QuarantinePolicy(lease_s=0.5, probation_s=0.5, flap_factor=2.0,
+                         lease_cap_s=8.0)
+    led = QuarantineLedger(p)
+    t = 0.0
+    leases = []
+    for _ in range(6):
+        until = led.quarantine("flapper", t)
+        leases.append(until - t)
+        t = until + p.probation_s       # fault again at the exact boundary
+    # 0.5, 1.0, 2.0, 4.0, 8.0, 8.0 (capped): strictly increasing to cap
+    assert leases == pytest.approx([0.5, 1.0, 2.0, 4.0, 8.0, 8.0])
+    assert led.summary()["flapper"]["flaps"] == 5
+
+
+def test_fault_after_clean_probation_resets_lease():
+    p = QuarantinePolicy(lease_s=0.5, probation_s=0.5, flap_factor=2.0)
+    led = QuarantineLedger(p)
+    until = led.quarantine("lane", 0.0)
+    until = led.quarantine("lane", until + p.probation_s)   # flap: 1.0
+    assert led._st["lane"].lease_s == pytest.approx(1.0)
+    # survives probation cleanly, then faults much later: back to base
+    led.quarantine("lane", until + p.probation_s + 5.0)
+    assert led._st["lane"].lease_s == pytest.approx(0.5)
+
+
+def test_flapping_lane_engine_no_oscillation():
+    """A lane crashed repeatedly at its own reinstatement cadence spends
+    exponentially longer benched: total quarantines stay far below what
+    constant-period oscillation would produce, and every frame still
+    arrives exactly once."""
+    q = QuarantinePolicy(lease_s=0.05, probation_s=0.05, flap_factor=2.0,
+                         lease_cap_s=2.0)
+    events = tuple(FaultEvent(0.05 + 0.1 * i, LANE_CRASH, "detect")
+                   for i in range(12))
+    rep = run_chaos(FaultPlan(events=events), quarantine=q, n_bursts=40)
+    _assert_zero_loss_exactly_once(rep)
+    led = rep.faults["quarantine"]["detect"]
+    # most of the 12 scheduled crashes hit an already-benched lane
+    assert rep.faults["quarantined"] < 12
+    assert led["flaps"] >= 2
+    assert led["lease_s"] > q.lease_s     # lease escalated, not constant
+
+
+# -- engine accounting (satellite 2: downtime merge) --------------------------
+def test_downtime_merge_overlapping_windows():
+    rep = EngineReport()
+    rep.sim_time = 10.0
+    rep.downtime = [(1.0, 3.0, "swap"), (2.0, 4.0, "fault"),
+                    (6.0, 7.0, "swap"), (6.5, 6.8, "fault"),
+                    (9.0, 9.0, "noop")]
+    assert rep.merged_downtime() == [(1.0, 4.0), (6.0, 7.0)]
+    assert rep.total_downtime() == pytest.approx(4.0)
+    assert rep.availability() == pytest.approx(0.6)
+
+
+def test_downtime_merge_disjoint_unchanged():
+    rep = EngineReport()
+    rep.sim_time = 10.0
+    rep.downtime = [(1.0, 2.0, "a"), (3.0, 4.5, "b")]
+    assert rep.total_downtime() == pytest.approx(2.5)
+    assert rep.availability() == pytest.approx(0.75)
+    assert EngineReport().availability() == 1.0     # no sim time yet
+
+
+# -- elastic controller (satellite 1: all-devices-failed) ---------------------
+def test_largest_mesh_zero_devices():
+    assert largest_mesh(0, 2) == (0, 0)
+    assert largest_mesh(-1, 1) == (0, 0)
+
+
+def test_elastic_all_failed_pauses_instead_of_crashing():
+    import jax
+    devs = jax.devices()
+    ctl = ElasticController(list(devs), model_parallel=1)
+    assert not ctl.paused
+    for i in range(len(devs)):
+        ctl.fail(i, step=10)
+    mesh = ctl.remesh(step=10)          # must not ZeroDivisionError
+    assert mesh is None and ctl.paused
+    assert any(e.kind == "paused" for e in ctl.events)
+    ctl.join(0, step=20)
+    assert ctl.remesh(step=20) is not None
+    assert not ctl.paused
+
+
+# -- gallery shard failover ---------------------------------------------------
+def _enrolled_store(n_shards=3, n=90, dim=32, seed=7):
+    from repro.crypto.gallery import SecureGallery
+    rng = np.random.default_rng(seed)
+    g = rng.normal(size=(n, dim)).astype(np.float32)
+    store = SecureGallery(dim, seed=seed, n_shards=n_shards)
+    store.enroll(g, list(range(n)))
+    return store, g
+
+
+def test_gallery_failover_preserves_matching():
+    store, g = _enrolled_store()
+    before, _ = store.match(g[[5, 40, 80]], k=1)
+    into = store.failover_shard(1)
+    assert into != 1 and store.failovers == 1
+    assert store.shard_sizes()[1] == 0
+    assert sum(store.shard_sizes()) == len(g)
+    after, _ = store.match(g[[5, 40, 80]], k=1)
+    np.testing.assert_array_equal(before, after)
+
+
+def test_gallery_failover_works_after_seal():
+    """Recovery must read the encrypted-at-rest blob, never a plaintext
+    working-set view — so it works with every decrypted view dropped."""
+    store, g = _enrolled_store()
+    store.match(g[[0]], k=1)            # populate plaintext views...
+    store.seal()                        # ...then drop them all
+    assert all(not p for p in store._prep)
+    store.failover_shard(0, into=2)
+    got, _ = store.match(g[[5, 40, 80]], k=1)
+    assert list(got[:, 0]) == [5, 40, 80]
+
+
+def test_gallery_failover_validation():
+    store, _ = _enrolled_store()
+    with pytest.raises(ValueError):
+        store.failover_shard(99)
+    with pytest.raises(ValueError):
+        store.failover_shard(0, into=0)
+    from repro.crypto.gallery import SecureGallery
+    single = SecureGallery(8, n_shards=1)
+    single.enroll(np.eye(8, dtype=np.float32), list(range(8)))
+    with pytest.raises(ValueError):
+        single.failover_shard(0)
+
+
+def test_gallery_failover_ann_survives():
+    store, g = _enrolled_store(n_shards=3, n=120)
+    store.build_ann_index(n_cells=8)
+    before, _ = store.match(g[[7, 63]], k=1, mode="ann", nprobe=8)
+    store.failover_shard(2)
+    after, _ = store.match(g[[7, 63]], k=1, mode="ann", nprobe=8)
+    np.testing.assert_array_equal(before, after)
+
+
+# -- registry fault state -----------------------------------------------------
+def test_registry_failed_devices_leave_arbitration():
+    from repro.core import messages as msg
+    from repro.core.cartridge import DeviceModel, FnCartridge
+    from repro.runtime import CapabilityRegistry
+    spec = msg.MessageSpec(msg.IMAGE_FRAME)
+    reg = CapabilityRegistry()
+    prim = FnCartridge("a", lambda p, x: x, spec, spec, capability_id=1,
+                       device=DeviceModel(service_s=0.01))
+    reg.insert(0, prim, hub=0)
+    rep1 = prim.clone("b")
+    reg.add_replica(0, rep1, hub=1)
+    assert reg.n_endpoints() == 2
+    reg.set_failed(rep1)
+    assert reg.is_failed(rep1) and reg.n_failed() == 1
+    assert reg.n_endpoints() == 1
+    assert reg.n_endpoints_on(1) == 0 and reg.n_endpoints_on(0) == 1
+    reg.set_failed(rep1, False)
+    assert reg.n_endpoints() == 2 and reg.n_endpoints_on(1) == 1
+    # unplugging a failed device clears its fault state
+    reg.set_failed(rep1)
+    reg.remove_replica(0, rep1)
+    assert reg.n_failed() == 0
+    with pytest.raises(ValueError):
+        reg.set_failed(rep1)            # no longer plugged
+
+
+# -- fabric link state --------------------------------------------------------
+def test_fabric_link_state_and_cost():
+    from repro.bus import BusParams
+    from repro.bus.fabric import FabricRouter
+    fab = FabricRouter([BusParams("h0"), BusParams("h1")])
+    assert fab.link_ok(0, 1) and not fab.has_down_links()
+    assert fab.route_cost(0, 1, 1000) < float("inf")
+    fab.set_link_state(0, 1, up=False)
+    assert not fab.link_ok(0, 1) and fab.has_down_links()
+    assert fab.route_cost(0, 1, 1000) == float("inf")
+    assert fab.route_cost(0, 0, 1000) < float("inf")  # local unaffected
+    with pytest.raises(RuntimeError):
+        fab.transfer(0.0, 1000, src=0, dst=1)
+    fab.set_link_state(0, 1, up=True)
+    assert fab.link_ok(0, 1) and not fab.has_down_links()
+    fab.transfer(0.0, 1000, src=0, dst=1)     # flows again
+    with pytest.raises(ValueError):
+        fab.set_link_state(0, 0, up=False)

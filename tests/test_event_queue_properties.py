@@ -1,0 +1,123 @@
+"""Hypothesis property tests for event-queue cancel semantics.
+
+The hedged-dispatch and chaos-recovery paths cancel events aggressively
+(deadline timers, watchdogs, in-flight service cycles of crashed lanes),
+so the cancel contract must hold under any interleaving of push, cancel,
+and pop — on both the heap core and the linear-scan reference:
+
+* ``cancel`` after the event fired (or was already cancelled) returns
+  False and changes nothing;
+* a cancelled event never pops;
+* ``len`` always equals live events (pushed - popped - cancelled);
+* the ``pushed``/``popped``/``cancelled`` counters never corrupt — a
+  failed pop or no-op cancel must not move them;
+* pop order (min time, FIFO on ties) is identical across both queues.
+"""
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.runtime.events import HeapEventQueue, ListEventQueue
+
+settings.register_profile("ci", max_examples=60, deadline=None)
+settings.load_profile("ci")
+
+QUEUES = (HeapEventQueue, ListEventQueue)
+
+# an op is ("push", t) | ("cancel", i) | ("pop",): cancel targets the
+# i-th handle ever pushed (mod count), so cancels hit fired, pending,
+# and already-cancelled events alike
+OPS = st.lists(
+    st.one_of(
+        st.tuples(st.just("push"),
+                  st.floats(0.0, 100.0, allow_nan=False)),
+        st.tuples(st.just("cancel"), st.integers(0, 200)),
+        st.tuples(st.just("pop")),
+    ),
+    max_size=120)
+
+
+def _noop():
+    pass
+
+
+def _run_ops(q, ops):
+    """Drive one queue through the op list; returns the pop trace as
+    (t, handle) pairs plus the handle bookkeeping sets."""
+    handles, fired, killed, trace = [], set(), set(), []
+    for op in ops:
+        if op[0] == "push":
+            handles.append(q.push(op[1], _noop, ()))
+        elif op[0] == "cancel":
+            if not handles:
+                continue
+            h = handles[op[1] % len(handles)]
+            ok = q.cancel(h)
+            assert ok == (h not in fired and h not in killed), \
+                "cancel must succeed exactly once, and never after a pop"
+            if ok:
+                killed.add(h)
+        else:
+            try:
+                t, h, fn, args = q.pop()
+            except IndexError:
+                assert len(q) == 0, "pop failed with live events queued"
+                continue
+            assert h not in killed, f"cancelled event {h} popped"
+            assert h not in fired, f"event {h} popped twice"
+            fired.add(h)
+            trace.append((t, h))
+    return handles, fired, killed, trace
+
+
+@pytest.mark.parametrize("cls", QUEUES, ids=lambda c: c.__name__)
+@given(ops=OPS)
+def test_cancel_semantics_under_any_interleaving(cls, ops):
+    q = cls()
+    handles, fired, killed, trace = _run_ops(q, ops)
+    # len == live events, and the counters reconcile exactly
+    assert len(q) == len(handles) - len(fired) - len(killed)
+    assert q.pushed == len(handles)
+    assert q.popped == len(fired)
+    assert q.cancelled == len(killed)
+    # drain: everything left must pop in (time, handle) order,
+    # and no cancelled/fired event may resurface
+    last = None
+    while len(q):
+        t, h, fn, args = q.pop()
+        assert h not in killed and h not in fired
+        fired.add(h)
+        if last is not None:
+            assert (t, h) >= last
+        last = (t, h)
+    assert len(fired) + len(killed) == len(handles)
+    with pytest.raises(IndexError):
+        q.pop()
+    with pytest.raises(IndexError):
+        q.peek_time()
+    # the failed pop/peek moved no counter
+    assert q.popped == len(fired) and q.pushed == len(handles)
+
+
+@given(ops=OPS)
+def test_heap_and_list_queues_agree(ops):
+    """Same ops, same pop trace: the benchmark baseline really is a
+    reference implementation of the engine core's discipline."""
+    _, _, _, heap_trace = _run_ops(HeapEventQueue(), ops)
+    _, _, _, list_trace = _run_ops(ListEventQueue(), ops)
+    assert heap_trace == list_trace
+
+
+@pytest.mark.parametrize("cls", QUEUES, ids=lambda c: c.__name__)
+def test_cancel_after_pop_returns_false(cls):
+    q = cls()
+    h = q.push(1.0, _noop, ())
+    assert q.pop()[1] == h
+    assert q.cancel(h) is False       # already fired
+    assert q.cancelled == 0
+    h2 = q.push(2.0, _noop, ())
+    assert q.cancel(h2) is True
+    assert q.cancel(h2) is False      # double-cancel is a no-op
+    assert q.cancelled == 1
+    assert len(q) == 0
