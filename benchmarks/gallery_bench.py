@@ -1,6 +1,6 @@
 """Identification fast-path benchmark — the repo's tracked perf baseline.
 
-Two tracked artifacts, written to the repo root:
+One tracked artifact, written to the repo root:
 
 * ``BENCH_gallery.json`` — throughput of the sharded/quantized
   ``SecureGallery.match`` fast path over a (N, dtype, shards) sweep,
@@ -13,15 +13,15 @@ Two tracked artifacts, written to the repo root:
   (``rows_scored_ratio`` = gallery rows / rows scored per query — the
   machine-portable speed lever; interpret-mode wall-clock on CPU is
   dominated by per-grid-step overhead and is reported but not tracked).
-* ``BENCH_engine.json`` — StreamEngine event-core microbench: simulated
-  events/sec of the O(log n) heap queue vs the O(n) linear-scan baseline
-  (``repro.runtime.events``) on an identical queued-frame workload.
 
-Both files embed a ``smoke_baseline`` section measured at the ``--smoke``
+(The engine event-core microbench that used to live here moved to
+``benchmarks/engine_bench.py``, which owns ``BENCH_engine.json``.)
+
+The file embeds a ``smoke_baseline`` section measured at the ``--smoke``
 sizes, so CI can re-run ``--smoke --check`` on any runner and compare
 like-for-like ratios (speedups and recall are machine-portable; absolute
-wall times are not).  ``--check`` exits non-zero if a committed
-``BENCH_*.json`` is malformed or a tracked ratio regresses >20%.
+wall times are not).  ``--check`` exits non-zero if the committed
+``BENCH_gallery.json`` is malformed or a tracked ratio regresses >20%.
 
 Run:  PYTHONPATH=src python benchmarks/gallery_bench.py [--smoke] [--check]
 """
@@ -39,10 +39,8 @@ import numpy as np
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 GALLERY_JSON = os.path.join(ROOT, "BENCH_gallery.json")
-ENGINE_JSON = os.path.join(ROOT, "BENCH_engine.json")
 
 GALLERY_SCHEMA = "champ.gallery_bench.v2"
-ENGINE_SCHEMA = "champ.engine_bench.v1"
 
 FULL_CFG = dict(Q=256, D=512, k=5, n_sweep=(16384, 65536),
                 shards=(1, 4), dtypes=("fp32", "bf16", "int8"),
@@ -54,10 +52,6 @@ SMOKE_CFG = dict(Q=64, D=256, k=5, n_sweep=(8192,),
                  accept_n=8192, accept_shards=2, reps=3,
                  ann_q=64, ann_dtypes=("fp32", "int8"),
                  ann_nprobe=(4, 8), accept_nprobe=4, ann_max_frac=0.1)
-
-FULL_EVENTS = 10_000
-SMOKE_EVENTS = 5_000
-ENGINE_REPS = 3            # best-of-N: de-noises the wall-clock ratio
 
 
 # ---------------------------------------------------------------------------
@@ -202,49 +196,6 @@ def bench_gallery(cfg) -> dict:
 
 
 # ---------------------------------------------------------------------------
-# engine event core
-# ---------------------------------------------------------------------------
-def bench_engine(n_frames: int) -> dict:
-    from repro.bus import BusParams, SharedBus
-    from repro.core import messages as msg
-    from repro.core.cartridge import DeviceModel, FnCartridge
-    from repro.runtime import (CapabilityRegistry, HeapEventQueue,
-                               ListEventQueue, StreamEngine)
-
-    out = {"queued_events": n_frames, "pipeline_stages": 3,
-           "best_of": ENGINE_REPS,
-           "baseline_note": "ListEventQueue is a reference O(n) "
-                            "discipline, not a previously shipped core"}
-    for name, qcls in (("heap", HeapEventQueue), ("list", ListEventQueue)):
-        best_wall, events = None, 0
-        for _ in range(ENGINE_REPS):           # best-of-N (wall-clock noise)
-            reg = CapabilityRegistry()
-            spec = msg.MessageSpec(msg.IMAGE_FRAME)
-            for i in range(3):
-                reg.insert(i, FnCartridge(
-                    f"s{i}", lambda p, x: x, spec, spec,
-                    device=DeviceModel(service_s=2e-4)))
-            eng = StreamEngine(reg, SharedBus(BusParams(
-                "bench", base_overhead_s=1e-5)), event_queue=qcls())
-            eng.feed(n_frames, interval_s=0.0)  # n_frames queued at t=0
-            t0 = time.perf_counter()
-            rep = eng.run(until=1e9)
-            wall = time.perf_counter() - t0
-            assert rep.frames_out == n_frames, (name, rep.frames_out)
-            events = eng._events.popped
-            best_wall = wall if best_wall is None else min(best_wall, wall)
-        out[name] = {
-            "events_processed": events,
-            "wall_s": round(best_wall, 4),
-            "events_per_sec": round(events / best_wall, 1),
-        }
-    out["heap_vs_list_speedup"] = round(
-        out["heap"]["events_per_sec"] / out["list"]["events_per_sec"], 2)
-    out["pass_3x"] = out["heap_vs_list_speedup"] >= 3.0
-    return out
-
-
-# ---------------------------------------------------------------------------
 # schema validation + regression check
 # ---------------------------------------------------------------------------
 def validate_gallery(doc: dict):
@@ -268,39 +219,24 @@ def validate_gallery(doc: dict):
         assert kk in doc["acceptance_ann"], f"acceptance_ann missing {kk!r}"
 
 
-def validate_engine(doc: dict):
-    assert doc.get("schema") == ENGINE_SCHEMA, "bad/missing schema tag"
-    for section in ("heap", "list"):
-        assert section in doc, f"missing section {section!r}"
-        assert "events_per_sec" in doc[section]
-    assert "heap_vs_list_speedup" in doc
-
-
 def load_committed():
-    """Read + schema-validate the committed baselines.  Must be called
-    BEFORE a full-mode run overwrites them, or the comparison is vacuous.
-    Returns (gallery_doc, engine_doc, failures)."""
+    """Read + schema-validate the committed baseline.  Must be called
+    BEFORE a full-mode run overwrites it, or the comparison is vacuous.
+    Returns (gallery_doc, failures)."""
     try:
         committed_g = json.load(open(GALLERY_JSON))
         validate_gallery(committed_g)
     except Exception as e:  # malformed committed file is itself a failure
-        return None, None, [f"committed BENCH_gallery.json malformed: {e}"]
-    try:
-        committed_e = json.load(open(ENGINE_JSON))
-        validate_engine(committed_e)
-    except Exception as e:
-        return None, None, [f"committed BENCH_engine.json malformed: {e}"]
-    return committed_g, committed_e, []
+        return None, [f"committed BENCH_gallery.json malformed: {e}"]
+    return committed_g, []
 
 
-def run_check(fresh_gallery: dict, fresh_engine: dict, smoke: bool,
-              committed_g: dict, committed_e: dict) -> list:
-    """Compare a fresh run against the committed baselines; returns a list
+def run_check(fresh_gallery: dict, smoke: bool, committed_g: dict) -> list:
+    """Compare a fresh run against the committed baseline; returns a list
     of failure strings (empty = pass)."""
     failures = []
     base_g = committed_g["smoke_baseline"] if smoke \
         else committed_g["acceptance"]
-    base_e = committed_e["smoke_baseline"] if smoke else committed_e
     got_sp = fresh_gallery["acceptance"]["int8_sharded_speedup"]
     want_sp = base_g["int8_sharded_speedup"]
     if got_sp < 0.8 * want_sp:
@@ -325,11 +261,6 @@ def run_check(fresh_gallery: dict, fresh_engine: dict, smoke: bool,
     if got_ra < 0.8 * want_ra:
         failures.append(f"ANN rows_scored_ratio regressed >20%: "
                         f"{got_ra} vs baseline {want_ra}")
-    got_ev = fresh_engine["heap_vs_list_speedup"]
-    want_ev = base_e["heap_vs_list_speedup"]
-    if got_ev < 0.8 * want_ev:
-        failures.append(f"engine speedup regressed >20%: "
-                        f"{got_ev} vs baseline {want_ev}")
     return failures
 
 
@@ -337,16 +268,13 @@ def run() -> dict:
     """Validation-suite entry (``benchmarks/run.py``): smoke-size check that
     the fast path still beats the monolithic baseline with intact recall."""
     g = bench_gallery(SMOKE_CFG)
-    e = bench_engine(SMOKE_EVENTS)
     return {
         "gallery_acceptance": g["acceptance"],
         "ann_acceptance": g["acceptance_ann"],
-        "engine_heap_vs_list_speedup": e["heap_vs_list_speedup"],
         "pass_fastpath": bool(g["acceptance"]["pass_speedup_1p5x"]
                               and g["acceptance"]["pass_recall_0p99"]
                               and g["acceptance_ann"]["pass_recall_0p98"]
-                              and g["acceptance_ann"]["pass_scan_frac"]
-                              and e["heap_vs_list_speedup"] >= 2.0),
+                              and g["acceptance_ann"]["pass_scan_frac"]),
     }
 
 
@@ -354,28 +282,25 @@ def run() -> dict:
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
-                    help="small sizes; writes BENCH_*.smoke.json instead of "
-                         "overwriting the committed baselines")
+                    help="small sizes; writes BENCH_gallery.smoke.json "
+                         "instead of overwriting the committed baseline")
     ap.add_argument("--check", action="store_true",
-                    help="validate committed BENCH_*.json and fail on >20% "
-                         "ratio regression")
+                    help="validate committed BENCH_gallery.json and fail on "
+                         ">20% ratio regression")
     args = ap.parse_args()
 
     cfg = SMOKE_CFG if args.smoke else FULL_CFG
     mode = "smoke" if args.smoke else "full"
-    committed_g = committed_e = None
+    committed_g = None
     if args.check:
-        # snapshot the committed baselines BEFORE a full run overwrites them
-        committed_g, committed_e, failures = load_committed()
+        # snapshot the committed baseline BEFORE a full run overwrites it
+        committed_g, failures = load_committed()
         if failures:
             raise SystemExit("benchmark check failed: " + "; ".join(failures))
     print(f"[gallery_bench] mode={mode} sweep={cfg['n_sweep']} "
           f"dtypes={cfg['dtypes']} shards={cfg['shards']}")
     gallery_doc = {"schema": GALLERY_SCHEMA, "mode": mode}
     gallery_doc.update(bench_gallery(cfg))
-    engine_doc = {"schema": ENGINE_SCHEMA, "mode": mode}
-    engine_doc.update(bench_engine(SMOKE_EVENTS if args.smoke
-                                   else FULL_EVENTS))
 
     if not args.smoke:
         # embed smoke-size baselines so CI runners can compare like-for-like.
@@ -387,19 +312,15 @@ def main():
               "(min of 3 fresh subprocesses)")
         import subprocess
         import sys
-        g_samples, e_samples = [], []
+        g_samples, ga_samples = [], []
         sg_path = os.path.join(ROOT, "BENCH_gallery.smoke.json")
-        se_path = os.path.join(ROOT, "BENCH_engine.smoke.json")
-        ga_samples = []
         for _ in range(3):
             subprocess.run([sys.executable, os.path.abspath(__file__),
                             "--smoke"], check=True, cwd=ROOT)
             smoke_g = json.load(open(sg_path))
             g_samples.append(smoke_g["acceptance"])
             ga_samples.append(smoke_g["acceptance_ann"])
-            e_samples.append(json.load(open(se_path)))
         os.remove(sg_path)
-        os.remove(se_path)
         worst_g = min(g_samples, key=lambda a: a["int8_sharded_speedup"])
         gallery_doc["smoke_baseline"] = dict(
             worst_g, samples=[a["int8_sharded_speedup"] for a in g_samples])
@@ -408,28 +329,18 @@ def main():
         worst_a = min(ga_samples, key=lambda a: a["rows_scored_ratio"])
         gallery_doc["smoke_baseline_ann"] = dict(
             worst_a, samples=[a["rows_scored_ratio"] for a in ga_samples])
-        e_ratios = [e["heap_vs_list_speedup"] for e in e_samples]
-        engine_doc["smoke_baseline"] = {
-            "heap_vs_list_speedup": min(e_ratios), "samples": e_ratios}
 
     g_path = GALLERY_JSON if not args.smoke else \
         os.path.join(ROOT, "BENCH_gallery.smoke.json")
-    e_path = ENGINE_JSON if not args.smoke else \
-        os.path.join(ROOT, "BENCH_engine.smoke.json")
     with open(g_path, "w") as f:
         json.dump(gallery_doc, f, indent=2)
-    with open(e_path, "w") as f:
-        json.dump(engine_doc, f, indent=2)
-    print(f"[gallery_bench] wrote {g_path} and {e_path}")
+    print(f"[gallery_bench] wrote {g_path}")
     print(json.dumps({"gallery_acceptance": gallery_doc["acceptance"],
-                      "ann_acceptance": gallery_doc["acceptance_ann"],
-                      "engine": {kk: engine_doc[kk] for kk in
-                                 ("heap_vs_list_speedup", "pass_3x")}},
+                      "ann_acceptance": gallery_doc["acceptance_ann"]},
                      indent=2))
 
     if args.check:
-        failures = run_check(gallery_doc, engine_doc, args.smoke,
-                             committed_g, committed_e)
+        failures = run_check(gallery_doc, args.smoke, committed_g)
         if failures:
             raise SystemExit("benchmark check failed: " + "; ".join(failures))
         print("[gallery_bench] check OK — no tracked metric regressed")

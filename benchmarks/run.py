@@ -13,9 +13,10 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")  # reproducible benchmark numbers
 import json
 import time
 
-from benchmarks import (bus_scaling, chaos_bench, fabric_bench, gallery_bench,
-                        hotswap, latency_bench, pipeline_latency, power_bench,
-                        power_model, roofline_report, secure_match)
+from benchmarks import (bus_scaling, chaos_bench, engine_bench, fabric_bench,
+                        gallery_bench, hotswap, latency_bench,
+                        pipeline_latency, power_bench, power_model,
+                        roofline_report, secure_match)
 
 BENCHES = [
     ("table1_bus_scaling", bus_scaling.run, "pass_pm1fps"),
@@ -25,6 +26,7 @@ BENCHES = [
     ("s4_3_power_governor", power_bench.run, "pass_power"),
     ("s3_encrypted_matching", secure_match.run, "identical_all"),
     ("identification_fastpath", gallery_bench.run, "pass_fastpath"),
+    ("engine_core_events_per_sec", engine_bench.run, "pass_epoch_10x"),
     ("tail_latency_fastpath", latency_bench.run, "pass_tail"),
     ("multi_hub_fabric", fabric_bench.run, "pass_fabric"),
     ("chaos_fabric", chaos_bench.run, "pass_chaos"),

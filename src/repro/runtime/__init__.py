@@ -1,6 +1,8 @@
 from repro.runtime.registry import CapabilityRegistry, SlotRecord
-from repro.runtime.engine import StreamEngine, EngineReport, validate_chain
+from repro.runtime.engine import (ENGINE_CORES, StreamEngine, EngineReport,
+                                  validate_chain)
 from repro.runtime.events import HeapEventQueue, ListEventQueue
+from repro.runtime.lanestate import LaneStateBank, MeterBank, SoABank
 from repro.runtime.faults import (FaultEvent, FaultPlan, QuarantinePolicy,
                                   RetryPolicy, frame_checksum)
 from repro.runtime.metrics import StreamingHistogram
@@ -9,6 +11,7 @@ from repro.runtime.replication import (build_battery_engine,
                                        build_chaos_engine,
                                        build_cross_hub_hedge_engine,
                                        build_fabric_engine,
+                                       build_lane_sweep_engine,
                                        build_mixed_engine,
                                        build_replicated_engine,
                                        build_routed_pipeline_engine,

@@ -104,6 +104,28 @@ the toll — traffic stays hub-local when the link runs hot.
 baseline; on a one-hub fabric (or a bare bus) the toll is constant
 across lanes, so behavior is bit-identical either way.
 
+Vectorized epoch-stepped core (``core="epoch"``, the default).  The
+classic loop pops one heap event at a time and pays a linear Python scan
+over lanes per dispatch; at fleet scale (10k lanes) the scan *is* the
+simulator.  The epoch core drains event *cohorts* — every live event at
+the earliest timestamp, in the identical seq order — via
+``HeapEventQueue.pop_cohort``/``fire`` (so same-instant cancellations
+still work), and reads dispatch state from lane-id-indexed NumPy arrays
+(``runtime.lanestate``): ``pick_lane`` becomes an argmin over
+``(backlog + 1) * est_s`` arrays and ``free_capacity`` a clipped sum.
+Every ``_Lane`` mutation writes through to the arrays, so the vectorized
+expressions read the very same float64 the scalar path would — the
+argmin fast path is an *exact* replacement (NumPy argmin and ``min()``
+both take the first minimal element), and the epoch core fires events in
+exactly heap order; runs are therefore bit-identical between cores.  The
+fast path engages only for plain weighted shard dispatch over
+``VECTOR_PICK_MIN``-or-more lanes with no fabric toll / governor /
+chaos hooks — everything else (control events, hedge alternates,
+routed handoffs, chaos exclusions) keeps the scalar scan, which is
+exact by construction.  ``core="heap"`` keeps the original
+pop-per-event loop with the scalar scan as the measurable baseline
+(``BENCH_engine.json`` tracks the epoch/heap events-per-sec ratio).
+
 Timing is virtual (deterministic, calibrated DeviceModels); payload compute
 is optionally real JAX (``execute_payloads=True``) so correctness tests can
 assert data flows through reconfigurations unchanged.  Service-time jitter
@@ -114,10 +136,13 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import time
 import zlib
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, List, Optional
+
+import numpy as np
 
 from repro.bus.fabric import FabricRouter
 from repro.bus.simulator import BusParams, SharedBus
@@ -125,6 +150,7 @@ from repro.core.cartridge import Cartridge, PassThrough
 from repro.core import messages as msg
 from repro.runtime.events import HeapEventQueue
 from repro.runtime import faults as flt
+from repro.runtime.lanestate import LaneStateBank, TrackedDeque
 from repro.runtime.faults import (FaultPlan, QuarantinePolicy, RetryPolicy,
                                   frame_checksum)
 from repro.runtime.health import HealthMonitor, QuarantineLedger
@@ -139,6 +165,28 @@ REMOVE_PAUSE_S = 0.5     # paper §4.2: ~0.5 s reconfiguration on removal
 BROADCAST_RESULT_BYTES = 256
 
 DISPATCH_DISCIPLINES = ("ewma", "naive")
+ENGINE_CORES = ("epoch", "heap")
+# below this group size the argmin fast path loses to the scalar scan
+# (NumPy fancy-indexing has ~µs fixed cost); both paths are exact, so the
+# threshold is purely a speed knob
+VECTOR_PICK_MIN = 16
+
+# profiling-hook phase classification, by event callback name
+_DISPATCH_EVENTS = frozenset((
+    "_frame_arrival", "_try_start_lane", "_unpark_retry",
+    "_try_start_broadcast", "_arrive_next", "_arrive_checked",
+    "_hedge_copy_arrive", "_migrate_arrive", "_retry_handoff",
+    "_retry_broadcast", "_reinject"))
+_SERVICE_EVENTS = frozenset(("_lane_done", "_broadcast_done"))
+
+
+def _event_phase(fn: Callable) -> str:
+    name = getattr(fn, "__name__", "")
+    if name in _DISPATCH_EVENTS:
+        return "dispatch"
+    if name in _SERVICE_EVENTS:
+        return "service"
+    return "control"
 
 # routed handoff verdict: the destination group exists but no lane of it
 # is reachable right now (dead lanes / down links) — hold and retry, never
@@ -193,6 +241,9 @@ class EngineReport:
     faults: dict = field(default_factory=_fault_counters)
     last_out_t: float = 0.0    # when the last frame completed — goodput
                                # denominator robust to trailing fault events
+    # per-phase wall time (dispatch/service/bookkeeping/control), filled
+    # only when the engine runs with profile=True
+    profile: dict = field(default_factory=dict)
 
     def energy_j(self) -> float:
         """Total electrical energy the fleet drew (joules, virtual time)."""
@@ -261,11 +312,21 @@ class EngineReport:
 
 
 class _Lane:
-    """One physical replica device inside a lane group."""
+    """One physical replica device inside a lane group.
 
-    def __init__(self, cart: Cartridge, queue_cap: int):
+    Dispatch-relevant scalars (``est_s``, ``ready_at``, busy/held
+    occupancy, queue depth) are mirrored into a ``LaneStateBank`` row so
+    the vectorized pick path reads them as arrays.  Scalar *reads* stay
+    plain attributes (no property overhead on the hot path); the few
+    mutation sites go through ``set_*`` write-through helpers (or the
+    ``TrackedDeque`` for queue depth)."""
+
+    def __init__(self, cart: Cartridge, queue_cap: int,
+                 bank: LaneStateBank):
         self.cart = cart
-        self.queue: deque = deque()
+        self.bank = bank
+        self.lid = bank.alloc()            # row in the lane-state arrays
+        self.queue: deque = TrackedDeque(bank, self.lid)
         self.queue_cap = queue_cap
         self.busy = False
         self.held: Optional[list] = None   # finished batch, downstream full
@@ -286,12 +347,30 @@ class _Lane:
         # calibrated DeviceModel) + streaming distribution for the hedge
         # deadline quantile.  Both are per batch-normalized frame cost.
         self.est_s = cart.device.service_s
+        bank.est_s[self.lid] = self.est_s
         self.svc_hist = StreamingHistogram(lo=1e-7, hi=1e4)
 
     def observe(self, svc_norm: float, alpha: float):
         """Online service-time update on every completed service cycle."""
         self.est_s += alpha * (svc_norm - self.est_s)
+        self.bank.est_s[self.lid] = self.est_s
         self.svc_hist.record(svc_norm)
+
+    def set_busy(self, busy: bool):
+        self.busy = busy
+        self.bank.busy[self.lid] = 1 if busy else 0
+
+    def set_held(self, held: Optional[list]):
+        self.held = held
+        self.bank.heldn[self.lid] = len(held) if held else 0
+
+    def set_ready_at(self, t: float):
+        self.ready_at = t
+        self.bank.ready_at[self.lid] = t
+
+    def reset_queue(self, items=()):
+        """Replace the queue contents (migration keep-list)."""
+        self.queue = TrackedDeque(self.bank, self.lid, items)
 
     def backlog(self) -> int:
         return len(self.queue) + (1 if self.busy else 0) + \
@@ -328,6 +407,7 @@ class _LaneGroup:
         self.quorum = rec.quorum
         self.lanes: List[_Lane] = []
         self.lane_ids: set = set()         # id(lane) index for O(1) lookup
+        self.lids = np.empty(0, dtype=np.int64)  # member rows, lane order
         self.queue_cap = queue_cap
         self.bqueue: deque = deque()       # broadcast: group-level queue
         self.bbusy = False
@@ -338,16 +418,44 @@ class _LaneGroup:
     def name(self) -> str:
         return self.lanes[0].cart.name if self.lanes else f"slot{self.slot}"
 
-    def free_capacity(self) -> int:
+    def refresh_lids(self):
+        """Re-derive the member lane-id array (after any membership
+        change); index i of ``lids`` is ``lanes[i]``, so an argmin over
+        bank rows maps straight back to a lane."""
+        self.lids = np.fromiter((l.lid for l in self.lanes),
+                                dtype=np.int64, count=len(self.lanes))
+
+    def free_capacity(self, bank: Optional[LaneStateBank] = None) -> int:
         if self.mode == "broadcast":
             return max(self.queue_cap - len(self.bqueue), 0)
+        if bank is not None and len(self.lanes) >= VECTOR_PICK_MIN:
+            return int(np.maximum(self.queue_cap - bank.qlen[self.lids],
+                                  0).sum())
         return sum(max(self.queue_cap - len(l.queue), 0) for l in self.lanes)
+
+    def _pick_vector(self, now: float,
+                     bank: LaneStateBank) -> Optional[_Lane]:
+        """Argmin-over-arrays fast path for plain weighted shard dispatch.
+
+        Bit-exact vs. the scalar scan: the arrays hold the very same
+        float64s the attributes do, ``(backlog + 1) * est_s`` runs the
+        same float ops elementwise, masking the not-ready pool with +inf
+        preserves index order, and ``np.argmin`` returns the *first*
+        minimal element exactly like ``min()``."""
+        lids = self.lids
+        eta = (bank.qlen[lids] + bank.busy[lids] + bank.heldn[lids] + 1) \
+            * bank.est_s[lids]
+        ready = bank.ready_at[lids] <= now
+        if not ready.all() and ready.any():
+            eta = np.where(ready, eta, np.inf)
+        return self.lanes[int(np.argmin(eta))]
 
     def pick_lane(self, now: float, weighted: bool = True,
                   exclude: Optional[_Lane] = None,
                   prefer_hub: Optional[int] = None,
                   toll=None, est_scale=None,
-                  parked=None, dead=None) -> Optional[_Lane]:
+                  parked=None, dead=None,
+                  bank: Optional[LaneStateBank] = None) -> Optional[_Lane]:
         """Dispatch choice; prefers lanes past their handshake gate.
 
         ``weighted`` (the default) minimizes estimated completion time of
@@ -377,7 +485,16 @@ class _LaneGroup:
         quarantined lane must never be picked, not even as a last
         resort.  With every lane dead the pick returns None and the
         caller buffers the frame (zero loss; reinstatement drains it).
+
+        ``bank`` (the epoch core's lane-state arrays) enables the
+        ``_pick_vector`` fast path when no other hook narrows or rescores
+        the pool — the O(n) scan collapses to one argmin.
         """
+        if bank is not None and weighted and exclude is None \
+                and prefer_hub is None and toll is None \
+                and est_scale is None and parked is None and dead is None \
+                and len(self.lanes) >= VECTOR_PICK_MIN:
+            return self._pick_vector(now, bank)
         lanes = self.lanes if exclude is None else \
             [l for l in self.lanes if l is not exclude]
         if dead is not None:
@@ -423,9 +540,24 @@ class StreamEngine:
                  fault_plan: Optional[FaultPlan] = None,
                  retry: Optional[RetryPolicy] = None,
                  quarantine: Optional[QuarantinePolicy] = None,
-                 watchdog_margin: float = 8.0):
+                 watchdog_margin: float = 8.0,
+                 core: str = "epoch", profile: bool = False):
         if dispatch not in DISPATCH_DISCIPLINES:
             raise ValueError(f"unknown dispatch discipline {dispatch!r}")
+        if core not in ENGINE_CORES:
+            raise ValueError(f"unknown engine core {core!r}")
+        self.core = core
+        self.profile_enabled = bool(profile)
+        self._prof = {"dispatch_s": 0.0, "service_s": 0.0,
+                      "control_s": 0.0, "bookkeeping_s": 0.0,
+                      "events": {"dispatch": 0, "service": 0, "control": 0}}
+        # lane-id-indexed dispatch state; row 0 is a reserved scrap row
+        # that retired lanes point at, so a late in-flight completion on a
+        # detached lane can never scribble on a recycled row
+        self.lanestate = LaneStateBank()
+        self._scrap_lid = self.lanestate.alloc()
+        # the heap core keeps the scalar scan as the measurable baseline
+        self._pick_bank = self.lanestate if core == "epoch" else None
         self.registry = registry
         self.bus = bus                  # SharedBus, or a FabricRouter
         self.fabric: Optional[FabricRouter] = \
@@ -503,11 +635,12 @@ class StreamEngine:
             g.lanes = []
             for cart in rec.replicas:
                 lane = self._lane_by_cart.get(id(cart)) or _Lane(
-                    cart, self.queue_cap)
+                    cart, self.queue_cap, self.lanestate)
                 self._lane_by_cart[id(cart)] = lane
                 lane.pos = i
                 lane.slot = rec.slot
                 lane.hub = self.registry.hub_of(cart)
+                self.lanestate.hub[lane.lid] = lane.hub
                 if self.fabric is not None and \
                         not 0 <= lane.hub < self.fabric.n_hubs:
                     # fail at (hot-)plug time, not frames later inside a
@@ -518,6 +651,7 @@ class StreamEngine:
                 g.lanes.append(lane)
                 kept_lanes.add(id(lane))
             g.lane_ids = {id(l) for l in g.lanes}
+            g.refresh_lids()
             self._groups.append(g)
         # rescue queued/held frames of lanes and groups that left the chain.
         # A held batch has already been serviced: when the lane's slot
@@ -544,6 +678,11 @@ class StreamEngine:
             if id(lane) not in kept_lanes:
                 self._retired_stats[lane.cart.name] = lane.stats
                 del self._lane_by_cart[key]
+                # recycle the bank row; the lane object (which in-flight
+                # events may still reference) is repointed at the scrap
+                # row so its late writes land nowhere meaningful
+                self.lanestate.release(lane.lid)
+                lane.lid = lane.queue._lid = self._scrap_lid
         self._group_by_slot = {g.slot: g for g in self._groups}
         self._live_groups = {id(g) for g in self._groups}
         # records() is slot-sorted, so position == sorted-slot index
@@ -580,7 +719,7 @@ class StreamEngine:
         if lane.held is not None:
             for m in lane.held:
                 self._hold_buffer.append((pos + held_off, m))
-            lane.held = None
+            lane.set_held(None)
 
     def _on_registry_event(self, kind: str, rec):
         # engine-driven swaps rebuild once at the end of their transaction;
@@ -669,7 +808,8 @@ class StreamEngine:
             fab2, prev_dead = self.fabric, kw.get("dead")
             kw["dead"] = lambda l: ((prev_dead is not None and prev_dead(l))
                                     or not fab2.link_ok(src_hub, l.hub))
-        lane = g.pick_lane(self.now, weighted=weighted, toll=toll, **kw)
+        lane = g.pick_lane(self.now, weighted=weighted, toll=toll,
+                           bank=self._pick_bank, **kw)
         if lane is None and g.lanes and (guarded or self._chaos):
             return _BLOCKED
         return lane.hub if lane is not None else None
@@ -678,11 +818,70 @@ class StreamEngine:
     def _push_event(self, t: float, fn: Callable, *args) -> int:
         return self._events.push(t, fn, args)
 
-    def run(self, until: float) -> EngineReport:
-        while len(self._events) and self._events.peek_time() <= until:
-            t, _, fn, args = self._events.pop()
+    def _run_heap(self, until: float):
+        """The classic pop-per-event loop (``core="heap"``)."""
+        ev = self._events
+        while len(ev) and ev.peek_time() <= until:
+            t, _, fn, args = ev.pop()
             self.now = max(self.now, t)
             fn(*args)
+
+    def _run_epoch(self, until: float):
+        """Cohort-draining loop (``core="epoch"``): all live events at the
+        earliest timestamp come out in one queue call, in the identical
+        seq order the heap loop would pop them.  ``fire`` skips members
+        cancelled by an earlier member of the same cohort; events pushed
+        *during* a cohort at the same instant get larger seqs and form
+        the next cohort at that timestamp, exactly matching heap order."""
+        ev = self._events
+        fire = ev.fire
+        while len(ev) and ev.peek_time() <= until:
+            cohort = ev.pop_cohort()
+            t = cohort[0][0]
+            if t > self.now:
+                self.now = t
+            for _, h, fn, args in cohort:
+                if fire(h):
+                    fn(*args)
+
+    def _run_profiled(self, until: float):
+        """Either core, with per-event phase timing (``profile=True`` —
+        kept out of the unprofiled loops so profiling costs nothing when
+        off)."""
+        ev = self._events
+        prof = self._prof
+        counts = prof["events"]
+        clock = time.perf_counter
+        cohorts = self.core == "epoch"
+        while len(ev) and ev.peek_time() <= until:
+            if cohorts:
+                cohort = ev.pop_cohort()
+                t = cohort[0][0]
+                if t > self.now:
+                    self.now = t
+            else:
+                e = ev.pop()
+                self.now = max(self.now, e[0])
+                cohort = (e,)
+            for _, h, fn, args in cohort:
+                # fire() must interleave with execution: an earlier
+                # member of this cohort may cancel a later one
+                if cohorts and not ev.fire(h):
+                    continue
+                phase = _event_phase(fn)
+                t0 = clock()
+                fn(*args)
+                prof[phase + "_s"] += clock() - t0
+                counts[phase] += 1
+
+    def run(self, until: float) -> EngineReport:
+        if self.profile_enabled:
+            self._run_profiled(until)
+            t_book = time.perf_counter()
+        elif self.core == "heap":
+            self._run_heap(until)
+        else:
+            self._run_epoch(until)
         # sim_time = when work actually finished (not the horizon)
         self.report.sim_time = self.now
         self.report.bus_bytes = self.bus.bytes_moved
@@ -714,6 +913,17 @@ class StreamEngine:
                                        l.cart.device.service_s)
                                       for l in g.lanes}) > 1,
                 "processed": sum(l.stats.processed for l in g.lanes),
+            }
+        if self.profile_enabled:
+            self._prof["bookkeeping_s"] += time.perf_counter() - t_book
+            p = self._prof
+            self.report.profile = {
+                "core": self.core,
+                "dispatch_s": p["dispatch_s"],
+                "service_s": p["service_s"],
+                "control_s": p["control_s"],
+                "bookkeeping_s": p["bookkeeping_s"],
+                "events": dict(p["events"]),
             }
         return self.report
 
@@ -753,6 +963,7 @@ class StreamEngine:
             return
         lane = g.pick_lane(self.now, weighted=self.dispatch == "ewma",
                            prefer_hub=m.meta.pop("_hub", None),
+                           bank=self._pick_bank,
                            **self._pick_kwargs())
         if lane is None:
             # no live lane right now (all down/quarantined): buffer, zero
@@ -843,7 +1054,7 @@ class StreamEngine:
                                 max(dev.batch_marginal, 1e-6))
                 b = max(1, min(b, b_cap))
         batch = [lane.queue.popleft() for _ in range(b)]
-        lane.busy = True
+        lane.set_busy(True)
         svc, factor = self._service_time(lane, b, batch[0].seq)
         dur = svc * infl if infl != 1.0 else svc
         if self.hedge and g.mode == "shard" and len(g.lanes) > 1:
@@ -924,7 +1135,7 @@ class StreamEngine:
                 continue
             stalled = True
             alt = g.pick_lane(self.now, weighted=self.dispatch == "ewma",
-                              exclude=task.primary,
+                              exclude=task.primary, bank=self._pick_bank,
                               **self._pick_kwargs())
             if alt is None or len(alt.queue) >= self.queue_cap:
                 continue                    # no headroom to speculate into
@@ -994,7 +1205,7 @@ class StreamEngine:
                 keep.append(m)
                 continue
             alt = g.pick_lane(self.now, weighted=weighted, exclude=lane,
-                              **gov_kw)
+                              bank=self._pick_bank, **gov_kw)
             if alt is None or len(alt.queue) >= self.queue_cap:
                 keep.append(m)
                 continue
@@ -1007,7 +1218,7 @@ class StreamEngine:
                 continue
             alt.queue.append(m)
             self._try_start_lane(alt)
-        lane.queue = keep
+        lane.reset_queue(keep)
 
     def _migrate_arrive(self, alt: _Lane, m: msg.Message):
         """A migrated frame finished crossing to the healthy lane's hub.
@@ -1090,7 +1301,7 @@ class StreamEngine:
                 self._events.cancel(lane.wd_handle)
                 lane.wd_handle = None
         lane.stats.processed += len(batch)
-        lane.busy = False
+        lane.set_busy(False)
         self.governor.on_cycle_end(self.now, lane.cart)
         if svc_norm > 0.0:
             lane.observe(svc_norm, self.ewma_alpha)
@@ -1104,8 +1315,14 @@ class StreamEngine:
         hist = self.report.stage_hist.get(name)
         if hist is None:
             hist = self.report.stage_hist[name] = StreamingHistogram()
-        for m in deliver:
-            hist.record(self.now - m.meta.get("_t_stage", self.now))
+        if len(deliver) > 1:
+            # bulk ingest for micro-batched cycles: one vectorized bin
+            # pass (bin counts bit-identical to per-sample record)
+            now = self.now
+            hist.record_many([now - m.meta.get("_t_stage", now)
+                              for m in deliver])
+        else:
+            hist.record(self.now - deliver[0].meta.get("_t_stage", self.now))
         self._handoff(lane, deliver)
 
     def _handoff(self, lane: _Lane, batch: list):
@@ -1123,10 +1340,11 @@ class StreamEngine:
             return
         nxt = g.pos + 1
         if nxt < len(self._groups) and \
-                self._groups[nxt].free_capacity() < len(batch):
+                self._groups[nxt].free_capacity(self._pick_bank) \
+                < len(batch):
             # downstream full: hold (upstream throttles automatically since
             # this lane won't start its next frame while holding)
-            lane.held = batch
+            lane.set_held(batch)
             self._push_event(self.now + 1e-3, self._retry_handoff, lane)
             return
         nbytes = sum(self._msg_bytes(m) for m in batch)
@@ -1142,7 +1360,7 @@ class StreamEngine:
                 # and re-probe the route with backoff (zero loss — link
                 # restore or lane reinstatement unblocks it)
                 self.report.faults["reroute_blocked"] += 1
-                lane.held = batch
+                lane.set_held(batch)
                 m0 = batch[0]
                 attempt = m0.meta.get("_retries", 0)
                 m0.meta["_retries"] = attempt + 1
@@ -1176,7 +1394,8 @@ class StreamEngine:
     def _retry_handoff(self, lane: _Lane):
         if lane.held is None:
             return
-        batch, lane.held = lane.held, None
+        batch = lane.held
+        lane.set_held(None)
         lane.stats.blocked_s += 1e-3
         self._handoff(lane, batch)
 
@@ -1306,7 +1525,7 @@ class StreamEngine:
             self._complete(m)
             self._try_start_broadcast(g)
             return
-        if self._groups[nxt].free_capacity() < 1:
+        if self._groups[nxt].free_capacity(self._pick_bank) < 1:
             g.bheld = m
             self._push_event(self.now + 1e-3, self._retry_broadcast, g)
             return
@@ -1559,7 +1778,7 @@ class StreamEngine:
                 handle, inflight_batch = lane.inflight
                 self._events.cancel(handle)  # False if already hung: fine
                 lane.inflight = None
-            lane.busy = False
+            lane.set_busy(False)
             # settle the energy uplift and clear the health ledger without
             # teaching either that the aborted cycle was a completion
             self.governor.on_cycle_end(self.now, lane.cart)
@@ -1572,7 +1791,8 @@ class StreamEngine:
         if lane.held is not None:
             # the serviced results died in the device's output buffer:
             # recompute (re-dispatch at the lane's own stage)
-            held, lane.held = lane.held, None
+            held = lane.held
+            lane.set_held(None)
             self._recover_copies(lane, held)
         self._sync_governor()                # a dead stick stops drawing
         self._push_event(until, self._reinstate_lane, lane)
@@ -1767,8 +1987,8 @@ class StreamEngine:
         for g in self._groups:
             for lane in g.lanes:
                 if lane.cart is cart:
-                    lane.ready_at = self.now + HANDSHAKE_S + \
-                        cart.device.load_s
+                    lane.set_ready_at(self.now + HANDSHAKE_S +
+                                      cart.device.load_s)
         self.report.swap_log.append(
             (self.now, "add_replica", f"slot {slot} ({cart.name})"))
 

@@ -34,7 +34,7 @@ def quantile(xs, q: float) -> float:
     return s[min(int(math.ceil(q * len(s))) - 1, len(s) - 1)]
 
 
-@dataclass
+@dataclass(slots=True)
 class WorkerState:
     last_heartbeat: float = 0.0
     inflight_since: Optional[float] = None
@@ -112,7 +112,7 @@ class HealthMonitor:
         return dead, stragglers
 
 
-@dataclass
+@dataclass(slots=True)
 class _Lease:
     until: float = 0.0            # quarantined while now < until
     lease_s: float = 0.0          # the lease this bench was granted

@@ -14,11 +14,24 @@ far below the 2x-scale effects the tail-latency benchmarks track.
 The same class doubles as each lane's observed service-time distribution:
 the hedge deadline is a quantile of it, so the estimator must stay cheap
 enough to update on every ``_lane_done``.
+
+``record_many`` is the bulk-ingest path for the vectorized engine core:
+bin indices are computed with one ``np.log`` over the whole batch.
+NumPy's SIMD log is *not* bitwise-identical to ``math.log`` (it can
+differ in the last ulp), which only matters when a sample's scaled log
+position lands exactly on a bin boundary — so the handful of elements
+within 1e-9 of an integer position (the ulp of the scaled value is
+~5e-13) are recomputed with the scalar formula.  Bin counts, ``count``,
+``min`` and ``max`` are therefore bit-identical to repeated ``record``;
+only ``total`` (and hence ``mean``) may differ by float-summation order,
+which quantiles never read.
 """
 from __future__ import annotations
 
 import math
 from typing import Optional
+
+import numpy as np
 
 _LOG10 = math.log(10.0)
 
@@ -38,7 +51,7 @@ class StreamingHistogram:
         self._log_lo = math.log(lo) / _LOG10
         decades = math.log(hi / lo) / _LOG10
         self._nbins = int(math.ceil(decades * bins_per_decade)) + 1
-        self.counts = [0] * self._nbins
+        self.counts = np.zeros(self._nbins, dtype=np.int64)
         self.count = 0
         self.total = 0.0
         self.min: Optional[float] = None
@@ -62,6 +75,40 @@ class StreamingHistogram:
         if self.max is None or x > self.max:
             self.max = x
 
+    def record_many(self, xs) -> None:
+        """Bulk ingest: one vectorized bin pass for a batch of samples.
+
+        Bin counts / count / min / max are bit-identical to calling
+        ``record`` per element (boundary elements are recomputed with the
+        scalar formula — see module docstring); ``total`` may differ in
+        the last ulps from the sequential sum.
+        """
+        xs = np.asarray(xs, dtype=np.float64).ravel()
+        if xs.size == 0:
+            return
+        if xs.size == 1:
+            self.record(float(xs[0]))
+            return
+        pos = (np.log(np.maximum(xs, self.lo)) / _LOG10 - self._log_lo) \
+            * self.bpd
+        bins = np.minimum(pos.astype(np.int64), self._nbins - 1)
+        np.maximum(bins, 0, out=bins)
+        # boundary guard: np.log vs math.log ulp differences flip int()
+        # only exactly at integer positions — redo those few scalars
+        near = np.abs(pos - np.rint(pos)) < 1e-9
+        if near.any():
+            for j in np.nonzero(near)[0]:
+                bins[j] = self._bin(float(xs[j]))
+        np.add.at(self.counts, bins, 1)
+        self.count += int(xs.size)
+        self.total += float(xs.sum())
+        mn = float(xs.min())
+        mx = float(xs.max())
+        if self.min is None or mn < self.min:
+            self.min = mn
+        if self.max is None or mx > self.max:
+            self.max = mx
+
     def mean(self) -> float:
         return self.total / self.count if self.count else 0.0
 
@@ -78,7 +125,8 @@ class StreamingHistogram:
         for i, c in enumerate(self.counts):
             if not c:
                 continue
-            if seen + c > rank:
+            c = int(c)          # counts is int64 array: keep the math in
+            if seen + c > rank:  # Python floats (JSON-serializable output)
                 # mid-rank fraction: the k-th of c samples in a bin sits
                 # at (k + 0.5)/c of the bin's span, so a single-count bin
                 # interpolates to its geometric MIDPOINT instead of

@@ -64,13 +64,23 @@ The governor is always attached to the engine (energy accounting is
 free); the state machine only engages when a budget is configured
 (``active``), so unbudgeted runs are bit-identical to pre-governor
 behavior.
+
+Meter storage is a ``MeterBank`` slab (``runtime.lanestate``): each
+``_LaneMeter`` is a thin view over one lane-id-indexed row, so the
+report-time energy integral runs as one array expression over the live
+fleet instead of a Python loop of scalar formulas (elementwise float64,
+bitwise identical per lane).  A detached meter's energy is settled, so
+it is frozen into an immutable snapshot and its row recycled.
 """
 from __future__ import annotations
 
 import math
 from typing import Dict, Optional, Union
 
+import numpy as np
+
 from repro.core.cartridge import DeviceModel
+from repro.runtime.lanestate import MeterBank
 
 STATES = ("nominal", "throttled", "parked")
 
@@ -78,21 +88,78 @@ BudgetSpec = Union[None, float, int, Dict[int, float]]
 
 
 class _LaneMeter:
-    """Energy ledger for one physical device (one engine lane)."""
+    """Energy ledger for one physical device (one engine lane) — a view
+    over one ``MeterBank`` row, so per-lane energy integrates as array
+    math at report time."""
 
-    __slots__ = ("name", "hub", "power_w", "idle_w", "attached_at",
-                 "detached_at", "active_s", "cycles", "_uplift_w")
+    __slots__ = ("name", "_bank", "_row")
 
-    def __init__(self, name: str, hub: int, dev: DeviceModel, t: float):
+    def __init__(self, name: str, hub: int, dev: DeviceModel, t: float,
+                 bank: MeterBank):
         self.name = name
-        self.hub = hub
-        self.power_w = dev.power_w
-        self.idle_w = dev.idle_w
-        self.attached_at = t
-        self.detached_at: Optional[float] = None
-        self.active_s = 0.0            # nominal compute seconds charged
-        self.cycles = 0
-        self._uplift_w = 0.0           # current cycle's draw above idle
+        self._bank = bank
+        r = self._row = bank.alloc()
+        bank.hub[r] = hub
+        bank.power_w[r] = dev.power_w
+        bank.idle_w[r] = dev.idle_w
+        bank.attached_at[r] = t
+        # row defaults: detached_at = -1 (attached), active_s = 0,
+        # cycles = 0, uplift_w = 0
+
+    # thin property layer: scalar reads/writes go straight to the row,
+    # so the view and the arrays can never disagree
+    @property
+    def hub(self) -> int:
+        return int(self._bank.hub[self._row])
+
+    @hub.setter
+    def hub(self, v: int):
+        self._bank.hub[self._row] = v
+
+    @property
+    def power_w(self) -> float:
+        return float(self._bank.power_w[self._row])
+
+    @property
+    def idle_w(self) -> float:
+        return float(self._bank.idle_w[self._row])
+
+    @property
+    def attached_at(self) -> float:
+        return float(self._bank.attached_at[self._row])
+
+    @property
+    def detached_at(self) -> Optional[float]:
+        d = float(self._bank.detached_at[self._row])
+        return None if d < 0.0 else d
+
+    @detached_at.setter
+    def detached_at(self, v: Optional[float]):
+        self._bank.detached_at[self._row] = -1.0 if v is None else v
+
+    @property
+    def active_s(self) -> float:
+        return float(self._bank.active_s[self._row])
+
+    @active_s.setter
+    def active_s(self, v: float):
+        self._bank.active_s[self._row] = v
+
+    @property
+    def cycles(self) -> int:
+        return int(self._bank.cycles[self._row])
+
+    @cycles.setter
+    def cycles(self, v: int):
+        self._bank.cycles[self._row] = v
+
+    @property
+    def _uplift_w(self) -> float:
+        return float(self._bank.uplift_w[self._row])
+
+    @_uplift_w.setter
+    def _uplift_w(self, v: float):
+        self._bank.uplift_w[self._row] = v
 
     def elapsed(self, t: float) -> float:
         end = self.detached_at if self.detached_at is not None else t
@@ -102,9 +169,15 @@ class _LaneMeter:
         return self.elapsed(t) * self.idle_w + \
             self.active_s * (self.power_w - self.idle_w)
 
-    def summary(self, t: float) -> dict:
+    def freeze(self) -> "_FrozenMeter":
+        """Snapshot a detached meter and recycle its slab row."""
+        f = _FrozenMeter(self)
+        self._bank.release(self._row)
+        return f
+
+    def summary(self, t: float, energy: Optional[float] = None) -> dict:
         el = self.elapsed(t)
-        e = self.energy_j(t)
+        e = self.energy_j(t) if energy is None else energy
         return {
             "hub": self.hub,
             "active_s": round(self.active_s, 6),
@@ -114,6 +187,45 @@ class _LaneMeter:
             "energy_j": round(e, 6),
             "avg_w": round(e / el, 4) if el > 0 else 0.0,
             "detached": self.detached_at is not None,
+        }
+
+
+class _FrozenMeter:
+    """Immutable snapshot of a detached meter.  Once ``detached_at`` is
+    set the meter's energy no longer depends on ``t``, so the snapshot
+    precomputes it and the live bank row can be recycled."""
+
+    __slots__ = ("name", "hub", "power_w", "idle_w", "active_s", "cycles",
+                 "_elapsed", "_energy")
+
+    def __init__(self, m: _LaneMeter):
+        self.name = m.name
+        self.hub = m.hub
+        self.power_w = m.power_w
+        self.idle_w = m.idle_w
+        self.active_s = m.active_s
+        self.cycles = m.cycles
+        self._elapsed = m.elapsed(0.0)   # detached: t-independent
+        self._energy = m.energy_j(0.0)
+
+    def elapsed(self, t: float) -> float:
+        return self._elapsed
+
+    def energy_j(self, t: float) -> float:
+        return self._energy
+
+    def summary(self, t: float) -> dict:
+        el = self._elapsed
+        e = self._energy
+        return {
+            "hub": self.hub,
+            "active_s": round(self.active_s, 6),
+            "cycles": self.cycles,
+            "active_j": round(self.active_s * self.power_w, 6),
+            "idle_j": round(max(el - self.active_s, 0.0) * self.idle_w, 6),
+            "energy_j": round(e, 6),
+            "avg_w": round(e / el, 4) if el > 0 else 0.0,
+            "detached": True,
         }
 
 
@@ -172,9 +284,10 @@ class PowerGovernor:
         self.exit_ratio = exit_ratio
         self.duty_target = duty_target
         self.park_duty_floor = park_duty_floor   # None -> per-device field
+        self._bank = MeterBank()                     # meter state arrays
         self._lanes: Dict[int, _LaneMeter] = {}      # id(cart) -> meter
         self._lane_dev: Dict[int, DeviceModel] = {}  # id(cart) -> device
-        self._retired: Dict[str, _LaneMeter] = {}    # name -> detached meter
+        self._retired: Dict[str, _FrozenMeter] = {}  # name -> snapshot
         self._hubs: Dict[int, _HubState] = {}
 
     # -- configuration --------------------------------------------------------
@@ -237,7 +350,8 @@ class PowerGovernor:
         for key, (name, dev, hub) in population.items():
             m = self._lanes.get(key)
             if m is None:
-                m = self._lanes[key] = _LaneMeter(name, hub, dev, t)
+                m = self._lanes[key] = _LaneMeter(name, hub, dev, t,
+                                                  self._bank)
                 self._lane_dev[key] = dev
                 touched.add(hub)
             elif m.hub != hub:           # re-plugged onto another hub
@@ -251,14 +365,15 @@ class PowerGovernor:
         for key, m in list(self._lanes.items()):
             if key not in population and m.detached_at is None:
                 m.detached_at = t
-                hs = self._hub_state(m.hub)
+                hub = m.hub          # capture before freeze releases the row
+                hs = self._hub_state(hub)
                 self._advance(hs, t)
                 hs.draw_w -= m._uplift_w
                 m._uplift_w = 0.0
-                self._retired[m.name] = m
+                self._retired[m.name] = m.freeze()
                 del self._lanes[key]
                 del self._lane_dev[key]
-                touched.add(m.hub)
+                touched.add(hub)
         for hub in touched:
             hs = self._hub_state(hub)
             self._advance(hs, t)
@@ -447,10 +562,25 @@ class PowerGovernor:
         lanes = {}
         hub_energy: Dict[int, float] = {}
         hub_lanes: Dict[int, int] = {}
+        # live meter joules: one array expression over the slab rows;
+        # elementwise float64 → each value is bitwise equal to the scalar
+        # energy_j, and per-hub totals still accumulate in meter order
+        live = list(self._lanes.values())
+        if live:
+            rows = np.fromiter((m._row for m in live), dtype=np.int64,
+                               count=len(live))
+            live_e = self._bank.energy(t, rows)
+        else:
+            live_e = ()
         # retired first: a re-used name reports the live lane's ledger
-        for m in list(self._retired.values()) + list(self._lanes.values()):
+        for m in self._retired.values():
             lanes[m.name] = m.summary(t)
             hub_energy[m.hub] = hub_energy.get(m.hub, 0.0) + m.energy_j(t)
+            hub_lanes[m.hub] = hub_lanes.get(m.hub, 0) + 1
+        for m, ev in zip(live, live_e):
+            e = float(ev)
+            lanes[m.name] = m.summary(t, energy=e)
+            hub_energy[m.hub] = hub_energy.get(m.hub, 0.0) + e
             hub_lanes[m.hub] = hub_lanes.get(m.hub, 0) + 1
         hubs = {}
         for hub in sorted(set(hub_energy) | set(self._hubs)):

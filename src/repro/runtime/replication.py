@@ -372,6 +372,32 @@ def run_chaos(fault_plan=None, retry=None, quarantine=None,
     return eng.run(until=float("inf"))
 
 
+def build_lane_sweep_engine(n_lanes: int, service_s: float = 2e-4,
+                            queue_cap: int = 8, **engine_kw) -> StreamEngine:
+    """A fleet-scale dispatch stressor: ONE shard group of ``n_lanes``
+    identical lanes on a near-free bus, so simulated events/sec is
+    dominated by the engine's per-event bookkeeping — exactly what
+    ``benchmarks/engine_bench.py`` sweeps to compare the heap and epoch
+    cores at 100/1k/10k lanes.
+
+    The registry is built *before* the engine so the whole fleet costs
+    one rebuild, and the bus is a bare ``SharedBus`` with microsecond
+    overheads: at 10k lanes a realistic USB model would serialize on
+    arbitration and hide the dispatch cost being measured."""
+    if n_lanes < 1:
+        raise ValueError("need at least one lane")
+    dev = DeviceModel(name="sweep", service_s=service_s)
+    reg = CapabilityRegistry()
+    spec = msg.MessageSpec(msg.IMAGE_FRAME)
+    primary = FnCartridge("sweep", lambda p, x: x, spec, spec,
+                          capability_id=7, device=dev)
+    reg.insert(0, primary, mode="shard")
+    for i in range(1, n_lanes):
+        reg.add_replica(0, primary.clone(f"sweep#r{i}", device=dev))
+    bus = SharedBus(BusParams("sweep", base_overhead_s=1e-5))
+    return StreamEngine(reg, bus, queue_cap=queue_cap, **engine_kw)
+
+
 def build_cross_hub_hedge_engine(suppression: bool = True,
                                  n_bursts: int = 120,
                                  load: float = 0.45) -> StreamEngine:

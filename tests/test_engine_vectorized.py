@@ -1,0 +1,213 @@
+"""Epoch-core equivalence: the vectorized engine must be a bitwise
+drop-in for the heap core.
+
+The epoch core changes *how* events execute (cohort drain + array
+bookkeeping), never *which* events execute or in what order — so every
+test here runs the identical scenario on both cores and asserts the full
+observable trace matches exactly: completion counts, the per-frame
+latency sample list (float-for-float), simulated time, and the
+hedge/fault counters.  Scenarios are chosen so every engine subsystem
+the vectorization touched actually fires: weighted dispatch over a
+≥16-lane group (the argmin fast path), hedging with deadline
+cancellation inside a cohort, and a full chaos storm (crash / hang /
+hub loss / link flap / corruption) with quarantine and retries.
+"""
+from __future__ import annotations
+
+import pytest
+
+from repro.bus import TABLE1
+from repro.core.cartridge import DeviceModel
+from repro.runtime import replication as R
+from repro.runtime import build_lane_sweep_engine
+from repro.runtime.engine import ENGINE_CORES, VECTOR_PICK_MIN
+from repro.runtime.faults import FaultPlan
+
+
+def trace(rep):
+    """The full observable outcome of a run, exact-equality comparable."""
+    return (rep.frames_in, rep.frames_out, rep.sim_time,
+            tuple(rep.latencies), tuple(sorted(rep.hedges.items())))
+
+
+def fault_counters(rep):
+    return {k: v for k, v in rep.faults.items() if not isinstance(v, dict)}
+
+
+def run_both(build, *args, **kw):
+    out = {}
+    for core in ENGINE_CORES:
+        eng = build(*args, core=core, **kw)
+        out[core] = eng.run(until=float("inf"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Table 1 bit-identity: the paper's headline numbers must not move
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("device", sorted(TABLE1))
+def test_table1_broadcast_bit_identical(device):
+    for n in (1, 3, 5):
+        a = R.run_replicated(device, n, "broadcast", core="heap")
+        b = R.run_replicated(device, n, "broadcast", core="epoch")
+        assert a.throughput() == b.throughput()   # exact, not approx
+        assert trace(a) == trace(b)
+
+
+# ---------------------------------------------------------------------------
+# Mixed stragglers + hedging: deadline cancel inside cohorts
+# ---------------------------------------------------------------------------
+def _mixed_hedged(core):
+    fast = dict(name="ncs2", service_s=0.012)
+    strag = dict(name="ncs2_degraded", service_s=0.012,
+                 jitter_p=0.05, jitter_mult=10.0)
+    eng = R.build_mixed_engine(
+        [DeviceModel(**fast), DeviceModel(**fast), DeviceModel(**strag)],
+        hedge=True, core=core)
+    eng.feed(600, 0.005)
+    return eng
+
+
+def test_mixed_straggler_hedge_trace_equivalence():
+    reps = run_both(_mixed_hedged)
+    assert trace(reps["heap"]) == trace(reps["epoch"])
+    # the scenario must actually exercise hedging or the test is vacuous
+    assert reps["heap"].hedges["issued"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Chaos storm: every fault kind, quarantine + retry, zero loss
+# ---------------------------------------------------------------------------
+def _storm():
+    return FaultPlan.storm(seed=11, horizon_s=4.0,
+                           lanes=R.chaos_lane_names(),
+                           hubs=[0, 1], links=[(0, 1)],
+                           crash_rate=1.5, hang_rate=0.8, hub_loss_rate=0.3,
+                           link_down_rate=0.8, corrupt_p=0.01)
+
+
+def test_chaos_storm_trace_equivalence():
+    a = R.run_chaos(_storm(), core="heap")
+    b = R.run_chaos(_storm(), core="epoch")
+    assert trace(a) == trace(b)
+    assert fault_counters(a) == fault_counters(b)
+    # the storm must inject real faults, and recovery must stay lossless
+    assert fault_counters(a)["injected"] > 0
+    assert a.lost == 0 and b.lost == 0
+    assert fault_counters(a)["duplicates"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Fleet-scale sweep group: the argmin fast path vs the scalar scan
+# ---------------------------------------------------------------------------
+def test_lane_sweep_trace_equivalence_vector_pick():
+    n_lanes = 64
+    assert n_lanes >= VECTOR_PICK_MIN   # the fast path actually engages
+    reps = {}
+    for core in ENGINE_CORES:
+        eng = build_lane_sweep_engine(n_lanes, core=core)
+        eng.feed(2000, interval_s=0.0)
+        reps[core] = eng.run(until=float("inf"))
+    assert trace(reps["heap"]) == trace(reps["epoch"])
+    assert reps["epoch"].frames_out == 2000
+
+
+def test_vector_pick_matches_scalar_min():
+    # same engine, both pick implementations: force the scalar path by
+    # shrinking below the gate and compare against a wide group
+    for n in (VECTOR_PICK_MIN, VECTOR_PICK_MIN + 7):
+        a = build_lane_sweep_engine(n, core="epoch")
+        a.feed(500, interval_s=0.0)
+        ra = a.run(until=float("inf"))
+        b = build_lane_sweep_engine(n, core="heap")
+        b.feed(500, interval_s=0.0)
+        rb = b.run(until=float("inf"))
+        assert tuple(ra.latencies) == tuple(rb.latencies)
+
+
+# ---------------------------------------------------------------------------
+# Profiling hook
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("core", ENGINE_CORES)
+def test_profile_hook_populates_phases(core):
+    eng = build_lane_sweep_engine(32, core=core, profile=True)
+    eng.feed(500, interval_s=0.0)
+    rep = eng.run(until=float("inf"))
+    prof = rep.profile
+    assert prof["core"] == core
+    for key in ("dispatch_s", "service_s", "control_s", "bookkeeping_s"):
+        assert prof[key] >= 0.0
+    assert prof["events"]["dispatch"] > 0
+    assert prof["events"]["service"] > 0
+    # wall time actually accumulated somewhere
+    assert prof["dispatch_s"] + prof["service_s"] + prof["control_s"] > 0.0
+
+
+def test_profile_off_by_default():
+    eng = build_lane_sweep_engine(8)
+    eng.feed(50, interval_s=0.0)
+    rep = eng.run(until=float("inf"))
+    assert rep.profile == {}
+
+
+def test_profile_does_not_change_results():
+    a = build_lane_sweep_engine(32, profile=True)
+    a.feed(500, interval_s=0.0)
+    b = build_lane_sweep_engine(32, profile=False)
+    b.feed(500, interval_s=0.0)
+    assert trace(a.run(until=float("inf"))) == \
+        trace(b.run(until=float("inf")))
+
+
+def test_invalid_core_rejected():
+    with pytest.raises(ValueError):
+        build_lane_sweep_engine(4, core="quantum")
+
+
+# ---------------------------------------------------------------------------
+# Event queue satellites: threshold compaction + cohort drain (plain
+# unit tests — the hypothesis interleavings live in
+# test_event_queue_properties.py and need the optional dependency)
+# ---------------------------------------------------------------------------
+def _noop():
+    pass
+
+
+def test_heap_threshold_compaction():
+    """Sustained cancellation must rebuild the heap instead of letting
+    dead entries dominate every push/pop."""
+    from repro.runtime.events import HeapEventQueue
+    q = HeapEventQueue()
+    hs = [q.push(float(i), _noop, ()) for i in range(100)]
+    for h in hs[:80]:
+        q.cancel(h)
+    assert q.compactions >= 1, "dead majority never triggered a rebuild"
+    assert q.dead_peak > 0
+    # invariant: after any cancel, dead entries never outnumber live ones
+    assert len(q._dead) <= len(q._heap) - len(q._dead)
+    # the survivors pop in order, unharmed by the rebuild
+    assert [q.pop()[0] for _ in range(len(q))] == [float(i)
+                                                  for i in range(80, 100)]
+    assert q.cancelled == 80 and q.popped == 20
+
+
+def test_cohort_drain_and_fire_semantics():
+    from repro.runtime.events import HeapEventQueue, ListEventQueue
+    for cls in (HeapEventQueue, ListEventQueue):
+        q = cls()
+        a = q.push(1.0, _noop, ())
+        b = q.push(1.0, _noop, ())
+        c = q.push(1.0, _noop, ())
+        d = q.push(2.0, _noop, ())
+        cohort = q.pop_cohort()
+        assert [e[1] for e in cohort] == [a, b, c]   # seq (FIFO) order
+        assert q.popped == 0                          # fires count, drains don't
+        assert q.fire(a) is True
+        # same-instant cancel after the drain: b must not execute
+        assert q.cancel(b) is True
+        assert q.fire(b) is False
+        assert q.fire(c) is True
+        assert q.popped == 2 and q.cancelled == 1
+        assert q.peek_time() == 2.0 and len(q) == 1
+        assert [e[1] for e in q.pop_cohort()] == [d]
+        assert q.fire(d) is True

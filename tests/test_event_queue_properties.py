@@ -110,6 +110,67 @@ def test_heap_and_list_queues_agree(ops):
 
 
 @pytest.mark.parametrize("cls", QUEUES, ids=lambda c: c.__name__)
+@given(ops=OPS)
+def test_cohort_drain_equals_sequential_pops(cls, ops):
+    """pop_cohort + fire must replay the exact pop trace: run the same
+    op list on two queues, one popping one-at-a-time, one draining
+    cohorts and firing each member."""
+    q_pop = cls()
+    _, _, _, pop_trace = _run_ops(q_pop, ops)
+    q_coh = cls()
+    handles, fired, killed, trace = [], set(), set(), []
+    pending = []                      # drained-but-unfired cohort tail
+    for op in ops:
+        if op[0] == "push":
+            handles.append(q_coh.push(op[1], _noop, ()))
+        elif op[0] == "cancel":
+            if not handles:
+                continue
+            h = handles[op[1] % len(handles)]
+            if q_coh.cancel(h):
+                killed.add(h)
+        else:
+            if pending:
+                ev = pending.pop(0)
+            else:
+                try:
+                    cohort = q_coh.pop_cohort()
+                except IndexError:
+                    continue
+                ev = cohort[0]
+                pending = cohort[1:]
+            if q_coh.fire(ev[1]):
+                fired.add(ev[1])
+                trace.append((ev[0], ev[1]))
+    # drain both; cancelled-while-pending events must not fire
+    while pending or len(q_coh):
+        if not pending:
+            pending = q_coh.pop_cohort()
+        ev = pending.pop(0)
+        if q_coh.fire(ev[1]):
+            trace.append((ev[0], ev[1]))
+    while len(q_pop):
+        t, h, fn, args = q_pop.pop()
+        pop_trace.append((t, h))
+    assert trace == pop_trace
+    assert q_coh.popped == q_pop.popped
+
+
+@given(ops=OPS)
+def test_compaction_invariant_under_any_interleaving(ops):
+    q = HeapEventQueue()
+    for op in ops:
+        if op[0] == "push":
+            q.push(op[1], _noop, ())
+        elif op[0] == "cancel" and q.pushed:
+            q.cancel(op[1] % q.pushed)
+        elif op[0] == "pop" and len(q):
+            q.pop()
+        assert len(q._dead) <= max(len(q._heap) - len(q._dead), 0)
+        assert q.dead_peak >= len(q._dead)
+
+
+@pytest.mark.parametrize("cls", QUEUES, ids=lambda c: c.__name__)
 def test_cancel_after_pop_returns_false(cls):
     q = cls()
     h = q.push(1.0, _noop, ())

@@ -97,3 +97,25 @@ def test_bus_fps_decreases_with_contention(n1, n2):
     f1 = simulate_broadcast_fps(p, min(n1, n2))
     f2 = simulate_broadcast_fps(p, max(n1, n2))
     assert f2 <= f1 + 1e-6
+
+
+# -- histogram bulk ingest -----------------------------------------------------------
+@given(stn.lists(stn.one_of(
+    stn.floats(1e-7, 1e6, allow_nan=False),       # spans below lo / above hi
+    stn.sampled_from([1e-6, 1e-5, 1e-3, 1.0, 10.0, 1e5]),  # exact bin edges
+), min_size=0, max_size=300))
+def test_record_many_matches_repeated_record(xs):
+    """The vectorized completion path must fill the same bins as the
+    scalar one: counts/count/min/max bit-identical, total within
+    summation-order ulps (quantiles never read total)."""
+    from repro.runtime import StreamingHistogram
+    a, b = StreamingHistogram(), StreamingHistogram()
+    for x in xs:
+        a.record(x)
+    b.record_many(np.asarray(xs, dtype=np.float64))
+    assert np.array_equal(a.counts, b.counts)
+    assert a.count == b.count
+    assert a.min == b.min and a.max == b.max
+    assert b.total == pytest.approx(a.total, rel=1e-12, abs=1e-12)
+    for q in (0.0, 0.5, 0.95, 0.99, 1.0):
+        assert a.quantile(q) == b.quantile(q)
