@@ -1,0 +1,252 @@
+"""Observability benchmark — what does the flight recorder cost?
+
+One tracked artifact, written to the repo root:
+
+* ``BENCH_obs.json`` (schema v1) — the trace-overhead sweep on the
+  10k-lane engine-bench cell (single saturated shard group, epoch
+  core): simulated events/sec with tracing off, sampled (1 frame in
+  16), and full (every frame).  Two gates:
+
+  - **bit-identity** (absolute, exact): all three variants produce
+    float-for-float identical reports — frames, sim time, the full
+    per-frame latency list, hedge/fault counters.  The recorder only
+    observes; a single perturbed float fails the bench.
+  - **sampled overhead < 5%** (the CI contract): tracing at 1/16 must
+    cost less than 5% events/sec vs tracing off.  Full tracing is
+    reported but not gated — it is the debugging configuration, not
+    the always-on one.
+
+Like ``engine_bench``, the committed file embeds a ``smoke_baseline``
+measured over 3 fresh subprocesses at smoke sizes, so a CI
+``--smoke --check`` run compares like-for-like: bit-identity is checked
+absolutely, and the smoke overhead gate allows 5 percentage points of
+headroom over the committed smoke baseline (wall-clock noise at smoke
+sizes is real; a genuine hot-path regression blows through both).
+
+Run:  PYTHONPATH=src python benchmarks/obs_bench.py [--smoke] [--check]
+"""
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")  # reproducible CI numbers
+
+import argparse
+import json
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OBS_JSON = os.path.join(ROOT, "BENCH_obs.json")
+
+OBS_SCHEMA = "champ.obs_bench.v1"
+
+# the engine-bench fleet cell: events/sec is dominated by per-event
+# bookkeeping, which is exactly where recorder calls sit
+FULL_CELL = {"lanes": 10_000, "frames": 3000}
+SMOKE_CELL = {"lanes": 10_000, "frames": 1000}
+SAMPLE = 16                 # the sampled-tracing rate under test
+REPS = 5                    # best-of-N: de-noises the wall-clock ratio
+ACCEPT_OVERHEAD_PCT = 5.0   # sampled tracing must cost < 5% events/sec
+SMOKE_HEADROOM_PCT = 5.0    # smoke gate: baseline + headroom
+
+VARIANTS = (                # name -> StreamEngine trace kwargs
+    ("off", {}),
+    ("sampled", {"trace": True, "trace_sample": SAMPLE}),
+    ("full", {"trace": True}),
+)
+
+
+def _sig(rep):
+    """Everything float-valued the engine computes, exactly."""
+    return (rep.frames_in, rep.frames_out, rep.sim_time, rep.last_out_t,
+            tuple(rep.latencies), tuple(sorted(rep.hedges.items())),
+            tuple(sorted(rep.faults.items())))
+
+
+# ---------------------------------------------------------------------------
+# the sweep: off vs sampled vs full on one saturated fleet cell
+# ---------------------------------------------------------------------------
+def bench_trace_overhead(cell: dict) -> dict:
+    from repro.runtime import build_lane_sweep_engine
+
+    n_lanes, n_frames = cell["lanes"], cell["frames"]
+    out = {"workload": "single shard group, identical lanes, saturated "
+                       "(all frames queued at t=0), epoch core",
+           "lanes": n_lanes, "frames": n_frames, "sample": SAMPLE,
+           "best_of": REPS}
+    sigs = {}
+    best = {name: None for name, _ in VARIANTS}
+    events = {name: 0 for name, _ in VARIANTS}
+    trace_stats = {}
+    # reps interleave ACROSS variants (off, sampled, full, off, ...):
+    # each cell is sub-second, so a transient load spike during a
+    # per-variant block would read as fake overhead — interleaving puts
+    # every variant under the same drift, and best-of-N drops the spike
+    for _ in range(REPS):
+        for name, kw in VARIANTS:
+            eng = build_lane_sweep_engine(n_lanes, **kw)
+            eng.feed(n_frames, interval_s=0.0)
+            t0 = time.perf_counter()
+            rep = eng.run(until=float("inf"))
+            wall = time.perf_counter() - t0
+            assert rep.frames_out == n_frames, (name, rep.frames_out)
+            events[name] = eng._events.popped
+            if best[name] is None or wall < best[name]:
+                best[name] = wall
+            sigs[name] = _sig(rep)
+            if rep.trace is not None:
+                s = rep.trace.snapshot()
+                trace_stats[name] = {k: s[k] for k in
+                                     ("entries", "spans_opened", "instants",
+                                      "evicted", "frames_admitted",
+                                      "frames_skipped", "end_misses")}
+    for name, _ in VARIANTS:
+        out[name] = {
+            "events_processed": events[name],
+            "wall_s": round(best[name], 4),
+            "events_per_sec": round(events[name] / best[name], 1),
+        }
+        if name in trace_stats:
+            out[name]["trace"] = trace_stats[name]
+
+    # gate 1: the recorder only observes — one perturbed float fails
+    bit_identical = sigs["off"] == sigs["sampled"] == sigs["full"]
+    # gate 2: sampled tracing costs < 5% events/sec
+    eps = {name: out[name]["events_per_sec"] for name, _ in VARIANTS}
+    overhead = {name: round((eps["off"] / eps[name] - 1.0) * 100.0, 2)
+                for name in ("sampled", "full")}
+    out["bit_identical"] = bool(bit_identical)
+    out["overhead_pct"] = overhead
+    out["acceptance"] = {
+        "bit_identical": bool(bit_identical),
+        "sampled_overhead_pct": overhead["sampled"],
+        "pass_overhead_5pct": overhead["sampled"] < ACCEPT_OVERHEAD_PCT,
+    }
+    return out
+
+
+# ---------------------------------------------------------------------------
+# schema validation + regression check
+# ---------------------------------------------------------------------------
+def validate_obs(doc: dict):
+    assert doc.get("schema") == OBS_SCHEMA, "bad/missing schema tag"
+    assert doc.get("mode") in ("full", "smoke"), "bad mode"
+    sweep = doc.get("trace_overhead")
+    assert sweep, "missing trace_overhead section"
+    for name, _ in VARIANTS:
+        assert "events_per_sec" in sweep[name], f"variant {name} incomplete"
+    for kk in ("bit_identical", "sampled_overhead_pct",
+               "pass_overhead_5pct"):
+        assert kk in sweep["acceptance"], f"acceptance missing {kk!r}"
+
+
+def load_committed():
+    try:
+        committed = json.load(open(OBS_JSON))
+        validate_obs(committed)
+    except Exception as e:  # malformed committed file is itself a failure
+        return None, [f"committed BENCH_obs.json malformed: {e}"]
+    return committed, []
+
+
+def run_check(fresh: dict, smoke: bool, committed: dict) -> list:
+    """Compare a fresh run against the committed baseline; returns a list
+    of failure strings (empty = pass)."""
+    failures = []
+    acc = fresh["trace_overhead"]["acceptance"]
+    if not acc["bit_identical"]:
+        failures.append("tracing perturbed the simulation: traced and "
+                        "untraced reports differ")
+    got = acc["sampled_overhead_pct"]
+    if smoke:
+        base = committed.get("smoke_baseline", {}).get(
+            "sampled_overhead_pct", 0.0)
+        limit = max(ACCEPT_OVERHEAD_PCT, base + SMOKE_HEADROOM_PCT)
+    else:
+        limit = ACCEPT_OVERHEAD_PCT
+    if got >= limit:
+        failures.append(f"sampled tracing overhead {got}% >= {limit}% "
+                        f"(1/{SAMPLE} sampling on the "
+                        f"{fresh['trace_overhead']['lanes']}-lane cell)")
+    return failures
+
+
+def run() -> dict:
+    """Validation-suite entry (``benchmarks/run.py``): smoke-size check
+    that tracing stays observation-only and sampled tracing stays cheap."""
+    sweep = bench_trace_overhead(SMOKE_CELL)
+    return {
+        "acceptance": sweep["acceptance"],
+        "overhead_pct": sweep["overhead_pct"],
+        "pass_bit_identical": bool(sweep["bit_identical"]),
+    }
+
+
+# ---------------------------------------------------------------------------
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes; writes BENCH_obs.smoke.json instead "
+                         "of overwriting the committed baseline")
+    ap.add_argument("--check", action="store_true",
+                    help="validate committed BENCH_obs.json and fail on "
+                         "bit-identity breakage or sampled overhead over "
+                         "the gate")
+    args = ap.parse_args()
+
+    cell = SMOKE_CELL if args.smoke else FULL_CELL
+    mode = "smoke" if args.smoke else "full"
+    committed = None
+    if args.check:
+        # snapshot the committed baseline BEFORE a full run overwrites it
+        committed, failures = load_committed()
+        if failures:
+            raise SystemExit("benchmark check failed: " + "; ".join(failures))
+    print(f"[obs_bench] mode={mode} cell={cell}")
+    doc = {"schema": OBS_SCHEMA, "mode": mode}
+    doc["trace_overhead"] = bench_trace_overhead(cell)
+
+    if not args.smoke:
+        # embed smoke-size baselines so CI runners compare like-for-like;
+        # each sample is a FRESH subprocess (cold-process CI conditions),
+        # and the baseline keeps the MAX overhead over the samples — the
+        # conservative bound for a "got noticeably worse" gate.
+        print("[obs_bench] measuring smoke baseline for CI "
+              "(3 fresh subprocesses)")
+        import subprocess
+        import sys
+        smoke_path = os.path.join(ROOT, "BENCH_obs.smoke.json")
+        samples = []
+        for _ in range(3):
+            subprocess.run([sys.executable, os.path.abspath(__file__),
+                            "--smoke"], check=True, cwd=ROOT)
+            samples.append(json.load(open(smoke_path)))
+        os.remove(smoke_path)
+        overheads = [s["trace_overhead"]["acceptance"]
+                      ["sampled_overhead_pct"] for s in samples]
+        idents = [s["trace_overhead"]["bit_identical"] for s in samples]
+        assert all(idents), "smoke subprocess broke bit-identity"
+        doc["smoke_baseline"] = {
+            "sampled_overhead_pct": max(overheads),
+            "samples": overheads,
+        }
+
+    path = OBS_JSON if not args.smoke else \
+        os.path.join(ROOT, "BENCH_obs.smoke.json")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+    print(f"[obs_bench] wrote {path}")
+    print(json.dumps({"acceptance": doc["trace_overhead"]["acceptance"],
+                      "overhead_pct": doc["trace_overhead"]["overhead_pct"]},
+                     indent=2))
+
+    if args.check:
+        failures = run_check(doc, args.smoke, committed)
+        if failures:
+            raise SystemExit("benchmark check failed: " + "; ".join(failures))
+        print("[obs_bench] check OK — tracing is observation-only and "
+              "sampled overhead is under the gate")
+
+
+if __name__ == "__main__":
+    main()

@@ -14,7 +14,7 @@ import json
 import time
 
 from benchmarks import (bus_scaling, chaos_bench, engine_bench, fabric_bench,
-                        gallery_bench, hotswap, latency_bench,
+                        gallery_bench, hotswap, latency_bench, obs_bench,
                         pipeline_latency, power_bench, power_model,
                         roofline_report, secure_match)
 
@@ -30,6 +30,7 @@ BENCHES = [
     ("tail_latency_fastpath", latency_bench.run, "pass_tail"),
     ("multi_hub_fabric", fabric_bench.run, "pass_fabric"),
     ("chaos_fabric", chaos_bench.run, "pass_chaos"),
+    ("trace_overhead", obs_bench.run, "pass_bit_identical"),
     ("roofline_report", roofline_report.run, None),
 ]
 

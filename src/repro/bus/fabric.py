@@ -297,6 +297,26 @@ class FabricRouter:
             c += max(hs.bus.free_at - t, 0.0) + max(hd.bus.free_at - t, 0.0)
         return c
 
+    def route_legs(self, src: Optional[int], dst: Optional[int],
+                   nbytes: int) -> dict:
+        """Per-leg nominal cost breakdown of a route, for transfer-span
+        annotation (flight recorder).  Pure query like ``route_cost`` —
+        no counters move, no lazy link materializes; FIFO waits are
+        excluded (the span's own duration already includes them)."""
+        s, d = self._route(src, dst)
+        if s == d:
+            return {"local_s": self.hubs[s].local_cost(nbytes)}
+        key = (s, d) if s <= d else (d, s)
+        lk = self._links.get(key)
+        if lk is not None:
+            link_s = lk.cost(nbytes)
+        else:
+            p = self._link_params.get(key, self._default_link)
+            link_s = p.overhead_s + nbytes / p.bandwidth
+        return {"egress_s": self.hubs[s].local_cost(nbytes),
+                "link_s": link_s,
+                "ingress_s": self.hubs[d].local_cost(nbytes)}
+
     # -- the SharedBus-compatible surface -------------------------------------
     @property
     def bytes_moved(self) -> int:

@@ -104,6 +104,9 @@ class SecureGallery:
         self.ann_stats = {"trainings": 0, "assign_calls": 0, "packs": 0}
         self.failovers = 0                 # shard rebuilds after lane death
         self.last_match_stats: dict = {}
+        # optional FlightRecorder: failovers/ANN trainings emit instants
+        # at tracer.clock() (the gallery has no clock of its own)
+        self.tracer = None
 
     # -- enrollment ------------------------------------------------------------
     def enroll(self, raw_templates: np.ndarray, labels):
@@ -219,6 +222,10 @@ class SecureGallery:
         self._ann_codebook = codebook
         self._ann_assign = assign_cells(gn, codebook)
         self.ann_stats["trainings"] += 1
+        if self.tracer is not None:
+            self.tracer.instant("gallery.ann_train", self.tracer.clock(),
+                                track="gallery", rows=self._n,
+                                n_cells=self._ann_n_cells)
         for s in range(self.n_shards):             # packed layouts are stale
             self._prep[s].pop("ann", None)
 
@@ -410,7 +417,22 @@ class SecureGallery:
         self._shard_ids[dead] = np.empty((0,), np.int64)
         self._prep[dead] = {}
         self.failovers += 1
+        if self.tracer is not None:
+            self.tracer.instant("gallery.failover", self.tracer.clock(),
+                                track="gallery", dead=dead, into=into,
+                                rows=int(len(self._shard_ids[into])))
         return into
+
+    def metrics(self) -> dict:
+        """Scalar counters for the ``gallery.*`` registry namespace:
+        topology, failovers, ANN maintenance, and the last match's scan
+        accounting (rows_scored / scan_fraction)."""
+        out = {"rows": self._n, "shards": self.n_shards,
+               "failovers": self.failovers,
+               "ann": dict(self.ann_stats)}
+        if self.last_match_stats:
+            out["match"] = dict(self.last_match_stats)
+        return out
 
     def reshard(self, n_shards: int):
         """Re-split the gallery across ``n_shards`` shards (mirror the lane

@@ -7,6 +7,7 @@ from repro.runtime.faults import (FaultEvent, FaultPlan, QuarantinePolicy,
                                   RetryPolicy, frame_checksum)
 from repro.runtime.metrics import StreamingHistogram
 from repro.runtime.power import PowerGovernor
+from repro.runtime.trace import FlightRecorder, MetricsRegistry, jsonable
 from repro.runtime.replication import (build_battery_engine,
                                        build_chaos_engine,
                                        build_cross_hub_hedge_engine,

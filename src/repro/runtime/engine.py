@@ -136,7 +136,9 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import json
 import time
+import warnings
 import zlib
 from collections import deque
 from dataclasses import dataclass, field
@@ -150,6 +152,7 @@ from repro.core.cartridge import Cartridge, PassThrough
 from repro.core import messages as msg
 from repro.runtime.events import HeapEventQueue
 from repro.runtime import faults as flt
+from repro.runtime import trace as trc
 from repro.runtime.lanestate import LaneStateBank, TrackedDeque
 from repro.runtime.faults import (FaultPlan, QuarantinePolicy, RetryPolicy,
                                   frame_checksum)
@@ -157,6 +160,7 @@ from repro.runtime.health import HealthMonitor, QuarantineLedger
 from repro.runtime.metrics import StreamingHistogram
 from repro.runtime.power import PowerGovernor
 from repro.runtime.registry import CapabilityRegistry, SlotRecord
+from repro.runtime.trace import FlightRecorder, MetricsRegistry, jsonable
 
 HANDSHAKE_S = 0.35       # detection + addressing + capability handshake
 REMOVE_PAUSE_S = 0.5     # paper §4.2: ~0.5 s reconfiguration on removal
@@ -218,6 +222,30 @@ def _fault_counters() -> dict:
             "reroute_blocked": 0, "duplicates": 0}
 
 
+class _ProfileDict(dict):
+    """Deprecation shim for direct ``report.profile[...]`` access.
+
+    Phase timings now live in the metrics registry under
+    ``engine.profile.*`` (``EngineReport.metrics()``); keyed reads of
+    this dict warn once per call site so downstream code migrates.
+    Equality/iteration stay silent — tests asserting ``profile == {}``
+    and the registry's own ingest are not deprecated usage."""
+
+    def _warn(self):
+        warnings.warn(
+            "direct EngineReport.profile[...] access is deprecated; read "
+            "engine.profile.* from EngineReport.metrics() instead",
+            DeprecationWarning, stacklevel=3)
+
+    def __getitem__(self, key):
+        self._warn()
+        return dict.__getitem__(self, key)
+
+    def get(self, key, default=None):
+        self._warn()
+        return dict.get(self, key, default)
+
+
 @dataclass
 class EngineReport:
     frames_in: int = 0
@@ -242,8 +270,14 @@ class EngineReport:
     last_out_t: float = 0.0    # when the last frame completed — goodput
                                # denominator robust to trailing fault events
     # per-phase wall time (dispatch/service/bookkeeping/control), filled
-    # only when the engine runs with profile=True
-    profile: dict = field(default_factory=dict)
+    # only when the engine runs with profile=True.  Keyed access is
+    # deprecated in favour of metrics() -> engine.profile.*
+    profile: dict = field(default_factory=_ProfileDict)
+    # event-queue lifetime counters (HeapEventQueue.stats()), filled at
+    # the end of run()
+    events: dict = field(default_factory=dict)
+    # the flight recorder, when the engine ran with trace enabled
+    trace: Optional[FlightRecorder] = None
 
     def energy_j(self) -> float:
         """Total electrical energy the fleet drew (joules, virtual time)."""
@@ -309,6 +343,78 @@ class EngineReport:
         if self.sim_time <= 0.0:
             return 1.0
         return max(0.0, 1.0 - self.total_downtime() / self.sim_time)
+
+    def metrics(self) -> MetricsRegistry:
+        """One namespaced snapshot of every counter the run produced.
+
+        Stable dotted names (``engine.*``, ``hedge.*``, ``faults.*``,
+        ``power.*``, ``bus.*``, ``stage.*``, ``trace.*``) so dashboards
+        and regression gates can key on them across releases.  Scalar
+        leaves only — list-valued stats (per-frame latencies, downtime
+        windows) stay on the report itself."""
+        reg = MetricsRegistry()
+        reg.set("engine.frames.in", self.frames_in)
+        reg.set("engine.frames.out", self.frames_out)
+        reg.set("engine.frames.lost", self.lost)
+        reg.set("engine.sim_time_s", self.sim_time)
+        reg.set("engine.throughput_fps", self.throughput())
+        reg.set("engine.availability", self.availability())
+        reg.set("engine.downtime_s", self.total_downtime())
+        reg.set("engine.alerts", len(self.alerts))
+        reg.set("engine.swaps", len(self.swap_log))
+        reg.ingest("engine.latency", self.latency_hist.summary())
+        reg.ingest("engine.events", self.events)
+        # dict.copy keeps the deprecation shim silent on internal reads
+        reg.ingest("engine.profile", dict.copy(self.profile))
+        reg.ingest("hedge", self.hedges)
+        reg.ingest("faults", self.faults)
+        reg.ingest("bus", self.bus)
+        reg.ingest("power",
+                   {k: v for k, v in self.power.items() if k != "lanes"})
+        for name, hist in self.stage_hist.items():
+            reg.ingest(f"stage.{name}", hist.summary())
+        for name, st in self.stage_stats.items():
+            reg.ingest(f"lane.{name}", dataclasses.asdict(st))
+        if self.trace is not None:
+            reg.ingest("trace", self.trace.snapshot())
+        return reg
+
+    def to_dict(self) -> dict:
+        """JSON-safe dict with a stable schema (numpy scalars coerced)."""
+        return jsonable({
+            "schema": "champ.engine_report.v1",
+            "frames": {"in": self.frames_in, "out": self.frames_out,
+                       "lost": self.lost},
+            "sim_time_s": self.sim_time,
+            "last_out_t": self.last_out_t,
+            "throughput_fps": self.throughput(),
+            "availability": self.availability(),
+            "latency": self.latency_summary(),
+            "downtime": [list(w) for w in self.downtime],
+            "downtime_merged": [list(w) for w in self.merged_downtime()],
+            "alerts": list(self.alerts),
+            "swap_log": [list(e) for e in self.swap_log],
+            "groups": self.groups,
+            "stage_stats": {k: dataclasses.asdict(v)
+                            for k, v in self.stage_stats.items()},
+            "bus": self.bus,
+            "bus_bytes": self.bus_bytes,
+            "power": self.power,
+            "faults": self.faults,
+            "hedges": dict(self.hedges),
+            "events": self.events,
+            "profile": dict.copy(self.profile),
+            "metrics": self.metrics().snapshot(),
+        })
+
+    def to_json(self, path: Optional[str] = None,
+                indent: Optional[int] = None) -> str:
+        """Serialize ``to_dict()``; optionally also write it to ``path``."""
+        text = json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+        if path is not None:
+            with open(path, "w") as fh:
+                fh.write(text)
+        return text
 
 
 class _Lane:
@@ -541,7 +647,9 @@ class StreamEngine:
                  retry: Optional[RetryPolicy] = None,
                  quarantine: Optional[QuarantinePolicy] = None,
                  watchdog_margin: float = 8.0,
-                 core: str = "epoch", profile: bool = False):
+                 core: str = "epoch", profile: bool = False,
+                 trace=None, trace_sample: int = 1,
+                 trace_capacity: int = 65536):
         if dispatch not in DISPATCH_DISCIPLINES:
             raise ValueError(f"unknown dispatch discipline {dispatch!r}")
         if core not in ENGINE_CORES:
@@ -607,6 +715,24 @@ class StreamEngine:
         self._chaos = False
         self._down: set = set()              # id(lane) of failed lanes
         self._delivered: set = set()         # seqs delivered (chaos only)
+        # flight recorder: ONE flag gates every instrumentation branch
+        # (the _chaos lesson) — trace=None means zero touched state, so
+        # untraced runs are structurally bit-identical to Table 1
+        if isinstance(trace, FlightRecorder):
+            self._trace: Optional[FlightRecorder] = trace
+        elif trace:
+            self._trace = FlightRecorder(
+                capacity=trace_capacity, sample=trace_sample,
+                seed=fault_plan.seed if fault_plan is not None else 0)
+        else:
+            self._trace = None
+        self._svc_sids: dict = {}            # id(lane) -> open service sids
+        if self._trace is not None:
+            rec = self._trace
+            rec.clock = lambda: self.now
+            self.report.trace = rec
+            self.qledger.tracer = rec
+            self.governor.tracer = rec
         registry.subscribe(self._on_registry_event)
         self._rebuild()
         if fault_plan is not None:
@@ -886,6 +1012,7 @@ class StreamEngine:
         self.report.sim_time = self.now
         self.report.bus_bytes = self.bus.bytes_moved
         self.report.bus = self.bus.stats()
+        self.report.events = self._events.stats()
         self.report.power = self.governor.report(self.now)
         if self._chaos:
             self.report.faults["quarantine"] = self.qledger.summary()
@@ -917,14 +1044,14 @@ class StreamEngine:
         if self.profile_enabled:
             self._prof["bookkeeping_s"] += time.perf_counter() - t_book
             p = self._prof
-            self.report.profile = {
+            self.report.profile = _ProfileDict({
                 "core": self.core,
                 "dispatch_s": p["dispatch_s"],
                 "service_s": p["service_s"],
                 "control_s": p["control_s"],
                 "bookkeeping_s": p["bookkeeping_s"],
                 "events": dict(p["events"]),
-            }
+            })
         return self.report
 
     # -- source ---------------------------------------------------------------
@@ -940,6 +1067,10 @@ class StreamEngine:
                         payload=payload, t_created=self.now,
                         meta={"bytes": frame_bytes})
         self.report.frames_in += 1
+        if self._trace is not None and self._trace.admit(m.seq):
+            self._trace.frame_begin(m.seq, self.now)
+            self._trace.instant(trc.INGEST, self.now, m.seq, track="source",
+                                bytes=frame_bytes)
         if self.now < self.paused_until or self.halted_since is not None \
                 or not self._groups:
             self._hold_buffer.append((0, m))  # paper: buffered, not dropped
@@ -959,6 +1090,10 @@ class StreamEngine:
         if g.mode == "broadcast":
             m.meta.pop("_hub", None)
             g.bqueue.append(m)
+            if self._trace is not None and self._trace.watches(m.seq):
+                self._trace.instant(trc.DISPATCH, self.now, m.seq,
+                                    track=g.name, stage=g.name,
+                                    mode="broadcast", quorum=g.quorum)
             self._try_start_broadcast(g)
             return
         lane = g.pick_lane(self.now, weighted=self.dispatch == "ewma",
@@ -970,8 +1105,94 @@ class StreamEngine:
             # loss — reinstatement drains the hold buffer
             self._hold_buffer.append((idx, m))
             return
+        if self._trace is not None and self._trace.watches(m.seq):
+            self._trace_dispatch(g, lane, m)
         lane.queue.append(m)
         self._try_start_lane(lane)
+
+    def _trace_dispatch(self, g, lane: _Lane, m: msg.Message):
+        """DISPATCH instant carrying the argmin inputs that chose the
+        lane — backlog, EWMA estimate, the resulting ETA, plus throttle
+        inflation and probation toll when those hooks were active — so a
+        frame's routing decision is auditable from the trace alone."""
+        backlog = lane.backlog()
+        args = {"stage": g.name, "lane": lane.cart.name, "hub": lane.hub,
+                "backlog": backlog, "est_s": lane.est_s,
+                "eta_s": (backlog + 1) * lane.est_s, "mode": g.mode}
+        if self.governor.active:
+            args["est_scale"] = self.governor.inflation(self.now, lane.hub)
+        if self._chaos:
+            args["probation_toll_s"] = self.qledger.penalty(
+                lane.cart.name, self.now)
+        self._trace.instant(trc.DISPATCH, self.now, m.seq,
+                            track=lane.cart.name, **args)
+
+    def _trace_service_begin(self, lane: _Lane, batch, b: int, infl: float):
+        """Open one SERVICE span per traced frame in the cycle.  A lane
+        runs at most one cycle at a time (busy flag), so the open sids
+        key by lane identity; ``_lane_done`` / ``_fail_lane`` close
+        them."""
+        rec = self._trace
+        gal = getattr(lane.cart, "gallery", None)
+        if gal is not None and getattr(gal, "tracer", None) is None:
+            gal.tracer = rec          # late-bound: carts attach post-init
+        sids = None
+        for m in batch:
+            if rec.watches(m.seq):
+                sid = rec.begin(trc.SERVICE, self.now, m.seq,
+                                track=lane.cart.name, batch=b,
+                                hub=lane.hub, infl=infl)
+                if sids is None:
+                    sids = []
+                sids.append(sid)
+        if sids is not None:
+            self._svc_sids[id(lane)] = sids
+
+    def _trace_service_end(self, lane: _Lane, status: str):
+        """Close the lane's open SERVICE spans.  Completed match-stage
+        cycles attach the gallery scan counters (rows_scored /
+        scan_fraction) so ANN pruning is visible per frame."""
+        sids = self._svc_sids.pop(id(lane), None)
+        if sids is None:
+            return
+        rec = self._trace
+        extra = {"status": status}
+        gal = getattr(lane.cart, "gallery", None)
+        if gal is not None:
+            ms = getattr(gal, "last_match_stats", None)
+            if ms:
+                extra["rows_scored"] = ms.get("rows_scored")
+                extra["scan_fraction"] = ms.get("scan_fraction")
+                extra["match_mode"] = ms.get("mode")
+        for sid in sids:
+            rec.end(sid, self.now, **extra)
+
+    def _trace_transfer(self, batch, done: float, nbytes: int,
+                        src: Optional[int], dst: Optional[int], **extra):
+        """Emit a (pre-closed) TRANSFER span per traced frame: arrival
+        time is deterministic at schedule time, so no open/close pairing
+        is needed.  On a fabric the per-leg breakdown (source egress /
+        inter-hub link / destination ingress) rides along."""
+        rec = self._trace
+        watched = [m for m in batch if rec.watches(m.seq)]
+        if not watched:
+            return
+        if src is None and dst is None:
+            track = "bus"
+        else:
+            # mirror the router's collapse rule: a missing side is a
+            # host-local leg on the other's hub (``FabricRouter._route``)
+            s = src if src is not None else dst
+            d = dst if dst is not None else s
+            track = f"hub{s}->hub{d}" if s != d else f"hub{s}"
+        args = {"bytes": nbytes, **extra}
+        if self.fabric is not None:
+            legs = self.fabric.route_legs(src, dst, nbytes)
+            if legs:
+                args.update(legs)
+        for m in watched:
+            rec.span(trc.TRANSFER, self.now, done, m.seq, track=track,
+                     **args)
 
     def _serviced_orphan_target(self, slot: int, pos: int) -> int:
         """Where an already-serviced message of a vanished lane/group goes:
@@ -1068,6 +1289,8 @@ class StreamEngine:
         lane.stats.batches += 1
         lane.stats.max_batch = max(lane.stats.max_batch, b)
         self.governor.on_cycle_start(self.now, lane.cart, dur, svc)
+        if self._trace is not None:
+            self._trace_service_begin(lane, batch, b, infl)
         handle = self._push_event(self.now + dur, self._lane_done, lane,
                                   batch, svc / factor)
         if self._chaos:
@@ -1147,6 +1370,14 @@ class StreamEngine:
                 meta=dict(task.message.meta, _hedge_copy=True))
             self.report.hedges["issued"] += 1
             self.health.record_backup(task.primary.cart.name, self.now, seq)
+            if self._trace is not None and self._trace.watches(seq):
+                self._trace.instant(
+                    trc.HEDGE_FORK, self.now, seq, track=alt.cart.name,
+                    primary=task.primary.cart.name, backup=alt.cart.name,
+                    stalled_s=self.now - task.message.meta.get(
+                        "_t_stage", self.now),
+                    cross_hub=self.fabric is not None
+                    and alt.hub != task.primary.hub)
             if self.fabric is not None and alt.hub != task.primary.hub:
                 # the speculative copy must cross to the backup's hub.  It
                 # is charged ingress-only to the *destination* hub's bus
@@ -1158,6 +1389,11 @@ class StreamEngine:
                 done = self.fabric.transfer(
                     self.now, self._msg_bytes(copy),
                     self._n_endpoints(alt.hub), src=None, dst=alt.hub)
+                if self._trace is not None and self._trace.watches(seq):
+                    self._trace.span(
+                        trc.TRANSFER, self.now, done, seq,
+                        track=f"host->hub{alt.hub}",
+                        bytes=self._msg_bytes(copy), hedge_copy=True)
                 self._push_event(done, self._hedge_copy_arrive,
                                  task, alt, copy)
             else:
@@ -1267,6 +1503,11 @@ class StreamEngine:
                 if task.copies <= 0:
                     del self._hedges[(slot, m.seq)]
                 m.meta.pop("_hedge_copy", None)
+                if self._trace is not None and self._trace.watches(m.seq):
+                    self._trace.instant(
+                        trc.HEDGE_WIN, self.now, m.seq,
+                        track=lane.cart.name, winner=lane.cart.name,
+                        won_by_backup=lane is task.backup)
                 deliver.append(m)
             else:
                 # this copy lost the race after being serviced: its result
@@ -1278,6 +1519,11 @@ class StreamEngine:
                 if task.copies <= 0:
                     del self._hedges[(slot, m.seq)]
                 self.report.hedges["wasted"] += 1
+                if self._trace is not None and self._trace.watches(m.seq):
+                    self._trace.instant(
+                        trc.HEDGE_LOSS, self.now, m.seq,
+                        track=lane.cart.name, loser=lane.cart.name,
+                        suppressed=True)
                 if self.fabric is not None:
                     g2 = self._group_by_slot.get(slot)
                     dst = self._route_hub(g2.pos + 1, src_hub=lane.hub,
@@ -1306,6 +1552,8 @@ class StreamEngine:
         if svc_norm > 0.0:
             lane.observe(svc_norm, self.ewma_alpha)
         self.health.finish_request(lane.cart.name, self.now)
+        if self._trace is not None:
+            self._trace_service_end(lane, status="ok")
         deliver = self._filter_hedged(lane, batch) if self._hedges else batch
         if not deliver:                     # whole cycle lost its races
             self._try_start_lane(lane)
@@ -1382,6 +1630,11 @@ class StreamEngine:
                     # cross-hub move the router never charged)
         else:
             done = self.bus.transfer(self.now, nbytes, self._n_endpoints())
+        if self._trace is not None:
+            self._trace_transfer(
+                batch, done, nbytes,
+                src=lane.hub if self.fabric is not None else None,
+                dst=dst_hub if self.fabric is not None else None)
         nxt_group = self._groups[nxt] if nxt < len(self._groups) else None
         self._send_batch(done, lane.hub if self.fabric is not None else None,
                          nxt_group, batch)
@@ -1427,6 +1680,10 @@ class StreamEngine:
         lat = self.now - m.t_created
         self.report.latencies.append(lat)
         self.report.latency_hist.record(lat)
+        if self._trace is not None and self._trace.watches(m.seq):
+            self._trace.instant(trc.COMPLETE, self.now, m.seq, track="sink",
+                                latency_s=lat)
+            self._trace.frame_end(m.seq, self.now, latency_s=lat)
 
     # -- broadcast lanes (paper §4.1, Table 1) --------------------------------
     def _try_start_broadcast(self, g: _LaneGroup):
@@ -1485,6 +1742,13 @@ class StreamEngine:
             finish = max(arr, lane.bfree_at) + dur
             lane.bfree_at = finish
             finishes.append(finish)
+            if self._trace is not None and self._trace.watches(m.seq):
+                self._trace.span(trc.TRANSFER, self.now, arr, m.seq,
+                                 track=lane.cart.name, bytes=nbytes,
+                                 broadcast=True)
+                self._trace.span(trc.SERVICE, finish - dur, finish, m.seq,
+                                 track=lane.cart.name, hub=lane.hub,
+                                 broadcast=True, status="ok")
         # quorum: the frame is decided at the k-th replica completion
         # (k = N, the default, is Table 1's full barrier — exactly
         # max(finishes)).  Stragglers keep computing (busy time already
@@ -1556,6 +1820,10 @@ class StreamEngine:
         else:
             done = self.bus.transfer(self.now, self._msg_bytes(m),
                                      self._n_endpoints())
+        if self._trace is not None:
+            self._trace_transfer(
+                [m], done, self._msg_bytes(m), src=src,
+                dst=dst_hub if self.fabric is not None else None)
         self._send_batch(done, src, self._groups[nxt], [m])
         self._try_start_broadcast(g)
 
@@ -1579,6 +1847,9 @@ class StreamEngine:
         if plan.empty:
             return
         self._chaos = True
+        if self._trace is not None:
+            self._trace.instant("fault.plan", self.now, track="faults",
+                                **plan.describe())
         for ev in plan.events:
             self._push_event(ev.t, self._fault_event, ev)
 
@@ -1587,6 +1858,9 @@ class StreamEngine:
         drops the frame (zero loss is the contract) — exhausting it
         raises an operator alert so pathological cells are visible."""
         self.report.faults["retries"] += 1
+        if self._trace is not None and self._trace.watches(m.seq):
+            self._trace.instant(trc.RETRY, self.now, m.seq,
+                                attempt=m.meta.get("_retries", 0))
         if m.meta.get("_retries", 0) == self.retry.budget + 1:
             self.report.faults["budget_exhausted"] += 1
             self.report.alerts.append(
@@ -1639,6 +1913,9 @@ class StreamEngine:
             m.meta.pop("_csum", None)       # strip survivors' stale stamps
         self.report.faults["corrupt_detected"] += 1
         m0 = batch[0]
+        if self._trace is not None and self._trace.watches(m0.seq):
+            self._trace.instant(trc.CORRUPT, self.now, m0.seq,
+                                xmit=m0.meta.get("_xmit", 0))
         attempt = m0.meta.get("_retries", 0)
         m0.meta["_retries"] = attempt + 1
         self._note_retry(m0)
@@ -1674,6 +1951,12 @@ class StreamEngine:
         else:
             done = self.bus.transfer(self.now, nbytes, self._n_endpoints())
         self.report.faults["resends"] += 1
+        if self._trace is not None:
+            for m in batch:
+                if self._trace.watches(m.seq):
+                    self._trace.instant(trc.RESEND, self.now, m.seq)
+            self._trace_transfer(batch, done, nbytes, src=src_hub,
+                                 dst=dst_hub, resend=True)
         self._send_batch(done, src_hub, nxt_group, batch)
 
     # .. watchdog (timeout promotion of hangs into failures) ..................
@@ -1700,11 +1983,17 @@ class StreamEngine:
         if self._group_of_lane(lane) is None or id(lane) in self._down:
             return
         self.report.faults["hang_promoted"] += 1
+        if self._trace is not None:
+            self._trace.instant(trc.WATCHDOG, self.now,
+                                track=lane.cart.name, cycle=cycle)
         self._fail_lane(lane, "hang promoted by watchdog")
 
     # .. fault events ..........................................................
     def _fault_event(self, ev: flt.FaultEvent):
         self.report.faults["injected"] += 1
+        if self._trace is not None:
+            self._trace.instant(trc.FAULT, self.now, track="faults",
+                                **ev.describe())
         if ev.kind == flt.LANE_CRASH:
             lane = self._find_lane(ev.target)
             if lane is not None and id(lane) not in self._down:
@@ -1779,6 +2068,8 @@ class StreamEngine:
                 self._events.cancel(handle)  # False if already hung: fine
                 lane.inflight = None
             lane.set_busy(False)
+            if self._trace is not None:
+                self._trace_service_end(lane, status="aborted")
             # settle the energy uplift and clear the health ledger without
             # teaching either that the aborted cycle was a completion
             self.governor.on_cycle_end(self.now, lane.cart)
@@ -1930,6 +2221,11 @@ class StreamEngine:
                           or downspec.accepts(upspec))
             self.report.swap_log.append(
                 (self.now, "remove", f"slot {slot} ({rec.cartridge.name})"))
+            if self._trace is not None:
+                self._trace.instant(trc.SWAP, self.now, track="engine",
+                                    op="remove", slot=slot,
+                                    name=rec.cartridge.name,
+                                    bridged=compatible)
             if compatible:
                 # paper: 'bridge the gap if the pipeline can continue
                 # without that function' — chain shortens (pass-through)
@@ -1961,6 +2257,10 @@ class StreamEngine:
             self._in_swap = False
         self.report.swap_log.append(
             (self.now, "insert", f"slot {slot} ({cart.name})"))
+        if self._trace is not None:
+            self._trace.instant(trc.SWAP, self.now, track="engine",
+                                op="insert", slot=slot, name=cart.name,
+                                load_s=load_s)
         if self.halted_since is not None:
             # operator supplied the missing capability: close the halt
             # window and resume
@@ -1991,6 +2291,9 @@ class StreamEngine:
                                       cart.device.load_s)
         self.report.swap_log.append(
             (self.now, "add_replica", f"slot {slot} ({cart.name})"))
+        if self._trace is not None:
+            self._trace.instant(trc.SWAP, self.now, track="engine",
+                                op="add_replica", slot=slot, name=cart.name)
 
     def _do_remove_replica(self, slot: int, cart: Optional[Cartridge]):
         """Unplug one replica.  With surviving lanes the group degrades
@@ -2012,6 +2315,10 @@ class StreamEngine:
         self.report.swap_log.append(
             (self.now, "remove_replica", f"slot {slot} "
                                          f"({victim_cart.name})"))
+        if self._trace is not None:
+            self._trace.instant(trc.SWAP, self.now, track="engine",
+                                op="remove_replica", slot=slot,
+                                name=victim_cart.name)
         # the rebuild's rescue pass parked the victim's backlog in the hold
         # buffer; with no pause it redistributes to surviving lanes now
         # (the victim's in-flight batch still completes before detach)

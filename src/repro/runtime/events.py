@@ -160,6 +160,16 @@ class HeapEventQueue:
             raise IndexError("peek_time on empty HeapEventQueue")
         return self._heap[0][0]
 
+    def stats(self) -> dict:
+        """Lifetime counters (the ``engine.events.*`` metrics
+        namespace): fed into the metrics registry at report time so the
+        queue's health — cancellation pressure, compaction churn — is
+        visible next to the engine's own counters."""
+        return {"pushed": self.pushed, "popped": self.popped,
+                "cancelled": self.cancelled,
+                "compactions": self.compactions,
+                "dead_peak": self.dead_peak}
+
     def __len__(self) -> int:
         return len(self._heap) - len(self._dead)
 
@@ -230,6 +240,12 @@ class ListEventQueue:
         if not self._q:
             raise IndexError("peek_time on empty ListEventQueue")
         return min(self._q)[0]
+
+    def stats(self) -> dict:
+        return {"pushed": self.pushed, "popped": self.popped,
+                "cancelled": self.cancelled,
+                "compactions": self.compactions,
+                "dead_peak": self.dead_peak}
 
     def __len__(self) -> int:
         return len(self._q)

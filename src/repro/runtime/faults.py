@@ -84,6 +84,12 @@ class FaultEvent:
         if self.t < 0 or self.duration < 0:
             raise ValueError("fault time/duration must be >= 0")
 
+    def describe(self) -> dict:
+        """Trace-arg form: plain scalars only (the ``(a, b)`` link
+        target stringifies so exports stay JSON-stable)."""
+        return {"fault": self.kind, "target": str(self.target),
+                "duration_s": self.duration}
+
 
 @dataclass(frozen=True)
 class RetryPolicy:

@@ -144,13 +144,17 @@ class QuarantineLedger:
     def __init__(self, policy: Optional[QuarantinePolicy] = None):
         self.policy = policy or QuarantinePolicy()
         self._st: Dict[str, _Lease] = {}
+        # optional FlightRecorder: quarantine/reinstate emit instants —
+        # the ledger alone sees flap escalation, so it owns the detail
+        self.tracer = None
 
     def quarantine(self, name: str, t: float,
                    min_lease_s: float = 0.0) -> float:
         """Bench ``name`` at time ``t``; returns the lease expiry."""
         p = self.policy
         st = self._st.setdefault(name, _Lease())
-        if st.faults > 0 and t <= st.probation_until:
+        flapped = st.faults > 0 and t <= st.probation_until
+        if flapped:
             # Faulted while quarantined or on probation: flap — escalate.
             st.flaps += 1
             st.lease_s = min(max(st.lease_s, p.lease_s) * p.flap_factor,
@@ -161,6 +165,10 @@ class QuarantineLedger:
         st.faults += 1
         st.until = t + st.lease_s
         st.probation_until = st.until + p.probation_s
+        if self.tracer is not None:
+            self.tracer.instant("quarantine", t, track=name,
+                                lease_s=st.lease_s, until=st.until,
+                                flapped=flapped, faults=st.faults)
         return st.until
 
     def quarantined(self, name: str, t: float) -> bool:
@@ -183,6 +191,10 @@ class QuarantineLedger:
         st = self._st.get(name)
         if st is not None:
             st.reinstatements += 1
+            if self.tracer is not None:
+                self.tracer.instant("reinstate", t, track=name,
+                                    probation_until=st.probation_until,
+                                    penalty=self.policy.probation_penalty)
 
     def summary(self) -> dict:
         return {name: {"faults": st.faults, "flaps": st.flaps,

@@ -109,6 +109,30 @@ class StreamingHistogram:
         if self.max is None or mx > self.max:
             self.max = mx
 
+    def merge(self, other: "StreamingHistogram") -> "StreamingHistogram":
+        """Fold ``other``'s samples into this histogram in place.
+
+        Bin counts add exactly, so a merge is bit-identical (counts /
+        count / min / max) to having recorded the concatenated sample
+        streams into one histogram — per-lane and per-stage histograms
+        aggregate into fleet-level views without re-recording.  Requires
+        identical bin geometry; returns ``self`` for chaining."""
+        if (self.lo, self.hi, self.bpd) != (other.lo, other.hi, other.bpd):
+            raise ValueError(
+                f"cannot merge histograms with different bin geometry: "
+                f"(lo={self.lo}, hi={self.hi}, bpd={self.bpd}) vs "
+                f"(lo={other.lo}, hi={other.hi}, bpd={other.bpd})")
+        self.counts += other.counts
+        self.count += other.count
+        self.total += other.total
+        if other.min is not None:
+            self.min = other.min if self.min is None \
+                else min(self.min, other.min)
+        if other.max is not None:
+            self.max = other.max if self.max is None \
+                else max(self.max, other.max)
+        return self
+
     def mean(self) -> float:
         return self.total / self.count if self.count else 0.0
 

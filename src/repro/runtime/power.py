@@ -289,6 +289,9 @@ class PowerGovernor:
         self._lane_dev: Dict[int, DeviceModel] = {}  # id(cart) -> device
         self._retired: Dict[str, _FrozenMeter] = {}  # name -> snapshot
         self._hubs: Dict[int, _HubState] = {}
+        # optional FlightRecorder: state transitions emit power.state
+        # instants (the engine wires this when tracing is enabled)
+        self.tracer = None
 
     # -- configuration --------------------------------------------------------
     @property
@@ -398,7 +401,20 @@ class PowerGovernor:
         hs.last_t = t
 
     def _evaluate(self, hs: _HubState):
-        """Run the state machine against the current draw estimate."""
+        """Run the state machine against the current draw estimate.
+        With a tracer attached, any state transition emits a
+        ``power.state`` instant (at ``hs.last_t``, the virtual time the
+        estimate was advanced to) — the machine itself is untouched, so
+        traced runs stay float-for-float identical."""
+        prev = hs.state
+        self._step_state(hs)
+        if self.tracer is not None and hs.state != prev:
+            self.tracer.instant(
+                "power.state", hs.last_t, track=f"hub{hs.hub}",
+                state=hs.state, prev=prev, p_hat_w=hs.p_hat,
+                duty=hs.duty)
+
+    def _step_state(self, hs: _HubState):
         b = hs.budget_w
         if b is None:
             hs.state = "nominal"

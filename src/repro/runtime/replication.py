@@ -400,7 +400,8 @@ def build_lane_sweep_engine(n_lanes: int, service_s: float = 2e-4,
 
 def build_cross_hub_hedge_engine(suppression: bool = True,
                                  n_bursts: int = 120,
-                                 load: float = 0.45) -> StreamEngine:
+                                 load: float = 0.45,
+                                 **engine_kw) -> StreamEngine:
     """The canonical cross-hub hedging scenario — shared by
     ``benchmarks/fabric_bench.py`` (the tracked suppression-on/off p99
     comparison in ``BENCH_fabric.json``) and the test suite, so the
@@ -437,7 +438,8 @@ def build_cross_hub_hedge_engine(suppression: bool = True,
                    arbitration_s=3e-4)],
         link=LinkParams(bandwidth=120e6, overhead_s=2e-4),
         suppression=suppression)
-    eng = StreamEngine(reg, fabric, hedge=True, hedge_quantile=0.8)
+    eng = StreamEngine(reg, fabric, hedge=True, hedge_quantile=0.8,
+                       **engine_kw)
     period = 5 / (load * (4 / svc))
     for i in range(n_bursts):
         eng.feed(5, interval_s=0.0, t0=i * period)
