@@ -16,7 +16,7 @@ import time
 from benchmarks import (bus_scaling, chaos_bench, engine_bench, fabric_bench,
                         gallery_bench, hotswap, latency_bench, obs_bench,
                         pipeline_latency, power_bench, power_model,
-                        roofline_report, secure_match)
+                        roofline_report, secure_match, serve_bench)
 
 BENCHES = [
     ("table1_bus_scaling", bus_scaling.run, "pass_pm1fps"),
@@ -31,6 +31,7 @@ BENCHES = [
     ("multi_hub_fabric", fabric_bench.run, "pass_fabric"),
     ("chaos_fabric", chaos_bench.run, "pass_chaos"),
     ("trace_overhead", obs_bench.run, "pass_bit_identical"),
+    ("fleet_frontdoor", serve_bench.run, "pass_bit_identical"),
     ("roofline_report", roofline_report.run, None),
 ]
 

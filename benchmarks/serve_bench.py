@@ -1,0 +1,284 @@
+"""Fleet front-door benchmark — graceful degradation under overload.
+
+One tracked artifact, written to the repo root:
+
+* ``BENCH_serve.json`` (schema v1) — the multi-tenant overload sweep on
+  the fleet cell (8 identical lanes behind the front door, three tenant
+  tiers: interactive / standard / bulk at a 10/30/60 offered-load
+  split).  Offered load runs at 1x, 2x, and 4x nominal capacity; each
+  cell records per-tenant goodput, p99 latency, and shed counts.  Gates:
+
+  - **bit-identity** (absolute, exact): a single-tenant uncapped
+    ``feed()`` through the trivial front door produces a float-for-float
+    identical report to the pre-door direct-ingest path on the Table 1
+    replication scenario.  The door is a pure pass-through until a
+    second tenant or a rate cap engages it.
+  - **interactive SLO held at 4x** (absolute): the class-0 tenant's p99
+    stays within its SLO even at 4x offered load — overload lands on
+    bulk, not on the checkpoint operator.
+  - **class-ordered degradation** (absolute): at every overload level,
+    goodput is ordered interactive >= standard >= bulk, and bulk goodput
+    is non-increasing as overload grows — the shed order is the priority
+    order.
+  - **no collapse** (absolute): total completed frames at 4x stay within
+    10% of the 1x total — shedding protects throughput instead of
+    letting queue growth destroy it.
+  - **goodput retention** (the CI contract): completed(4x)/completed(1x)
+    must not regress more than 20% against the committed baseline.
+
+The simulation is deterministic (virtual time), so the committed
+``smoke_baseline`` is measured over 3 fresh subprocesses and asserted
+identical across them before being embedded — a CI ``--smoke --check``
+run compares like-for-like against an exact, noise-free number.
+
+Run:  PYTHONPATH=src python benchmarks/serve_bench.py [--smoke] [--check]
+"""
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")  # reproducible CI numbers
+
+import argparse
+import json
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SERVE_JSON = os.path.join(ROOT, "BENCH_serve.json")
+
+SERVE_SCHEMA = "champ.serve_bench.v1"
+
+OVERLOADS = (1.0, 2.0, 4.0)
+FULL_CELL = {"duration_s": 20.0}
+SMOKE_CELL = {"duration_s": 4.0}
+IDENTITY_CELL = {"device": "ncs2", "n_lanes": 5, "frames": 200}
+
+COLLAPSE_FLOOR = 0.90       # completed(4x) >= 90% of completed(1x)
+RETENTION_REGRESSION = 0.20  # CI gate: >20% retention drop vs committed
+
+
+def _sig(rep):
+    """Everything float-valued the engine computes, exactly."""
+    return (rep.frames_in, rep.frames_out, rep.sim_time, rep.last_out_t,
+            tuple(rep.latencies), tuple(sorted(rep.hedges.items())),
+            tuple(sorted(rep.faults.items())))
+
+
+# ---------------------------------------------------------------------------
+# gate 1: the trivial door is a pure pass-through
+# ---------------------------------------------------------------------------
+def bench_bit_identity(cell: dict) -> dict:
+    """``feed()`` (through the lazily-attached trivial front door) vs the
+    direct ``_frame_arrival`` ingest it replaced, on the Table 1
+    replication scenario.  One perturbed float fails the bench."""
+    from repro.runtime import build_replicated_engine
+
+    e1 = build_replicated_engine(cell["device"], cell["n_lanes"])
+    e1.feed(cell["frames"], interval_s=0.0)
+    r1 = e1.run(until=float("inf"))
+
+    e2 = build_replicated_engine(cell["device"], cell["n_lanes"])
+    for _ in range(cell["frames"]):
+        e2._push_event(0.0, e2._frame_arrival, None, 150528)
+    r2 = e2.run(until=float("inf"))
+
+    identical = _sig(r1) == _sig(r2)
+    return {"workload": f"{cell['device']} x{cell['n_lanes']}, "
+                        f"{cell['frames']} frames saturated (Table 1 cell)",
+            "frames_out": r1.frames_out,
+            "bit_identical": bool(identical)}
+
+
+# ---------------------------------------------------------------------------
+# the sweep: three tenant tiers at 1x / 2x / 4x offered load
+# ---------------------------------------------------------------------------
+def bench_overload_sweep(cell: dict) -> dict:
+    from repro.runtime import FLEET_SPLIT, FLEET_TENANTS, run_fleet_sweep
+
+    duration_s = cell["duration_s"]
+    tiers = {t.name: t for t in FLEET_TENANTS}
+    interactive = min(FLEET_TENANTS, key=lambda t: t.priority)
+    by_prio = sorted(FLEET_TENANTS, key=lambda t: t.priority)
+    out = {"workload": "8-lane fleet cell, tenant split "
+                       + json.dumps(FLEET_SPLIT),
+           "duration_s": duration_s,
+           "tenants": {t.name: {"priority": t.priority, "weight": t.weight,
+                                "slo_s": t.slo_s, "queue_cap": t.queue_cap}
+                       for t in FLEET_TENANTS},
+           "levels": {}}
+    completed_total = {}
+    for ov in OVERLOADS:
+        t0 = time.perf_counter()
+        rep = run_fleet_sweep(ov, duration_s=duration_s)
+        wall = time.perf_counter() - t0
+        fd = rep.frontdoor
+        level = {"wall_s": round(wall, 3), "lost": rep.lost,
+                 "completed": sum(t["completed"]
+                                  for t in fd["tenants"].values()),
+                 "shed": fd["shed"], "per_tenant": {}}
+        for name, t in fd["tenants"].items():
+            level["per_tenant"][name] = {
+                "offered": t["offered"], "admitted": t["admitted"],
+                "shed": t["shed"], "completed": t["completed"],
+                "goodput": round(t["goodput"], 4),
+                "p99_s": round(t["latency"]["p99"], 5),
+                "slo_miss": t["slo_miss"],
+            }
+        completed_total[ov] = level["completed"]
+        out["levels"][f"{ov:g}x"] = level
+
+    # gate 2: interactive p99 within SLO at the highest overload
+    peak = out["levels"][f"{OVERLOADS[-1]:g}x"]["per_tenant"]
+    slo_held = peak[interactive.name]["p99_s"] <= tiers[interactive.name].slo_s
+    # gate 3: class-ordered goodput at every level; bulk non-increasing
+    ordered = True
+    for lvl in out["levels"].values():
+        gp = [lvl["per_tenant"][t.name]["goodput"] for t in by_prio]
+        ordered &= all(a >= b - 1e-9 for a, b in zip(gp, gp[1:]))
+    bulk = by_prio[-1].name
+    bulk_gp = [out["levels"][f"{ov:g}x"]["per_tenant"][bulk]["goodput"]
+               for ov in OVERLOADS]
+    monotone = all(a >= b - 1e-9 for a, b in zip(bulk_gp, bulk_gp[1:]))
+    # gate 4: no collapse — shed protects throughput
+    retention = completed_total[OVERLOADS[-1]] / completed_total[OVERLOADS[0]]
+    out["acceptance"] = {
+        "interactive_p99_s": peak[interactive.name]["p99_s"],
+        "interactive_slo_s": tiers[interactive.name].slo_s,
+        "pass_interactive_slo_at_peak": bool(slo_held),
+        "pass_class_ordered_goodput": bool(ordered),
+        "pass_bulk_sheds_first": bool(monotone and bulk_gp[-1] < 1.0),
+        "goodput_retention": round(retention, 4),
+        "pass_no_collapse": bool(retention >= COLLAPSE_FLOOR),
+    }
+    return out
+
+
+# ---------------------------------------------------------------------------
+# schema validation + regression check
+# ---------------------------------------------------------------------------
+def validate_serve(doc: dict):
+    assert doc.get("schema") == SERVE_SCHEMA, "bad/missing schema tag"
+    assert doc.get("mode") in ("full", "smoke"), "bad mode"
+    assert doc.get("bit_identity", {}).get("bit_identical") is not None, \
+        "missing bit_identity section"
+    sweep = doc.get("overload_sweep")
+    assert sweep, "missing overload_sweep section"
+    for ov in OVERLOADS:
+        assert f"{ov:g}x" in sweep["levels"], f"missing {ov:g}x level"
+    for kk in ("pass_interactive_slo_at_peak", "pass_class_ordered_goodput",
+               "pass_bulk_sheds_first", "goodput_retention",
+               "pass_no_collapse"):
+        assert kk in sweep["acceptance"], f"acceptance missing {kk!r}"
+
+
+def load_committed():
+    try:
+        committed = json.load(open(SERVE_JSON))
+        validate_serve(committed)
+    except Exception as e:  # malformed committed file is itself a failure
+        return None, [f"committed BENCH_serve.json malformed: {e}"]
+    return committed, []
+
+
+def run_check(fresh: dict, smoke: bool, committed: dict) -> list:
+    """Compare a fresh run against the committed baseline; returns a list
+    of failure strings (empty = pass)."""
+    failures = []
+    if not fresh["bit_identity"]["bit_identical"]:
+        failures.append("front door perturbed the single-tenant path: "
+                        "feed() and direct ingest reports differ")
+    acc = fresh["overload_sweep"]["acceptance"]
+    for gate in ("pass_interactive_slo_at_peak", "pass_class_ordered_goodput",
+                 "pass_bulk_sheds_first", "pass_no_collapse"):
+        if not acc[gate]:
+            failures.append(f"overload sweep gate failed: {gate}")
+    got = acc["goodput_retention"]
+    if smoke:
+        base = committed.get("smoke_baseline", {}).get("goodput_retention")
+        if base is not None and got < base * (1.0 - RETENTION_REGRESSION):
+            failures.append(
+                f"goodput retention {got} regressed >"
+                f"{RETENTION_REGRESSION:.0%} vs committed baseline {base}")
+    return failures
+
+
+def run() -> dict:
+    """Validation-suite entry (``benchmarks/run.py``): smoke-size check
+    that the door stays pass-through for one tenant and degrades
+    class-ordered under overload."""
+    ident = bench_bit_identity(IDENTITY_CELL)
+    sweep = bench_overload_sweep(SMOKE_CELL)
+    return {
+        "acceptance": sweep["acceptance"],
+        "pass_bit_identical": bool(ident["bit_identical"]),
+    }
+
+
+# ---------------------------------------------------------------------------
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes; writes BENCH_serve.smoke.json instead "
+                         "of overwriting the committed baseline")
+    ap.add_argument("--check", action="store_true",
+                    help="validate committed BENCH_serve.json and fail on "
+                         "bit-identity breakage, a broken degradation gate, "
+                         "or a goodput-retention regression")
+    args = ap.parse_args()
+
+    cell = SMOKE_CELL if args.smoke else FULL_CELL
+    mode = "smoke" if args.smoke else "full"
+    committed = None
+    if args.check:
+        # snapshot the committed baseline BEFORE a full run overwrites it
+        committed, failures = load_committed()
+        if failures:
+            raise SystemExit("benchmark check failed: " + "; ".join(failures))
+    print(f"[serve_bench] mode={mode} cell={cell}")
+    doc = {"schema": SERVE_SCHEMA, "mode": mode}
+    doc["bit_identity"] = bench_bit_identity(IDENTITY_CELL)
+    doc["overload_sweep"] = bench_overload_sweep(cell)
+
+    if not args.smoke:
+        # embed the smoke-size baseline so CI runners compare
+        # like-for-like; the sim is deterministic, so 3 fresh
+        # subprocesses must agree exactly — disagreement is itself a bug
+        print("[serve_bench] measuring smoke baseline for CI "
+              "(3 fresh subprocesses)")
+        import subprocess
+        import sys
+        smoke_path = os.path.join(ROOT, "BENCH_serve.smoke.json")
+        samples = []
+        for _ in range(3):
+            subprocess.run([sys.executable, os.path.abspath(__file__),
+                            "--smoke"], check=True, cwd=ROOT)
+            samples.append(json.load(open(smoke_path)))
+        os.remove(smoke_path)
+        retentions = [s["overload_sweep"]["acceptance"]["goodput_retention"]
+                      for s in samples]
+        idents = [s["bit_identity"]["bit_identical"] for s in samples]
+        assert all(idents), "smoke subprocess broke bit-identity"
+        assert len(set(retentions)) == 1, \
+            f"smoke sweep is nondeterministic: {retentions}"
+        doc["smoke_baseline"] = {"goodput_retention": retentions[0],
+                                 "samples": retentions}
+
+    path = SERVE_JSON if not args.smoke else \
+        os.path.join(ROOT, "BENCH_serve.smoke.json")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+    print(f"[serve_bench] wrote {path}")
+    print(json.dumps({"acceptance": doc["overload_sweep"]["acceptance"],
+                      "bit_identical": doc["bit_identity"]["bit_identical"]},
+                     indent=2))
+
+    if args.check:
+        failures = run_check(doc, args.smoke, committed)
+        if failures:
+            raise SystemExit("benchmark check failed: " + "; ".join(failures))
+        print("[serve_bench] check OK — single-tenant path is pass-through "
+              "and overload degrades class-ordered")
+
+
+if __name__ == "__main__":
+    main()

@@ -94,6 +94,15 @@ class SecureGallery:
         self._prep: List[dict] = [{} for _ in range(n_shards)]
         self._labels: list = []
         self._n = 0
+        # multi-tenant isolation: every row carries its enrolling
+        # tenant's code (gid-indexed, so tags survive reshard/failover
+        # exactly like the ANN assignment); code 0 = the untagged /
+        # fleet-operator pool.  match(tenant=...) scopes scoring to that
+        # tenant's rows — one tenant's watchlist never serves another's
+        # match
+        self._tenant_codes: dict = {None: 0}
+        self._tenant_names: list = [None]
+        self._tenant_tags = np.empty((0,), np.int32)
         # two-level ANN tier: encrypted global codebook + per-gid cell
         # assignment (ints, not biometric data); physical packed layouts
         # live in the per-shard _prep caches
@@ -109,16 +118,46 @@ class SecureGallery:
         self.tracer = None
 
     # -- enrollment ------------------------------------------------------------
-    def enroll(self, raw_templates: np.ndarray, labels):
+    def _tenant_code(self, tenant, create: bool = False) -> int:
+        code = self._tenant_codes.get(tenant)
+        if code is None:
+            if not create:
+                raise KeyError(f"unknown tenant {tenant!r}: no rows "
+                               "enrolled under that name")
+            code = len(self._tenant_names)
+            self._tenant_codes[tenant] = code
+            self._tenant_names.append(tenant)
+        return code
+
+    def has_tenant(self, tenant) -> bool:
+        """True when ``tenant`` has enrolled rows to match against."""
+        code = self._tenant_codes.get(tenant)
+        return code is not None and bool((self._tenant_tags == code).any())
+
+    def tenant_rows(self) -> dict:
+        """Enrolled row count per tenant (None = the untagged pool)."""
+        out = {}
+        for name, code in self._tenant_codes.items():
+            n = int((self._tenant_tags == code).sum())
+            if n or name is None:
+                out[name] = n
+        return out
+
+    def enroll(self, raw_templates: np.ndarray, labels, tenant=None):
         """raw (N, dim) embeddings -> protected + encrypted at rest,
         distributed across shards by *deficit* (each shard receives
         enough rows to level the sizes — ``np.array_split`` over the
         least-full order ignored existing imbalance, so uneven
-        enroll/reshard sequences skewed per-replica latency)."""
+        enroll/reshard sequences skewed per-replica latency).
+        ``tenant`` tags the rows for scoped matching (None = the shared
+        fleet pool)."""
         prot = np.asarray(self.rotation.protect(jnp.asarray(raw_templates)))
         prot = prot.astype(np.float32)
         n_new = prot.shape[0]
         gids = np.arange(self._n, self._n + n_new, dtype=np.int64)
+        code = self._tenant_code(tenant, create=True)
+        self._tenant_tags = np.concatenate(
+            [self._tenant_tags, np.full(n_new, code, np.int32)])
         if self._ann_blob is not None and n_new:
             # incremental index maintenance: new rows join existing cells
             # (nearest centroid in protected space); the codebook is NOT
@@ -191,13 +230,39 @@ class SecureGallery:
         self._prep = [{} for _ in self._shards]
         self._ann_codebook = None
 
-    def _match_shard(self, s: int, q: jax.Array, k: int, dtype: str):
+    def _tenant_shard_rows(self, s: int, code: int) -> np.ndarray:
+        """Shard-local row indices belonging to a tenant (cached in the
+        shard's prep view, so invalidation follows the same
+        enroll/rekey/reshard lifecycle as the decrypted arrays)."""
+        cache = self._prep[s].setdefault("tenant_rows", {})
+        rows = cache.get(code)
+        if rows is None:
+            rows = cache[code] = np.nonzero(
+                self._tenant_tags[self._shard_ids[s]] == code)[0]
+        return rows
+
+    def _match_shard(self, s: int, q: jax.Array, k: int, dtype: str,
+                     rows: Optional[np.ndarray] = None):
+        """Exact top-k over one shard; ``rows`` restricts scoring to a
+        tenant's subset view (the int8 path subsets the per-row
+        quantized values/scales directly — per-row quantization makes
+        the subset bit-identical to quantizing the subset).  Returned
+        indices are shard-local."""
         from repro.kernels import ops as K
         prep = self._prepare(s, dtype)
         if dtype == "int8":
-            return K.gallery_match_quant(q, prep["q8"], prep["scale"], k=k)
-        gn = prep["gn_bf16"] if dtype == "bf16" else prep["gn"]
-        return K.gallery_match_fused(q, gn, k=k)
+            q8, scale = prep["q8"], prep["scale"]
+            if rows is not None:
+                q8, scale = q8[rows], scale[rows]
+            scores, idx = K.gallery_match_quant(q, q8, scale, k=k)
+        else:
+            gn = prep["gn_bf16"] if dtype == "bf16" else prep["gn"]
+            if rows is not None:
+                gn = gn[rows]
+            scores, idx = K.gallery_match_fused(q, gn, k=k)
+        if rows is not None:
+            idx = rows[np.asarray(idx)]
+        return scores, idx
 
     # -- two-level ANN tier ------------------------------------------------------
     def build_ann_index(self, *, n_cells: Optional[int] = None,
@@ -228,6 +293,7 @@ class SecureGallery:
                                 n_cells=self._ann_n_cells)
         for s in range(self.n_shards):             # packed layouts are stale
             self._prep[s].pop("ann", None)
+            self._prep[s].pop("tenant_ann", None)
 
     @property
     def ann_indexed(self) -> bool:
@@ -240,30 +306,44 @@ class SecureGallery:
                                                self._ann_blob)
         return self._ann_codebook
 
-    def _prepare_ann(self, s: int, dtype: str) -> dict:
+    def _prepare_ann(self, s: int, dtype: str,
+                     code: Optional[int] = None) -> dict:
         """Padded cell-major physical view of shard ``s`` for ``dtype``,
         built lazily from the prepared (decrypt-once) view + the global
-        assignment — an *affected-shard-only* repack, never a retrain."""
+        assignment — an *affected-shard-only* repack, never a retrain.
+        With a tenant ``code``, the layout and packed arrays cover only
+        that tenant's rows (``ann["rows"]`` maps back to shard-local)."""
+        from repro.kernels.ann_match import build_cell_layout
         prep = self._prepare(s, dtype)
-        if "ann" not in prep:
-            from repro.kernels.ann_match import build_cell_layout
-            assign = self._ann_assign[self._shard_ids[s]]
-            prep["ann"] = {"layout": build_cell_layout(
-                assign, self._ann_n_cells)}
-            self.ann_stats["packs"] += 1
-        ann = prep["ann"]
+        if code is None:
+            if "ann" not in prep:
+                assign = self._ann_assign[self._shard_ids[s]]
+                prep["ann"] = {"layout": build_cell_layout(
+                    assign, self._ann_n_cells)}
+                self.ann_stats["packs"] += 1
+            ann = prep["ann"]
+        else:
+            ann = prep.setdefault("tenant_ann", {}).setdefault(code, {})
+            if "layout" not in ann:
+                rows = self._tenant_shard_rows(s, code)
+                ann["rows"] = rows
+                assign = self._ann_assign[self._shard_ids[s][rows]]
+                ann["layout"] = build_cell_layout(assign, self._ann_n_cells)
+                self.ann_stats["packs"] += 1
         layout = ann["layout"]
+        gn = np.asarray(prep["gn"])
+        if code is not None:
+            gn = gn[ann["rows"]]
         if dtype == "int8" and "q8" not in ann:
             from repro.kernels.ann_match import pack_cells_quant
-            ann["q8"], ann["scale"] = pack_cells_quant(
-                np.asarray(prep["gn"]), layout)
+            ann["q8"], ann["scale"] = pack_cells_quant(gn, layout)
         elif dtype in ("fp32", "bf16") and "packed" not in ann:
             from repro.kernels.ann_match import pack_cells
-            ann["packed"] = pack_cells(np.asarray(prep["gn"]), layout)
+            ann["packed"] = pack_cells(gn, layout)
         if dtype == "bf16" and "packed_bf16" not in ann:
             ann["packed_bf16"] = jnp.asarray(ann["packed"]).astype(
                 jnp.bfloat16)
-        return prep
+        return ann
 
     def _coarse_scan(self, q: jax.Array, nprobe: int, dtype: str):
         """Query-vs-codebook probe selection in the match dtype (the
@@ -281,13 +361,13 @@ class SecureGallery:
         return K.centroid_topc(q, cents, c=nprobe)
 
     def _match_shard_ann(self, s: int, q: jax.Array, cell_ids: jax.Array,
-                         k: int, dtype: str):
-        """Exact rescore of shard ``s`` restricted to the probed cells;
-        returns (scores, global ids, rows_scored) with -1 ids on
-        unfilled slots."""
+                         k: int, dtype: str, code: Optional[int] = None):
+        """Exact rescore of shard ``s`` restricted to the probed cells
+        (and, with a tenant ``code``, to that tenant's rows); returns
+        (scores, global ids, rows_scored) with -1 ids on unfilled
+        slots."""
         from repro.kernels import ops as K
-        prep = self._prepare_ann(s, dtype)
-        ann = prep["ann"]
+        ann = self._prepare_ann(s, dtype, code)
         layout = ann["layout"]
         lens = jnp.asarray(layout.cell_lens)
         if dtype == "int8":
@@ -302,6 +382,9 @@ class SecureGallery:
         pos = np.asarray(pos)
         rows = np.where(pos >= 0,
                         layout.pos_to_row[np.clip(pos, 0, None)], -1)
+        if code is not None:          # subset-local -> shard-local rows
+            rows = np.where(rows >= 0,
+                            ann["rows"][np.clip(rows, 0, None)], -1)
         gids = np.where(rows >= 0,
                         self._shard_ids[s][np.clip(rows, 0, None)], -1)
         ids = np.asarray(cell_ids)
@@ -313,7 +396,7 @@ class SecureGallery:
     # -- matching entry ----------------------------------------------------------
     def match(self, raw_queries: jax.Array, k: int = 5,
               dtype: Optional[str] = None, *, mode: str = "exact",
-              nprobe: int = 8):
+              nprobe: int = 8, tenant=None):
         """Match raw query embeddings; returns (labels, scores).
 
         Queries are protected with the same rotation, then matched in
@@ -327,6 +410,11 @@ class SecureGallery:
         breaks score ties by **global id**, so results are invariant to
         the shard topology; ``dtype`` selects the score path (default:
         the store's ``match_dtype``).
+
+        ``tenant`` scopes the search to rows enrolled under that tenant
+        (per-tenant shard views: one tenant's watchlist never serves
+        another's match).  ``tenant=None`` searches the whole gallery —
+        the fleet-operator view, and the pre-tenancy behaviour.
         """
         assert self._n > 0, "empty gallery"
         dtype = dtype or self.match_dtype
@@ -337,7 +425,14 @@ class SecureGallery:
         if mode == "ann" and not self.ann_indexed:
             raise ValueError("ANN index not built — call "
                              "build_ann_index() before match(mode='ann')")
-        k = min(k, self._n)
+        code = None
+        n_scope = self._n
+        if tenant is not None:
+            code = self._tenant_code(tenant)
+            n_scope = int((self._tenant_tags == code).sum())
+            if n_scope == 0:
+                raise ValueError(f"tenant {tenant!r} has no enrolled rows")
+        k = min(k, n_scope)
         q = self.rotation.protect(jnp.asarray(raw_queries))
         centroid_rows = 0
         cell_rows = 0
@@ -347,19 +442,23 @@ class SecureGallery:
             centroid_rows = self._ann_n_cells
         shard_scores, shard_gids = [], []
         for s in range(self.n_shards):
+            rows = None
             n_s = len(self._shard_ids[s])
+            if code is not None and n_s:
+                rows = self._tenant_shard_rows(s, code)
+                n_s = len(rows)
             if n_s == 0:
                 continue
             ks = min(k, n_s)
             if mode == "ann":
                 scores, gids, scored = self._match_shard_ann(
-                    s, q, cell_ids, ks, dtype)
+                    s, q, cell_ids, ks, dtype, code)
                 cell_rows += scored
             else:
-                scores, idx = self._match_shard(s, q, ks, dtype)
+                scores, idx = self._match_shard(s, q, ks, dtype, rows)
                 scores = np.asarray(scores)
                 gids = self._shard_ids[s][np.asarray(idx)]
-                cell_rows += n_s          # exact: the whole shard scored
+                cell_rows += n_s          # exact: the whole scope scored
             shard_scores.append(scores)
             shard_gids.append(gids)
         all_s = np.concatenate(shard_scores, axis=1)       # (Q, sum ks)
@@ -378,6 +477,9 @@ class SecureGallery:
             "rows_scored": centroid_rows + cell_rows,
             "scan_fraction": (centroid_rows + cell_rows) / self._n,
         }
+        if tenant is not None:
+            self.last_match_stats["tenant"] = tenant
+            self.last_match_stats["tenant_rows"] = n_scope
         label_arr = np.asarray(self._labels, object)
         labels = np.where(all_g >= 0, label_arr[np.clip(all_g, 0, None)],
                           None)
@@ -430,6 +532,10 @@ class SecureGallery:
         out = {"rows": self._n, "shards": self.n_shards,
                "failovers": self.failovers,
                "ann": dict(self.ann_stats)}
+        if len(self._tenant_names) > 1:
+            out["tenants"] = {str(name): n for name, n
+                              in self.tenant_rows().items()
+                              if name is not None}
         if self.last_match_stats:
             out["match"] = dict(self.last_match_stats)
         return out

@@ -1,15 +1,26 @@
-"""Serving driver: a CHAMP biometric pipeline with real JAX payloads.
+"""Serving driver: CHAMP fleet serving behind the multi-tenant front door.
 
 Builds the paper's flagship pipeline — face detection -> quality scoring ->
 embedding extraction -> encrypted watchlist match — as VDiSK cartridges
 whose payload compute is real (small CNN/MLP stand-ins for the RetinaFace/
-CR-FIQA/FaceNet bitstreams), streams synthetic camera frames through it,
-and exercises a live hot-swap.
+CR-FIQA/FaceNet bitstreams), and serves it three ways:
 
-Also provides batch LM serving (prefill + decode loop) for the
-transformer archs via --mode lm.
+* ``--mode fleet`` (the canonical entry point): several tenants — live
+  checkpoint operators with a latency SLO, recon feeds, archive
+  backfill — share the box through the ``FrontDoor`` admission
+  controller.  Each tenant screens against its *own* watchlist
+  (tenant-scoped gallery views), the door sheds bulk work first under
+  overload, and the run prints a per-tenant admission/SLO table.
+* ``--mode biometric``: the single-operator scenario with a live
+  hot-swap (the pre-fleet behaviour, unchanged).
+* ``--mode lm``: batch LM serving (prefill + decode) for the
+  transformer archs.
 """
 from __future__ import annotations
+
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")  # no TPU probing on CPU hosts
 
 import argparse
 import time
@@ -23,7 +34,8 @@ from repro.core import messages as msg
 from repro.core.cartridge import Cartridge, DeviceModel, FnCartridge
 from repro.crypto import SecureGallery
 from repro.data import FrameStream
-from repro.runtime import CapabilityRegistry, StreamEngine
+from repro.runtime import (CapabilityRegistry, FrontDoor, StreamEngine,
+                           Tenant)
 
 
 # ---------------------------------------------------------------------------
@@ -104,6 +116,12 @@ class WatchlistCartridge(Cartridge):
     tier (coarse centroid scan + probed-cell rescore, ``nprobe`` cells
     per query) — the planet-scale watchlist path; the gallery must have
     ``build_ann_index()`` called after enrollment.
+
+    ``tenant_scoped=True`` (fleet serving): frames are grouped by the
+    tenant id they carry and each group matches only against that
+    tenant's gallery view — one tenant's watchlist never serves
+    another's match.  Frames without a tenant tag (or whose tenant has
+    no enrolled rows) fall back to the shared fleet pool.
     """
 
     capability_id = 9
@@ -112,12 +130,16 @@ class WatchlistCartridge(Cartridge):
     produces = msg.MessageSpec(msg.MATCH_RESULT)
 
     def __init__(self, gallery: SecureGallery, *, mode: str = "exact",
-                 nprobe: int = 8):
+                 nprobe: int = 8, tenant_scoped: bool = False,
+                 hit_threshold: float = 0.5):
         super().__init__(device=DeviceModel(service_s=0.010, load_s=0.8))
         self.gallery = gallery
         self.mode = mode
         self.nprobe = nprobe
+        self.tenant_scoped = tenant_scoped
+        self.hit_threshold = hit_threshold
         self.stats["match_calls"] = 0
+        self.stats["hits"] = 0           # matches at/above hit_threshold
 
     def fn(self, params, emb):
         return emb  # jit side is identity; match below (host-side store)
@@ -125,23 +147,47 @@ class WatchlistCartridge(Cartridge):
     def process(self, m):
         return self.process_batch([m])[0]
 
+    def _scope_of(self, m) -> object:
+        """Which gallery view this frame screens against: its tenant's,
+        or None (the shared pool) when untagged / not enrolled."""
+        if not self.tenant_scoped:
+            return None
+        tenant = m.meta.get("tenant")
+        if tenant is None or not self.gallery.has_tenant(tenant):
+            return None
+        return tenant
+
     def process_batch(self, ms):
         live = [m for m in ms if m.payload is not None]
         if not live:
             return ms
-        q = np.stack([np.asarray(m.payload) for m in live])   # (B, D)
-        labels, scores = self.gallery.match(                  # one kernel call
-            q, k=1, mode=self.mode, nprobe=self.nprobe)
-        self.stats["match_calls"] += 1
+        # one gallery.match kernel dispatch per tenant scope in the
+        # micro-batch (a single call when not tenant-scoped)
+        groups: dict = {}
+        for i, m in enumerate(live):
+            groups.setdefault(self._scope_of(m), []).append(i)
+        labels = [None] * len(live)
+        scores = [0.0] * len(live)
+        for tenant, idxs in groups.items():
+            q = np.stack([np.asarray(live[i].payload) for i in idxs])
+            lab, sc = self.gallery.match(q, k=1, mode=self.mode,
+                                         nprobe=self.nprobe, tenant=tenant)
+            sc = np.asarray(sc)
+            self.stats["match_calls"] += 1
+            for j, i in enumerate(idxs):
+                labels[i] = lab[j, 0]
+                scores[i] = float(sc[j, 0])
+        self.stats["hits"] += sum(1 for s in scores
+                                  if s >= self.hit_threshold)
         self.stats["processed"] += len(live)
-        results = iter(zip(labels[:, 0], np.asarray(scores)[:, 0]))
+        results = iter(zip(labels, scores))
         out = []
         for m in ms:
             if m.payload is None:
                 out.append(m)
             else:
                 lab, sc = next(results)
-                out.append(m.with_payload({"label": lab, "score": float(sc)},
+                out.append(m.with_payload({"label": lab, "score": sc},
                                           msg.MATCH_RESULT))
         return out
 
@@ -153,7 +199,7 @@ class WatchlistCartridge(Cartridge):
 
 def build_biometric_pipeline(seed=0, with_quality=True, n_shards=1,
                              match_dtype="fp32", match_mode="exact",
-                             nprobe=8):
+                             nprobe=8, tenant_scoped=False):
     key = jax.random.PRNGKey(seed)
     ks = jax.random.split(key, 4)
     reg = CapabilityRegistry()
@@ -165,24 +211,32 @@ def build_biometric_pipeline(seed=0, with_quality=True, n_shards=1,
     gallery = SecureGallery(EMB_DIM, seed=7, n_shards=n_shards,
                             match_dtype=match_dtype)
     reg.insert(3, WatchlistCartridge(gallery, mode=match_mode,
-                                     nprobe=nprobe))
+                                     nprobe=nprobe,
+                                     tenant_scoped=tenant_scoped))
     return reg, gallery
+
+
+def _pipeline_embed(reg, src, frame_ids):
+    """Offline enrollment embeddings: the same det->quality->embed path
+    the streamed frames take."""
+    det, qual, emb = (reg.slots[0].cartridge, reg.slots[1].cartridge,
+                      reg.slots[2].cartridge)
+    for c in (det, qual, emb):
+        c.load()
+    out = []
+    for i in frame_ids:
+        crop = det._fn(det.params, jnp.asarray(src.frame_at(i)))
+        crop = qual._fn(qual.params, crop)
+        out.append(np.asarray(emb._fn(emb.params, crop)))
+    return np.stack(out)
 
 
 def run_biometric(n_frames=30, hotswap=True):
     reg, gallery = build_biometric_pipeline()
     # enroll: run a few frames through det->quality->embed offline
-    det, qual, emb = (reg.slots[0].cartridge, reg.slots[1].cartridge,
-                      reg.slots[2].cartridge)
-    for c in (det, qual, emb):
-        c.load()
     src = FrameStream(seed=3)
-    enroll = []
-    for i in range(10):
-        crop = det._fn(det.params, jnp.asarray(src.frame_at(i)))
-        crop = qual._fn(qual.params, crop)
-        enroll.append(np.asarray(emb._fn(emb.params, crop)))
-    gallery.enroll(np.stack(enroll), [f"subject{i}" for i in range(10)])
+    gallery.enroll(_pipeline_embed(reg, src, range(10)),
+                   [f"subject{i}" for i in range(10)])
 
     eng = StreamEngine(reg, SharedBus(calibrated("ncs2")),
                        execute_payloads=True)
@@ -191,10 +245,77 @@ def run_biometric(n_frames=30, hotswap=True):
     if hotswap:
         eng.schedule_remove(1.0, slot=1)   # pull the quality cartridge live
     rep = eng.run(until=60)
-    hits = sum(1 for _ in rep.latencies)
+    wl = reg.slots[3].cartridge.stats      # watchlist match-hit accounting
     print(f"[serve] frames={rep.frames_out}/{rep.frames_in} "
-          f"lost={rep.lost} mean_latency={rep.mean_latency()*1e3:.1f}ms "
+          f"lost={rep.lost} hits={wl['hits']} "
+          f"mean_latency={rep.mean_latency()*1e3:.1f}ms "
           f"downtime={rep.total_downtime():.2f}s")
+    return rep
+
+
+# ---------------------------------------------------------------------------
+# Fleet serving: multi-tenant admission through the front door
+# ---------------------------------------------------------------------------
+# the three conventional tiers: checkpoint operators screening live
+# subjects (tight SLO, sheds last), recon feeds, archive backfill (bulk)
+FLEET_TENANTS = (
+    Tenant("field_ops", priority=0, weight=8.0, slo_s=0.5, queue_cap=64),
+    Tenant("recon", priority=1, weight=3.0, queue_cap=128),
+    Tenant("backfill", priority=2, weight=1.0, queue_cap=64),
+)
+# offered load per tenant, as a fraction of the pipeline's bottleneck
+# rate; summing past 1.0 = deliberate overload (backfill sheds first)
+FLEET_LOAD = {"field_ops": 0.2, "recon": 0.6, "backfill": 1.2}
+
+
+def run_fleet(duration_s=3.0, load=None, hotswap=False):
+    """The canonical fleet-serving entry point: the biometric pipeline
+    behind the multi-tenant front door.  Each tenant enrolls its own
+    watchlist (tenant-scoped gallery views) and streams frames at its
+    offered rate; the door does weighted-fair admission with
+    lowest-class shed, and the run prints the per-tenant ledger."""
+    reg, gallery = build_biometric_pipeline(tenant_scoped=True)
+    src = FrameStream(seed=3)
+    # disjoint per-tenant watchlists from the shared frame bank: tenant
+    # i's subjects are frames [10*i, 10*i+10)
+    tenant_base = {}
+    for i, t in enumerate(FLEET_TENANTS):
+        base = 10 * i
+        tenant_base[t.name] = base
+        gallery.enroll(_pipeline_embed(reg, src, range(base, base + 10)),
+                       [f"{t.name}/subject{j}" for j in range(10)],
+                       tenant=t.name)
+
+    fd = FrontDoor()
+    for t in FLEET_TENANTS:
+        fd.add_tenant(t)
+    eng = StreamEngine(reg, SharedBus(calibrated("ncs2")),
+                       execute_payloads=True, frontdoor=fd)
+    # bottleneck stage service time sets the capacity the load fractions
+    # scale from
+    bottleneck_s = max(r.cartridge.device.service_s for r in reg.records())
+    cap_fps = 1.0 / bottleneck_s
+    for t in FLEET_TENANTS:
+        rate = (load or FLEET_LOAD)[t.name] * cap_fps
+        n = int(rate * duration_s)
+        base = tenant_base[t.name]
+        eng.feed_tenant(
+            t.name, n, interval_s=1.0 / rate,
+            payload_fn=lambda i, b=base: jnp.asarray(
+                src.frame_at(b + i % 10)))
+    if hotswap:
+        eng.schedule_remove(1.0, slot=1)
+    rep = eng.run(until=float("inf"))
+    wl = reg.slots[3].cartridge.stats
+    fdd = rep.frontdoor
+    print(f"[serve-fleet] frames={rep.frames_out}/{rep.frames_in} "
+          f"lost={rep.lost} hits={wl['hits']} "
+          f"shed={fdd['shed']} credit={fdd['credit']:.2f}")
+    for name, t in fdd["tenants"].items():
+        print(f"  {name:10s} [{t['class']:11s}] offered={t['offered']:4d} "
+              f"admitted={t['admitted']:4d} shed={t['shed']:4d} "
+              f"goodput={t['goodput']:.2f} p99={t['latency'].get('p99', 0.0) * 1e3:7.1f}ms "
+              f"slo_miss={t['slo_miss']}")
     return rep
 
 
@@ -244,12 +365,17 @@ def run_lm(arch="tinyllama-1.1b", batch=2, prompt_len=32, gen=16):
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", choices=["biometric", "lm"], default="biometric")
+    ap.add_argument("--mode", choices=["fleet", "biometric", "lm"],
+                    default="fleet")
     ap.add_argument("--arch", default="tinyllama-1.1b")
     ap.add_argument("--frames", type=int, default=30)
+    ap.add_argument("--duration", type=float, default=3.0,
+                    help="fleet mode: seconds of offered traffic")
     ap.add_argument("--no-hotswap", action="store_true")
     args = ap.parse_args(argv)
-    if args.mode == "biometric":
+    if args.mode == "fleet":
+        run_fleet(args.duration)
+    elif args.mode == "biometric":
         run_biometric(args.frames, hotswap=not args.no_hotswap)
     else:
         run_lm(args.arch)

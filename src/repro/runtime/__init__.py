@@ -5,13 +5,16 @@ from repro.runtime.events import HeapEventQueue, ListEventQueue
 from repro.runtime.lanestate import LaneStateBank, MeterBank, SoABank
 from repro.runtime.faults import (FaultEvent, FaultPlan, QuarantinePolicy,
                                   RetryPolicy, frame_checksum)
+from repro.runtime.frontdoor import FrontDoor, Tenant, class_name
 from repro.runtime.metrics import StreamingHistogram
 from repro.runtime.power import PowerGovernor
 from repro.runtime.trace import FlightRecorder, MetricsRegistry, jsonable
-from repro.runtime.replication import (build_battery_engine,
+from repro.runtime.replication import (FLEET_SPLIT, FLEET_TENANTS,
+                                       build_battery_engine,
                                        build_chaos_engine,
                                        build_cross_hub_hedge_engine,
                                        build_fabric_engine,
+                                       build_fleet_engine,
                                        build_lane_sweep_engine,
                                        build_mixed_engine,
                                        build_replicated_engine,
@@ -20,10 +23,12 @@ from repro.runtime.replication import (build_battery_engine,
                                        engine_broadcast_fps,
                                        engine_shard_fps,
                                        fabric_shard_fps,
+                                       fleet_capacity_fps,
                                        make_inference_cartridge,
                                        run_battery,
                                        run_chaos,
                                        run_fabric,
+                                       run_fleet_sweep,
                                        run_replicated)
 from repro.runtime.health import HealthMonitor, QuarantineLedger, quantile
 from repro.runtime.elastic import ElasticController, largest_mesh

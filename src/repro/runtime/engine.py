@@ -156,6 +156,7 @@ from repro.runtime import trace as trc
 from repro.runtime.lanestate import LaneStateBank, TrackedDeque
 from repro.runtime.faults import (FaultPlan, QuarantinePolicy, RetryPolicy,
                                   frame_checksum)
+from repro.runtime.frontdoor import FrontDoor
 from repro.runtime.health import HealthMonitor, QuarantineLedger
 from repro.runtime.metrics import StreamingHistogram
 from repro.runtime.power import PowerGovernor
@@ -276,6 +277,9 @@ class EngineReport:
     # event-queue lifetime counters (HeapEventQueue.stats()), filled at
     # the end of run()
     events: dict = field(default_factory=dict)
+    # FrontDoor.summary() — per-tenant admission/shed/SLO ledger, filled
+    # at the end of run() when a front door is attached
+    frontdoor: dict = field(default_factory=dict)
     # the flight recorder, when the engine ran with trace enabled
     trace: Optional[FlightRecorder] = None
 
@@ -371,6 +375,8 @@ class EngineReport:
         reg.ingest("bus", self.bus)
         reg.ingest("power",
                    {k: v for k, v in self.power.items() if k != "lanes"})
+        for name, tstats in self.frontdoor.get("tenants", {}).items():
+            reg.ingest(f"tenant.{name}", tstats)
         for name, hist in self.stage_hist.items():
             reg.ingest(f"stage.{name}", hist.summary())
         for name, st in self.stage_stats.items():
@@ -403,6 +409,7 @@ class EngineReport:
             "faults": self.faults,
             "hedges": dict(self.hedges),
             "events": self.events,
+            "frontdoor": self.frontdoor,
             "profile": dict.copy(self.profile),
             "metrics": self.metrics().snapshot(),
         })
@@ -635,6 +642,10 @@ class _LaneGroup:
 class StreamEngine:
     """Lane-group topology engine. Groups are rebuilt on registry events."""
 
+    # fraction of a frame's remaining SLO budget the hedge deadline may
+    # consume before forking a backup (front-door tenants with slo_s)
+    slo_hedge_frac = 0.5
+
     def __init__(self, registry: CapabilityRegistry, bus,
                  *, queue_cap: int = 8, execute_payloads: bool = False,
                  microbatch: bool = True, event_queue=None,
@@ -649,7 +660,8 @@ class StreamEngine:
                  watchdog_margin: float = 8.0,
                  core: str = "epoch", profile: bool = False,
                  trace=None, trace_sample: int = 1,
-                 trace_capacity: int = 65536):
+                 trace_capacity: int = 65536,
+                 frontdoor: Optional[FrontDoor] = None):
         if dispatch not in DISPATCH_DISCIPLINES:
             raise ValueError(f"unknown dispatch discipline {dispatch!r}")
         if core not in ENGINE_CORES:
@@ -733,10 +745,16 @@ class StreamEngine:
             self.report.trace = rec
             self.qledger.tracer = rec
             self.governor.tracer = rec
+        # fleet front door: every frame source flows through it; a
+        # trivial door (one default tenant, no caps) is a pure
+        # pass-through, so single-operator runs stay bit-identical
+        self._fd: Optional[FrontDoor] = None
         registry.subscribe(self._on_registry_event)
         self._rebuild()
         if fault_plan is not None:
             self.install_fault_plan(fault_plan)
+        if frontdoor is not None:
+            self.attach_frontdoor(frontdoor)
 
     # -- pipeline construction ------------------------------------------------
     def _rebuild(self):
@@ -1014,6 +1032,8 @@ class StreamEngine:
         self.report.bus = self.bus.stats()
         self.report.events = self._events.stats()
         self.report.power = self.governor.report(self.now)
+        if self._fd is not None:
+            self.report.frontdoor = self._fd.summary()
         if self._chaos:
             self.report.faults["quarantine"] = self.qledger.summary()
         self.report.stage_stats.update(self._retired_stats)
@@ -1055,27 +1075,140 @@ class StreamEngine:
         return self.report
 
     # -- source ---------------------------------------------------------------
+    def attach_frontdoor(self, fd: FrontDoor) -> FrontDoor:
+        """Install the multi-tenant admission controller.  All frame
+        sources flow through it from here on: ``feed()`` targets its
+        default tenant, ``feed_tenant()`` any registered tenant.  The
+        door paces off live fleet capacity (parked/throttled hubs and
+        quarantined lanes shrink the credit pool — backpressure instead
+        of ballooning queues)."""
+        if self._fd is not None:
+            raise RuntimeError("a front door is already attached")
+        fd.bind(clock=lambda: self.now,
+                schedule=lambda t, fn: self._push_event(t, fn),
+                admit=self._admit_frame,
+                capacity=self._capacity_fps,
+                tracer=self._trace)
+        self._fd = fd
+        return fd
+
     def feed(self, n_frames: int, interval_s: float, payload_fn=None,
              frame_bytes: int = 150528, t0: float = 0.0):
+        """Single-operator source: the single-default-tenant special case
+        of ``feed_tenant`` (a trivial front door is attached lazily; its
+        pass-through admission is bit-identical to direct ingest)."""
+        if self._fd is None:
+            self.attach_frontdoor(FrontDoor())
+        self.feed_tenant(self._fd.default_tenant, n_frames, interval_s,
+                         payload_fn=payload_fn, frame_bytes=frame_bytes,
+                         t0=t0)
+
+    def feed_tenant(self, tenant: str, n_frames: int, interval_s: float,
+                    payload_fn=None, frame_bytes: int = 150528,
+                    t0: float = 0.0):
+        """Schedule ``n_frames`` arrivals for ``tenant``; each is offered
+        to the front door at its arrival instant."""
+        if self._fd is None:
+            raise RuntimeError("no front door attached — construct the "
+                               "engine with frontdoor=, or use feed()")
+        if tenant not in self._fd.tenant_names:
+            raise KeyError(f"unknown tenant {tenant!r}")
         for i in range(n_frames):
-            self._push_event(t0 + i * interval_s, self._frame_arrival,
-                             payload_fn(i) if payload_fn else None,
+            self._push_event(t0 + i * interval_s, self._tenant_arrival,
+                             tenant, payload_fn(i) if payload_fn else None,
                              frame_bytes)
+
+    def _tenant_arrival(self, tenant: str, payload, frame_bytes):
+        """One offered frame: tenant id rides the message end-to-end,
+        and the SLO deadline (when the tenant has one) is stamped so the
+        hedge machinery can spend the remaining budget."""
+        meta = {"bytes": frame_bytes, "tenant": tenant}
+        slo = self._fd.tenant(tenant).slo_s
+        if slo is not None:
+            meta["_slo_t"] = self.now + slo
+        m = msg.Message(kind=msg.IMAGE_FRAME, seq=next(self._frame_seq),
+                        payload=payload, t_created=self.now, meta=meta)
+        self._fd.offer(tenant, m, self.now)
 
     def _frame_arrival(self, payload, frame_bytes):
         m = msg.Message(kind=msg.IMAGE_FRAME, seq=next(self._frame_seq),
                         payload=payload, t_created=self.now,
                         meta={"bytes": frame_bytes})
+        self._admit_frame(m)
+
+    def _admit_frame(self, m: msg.Message):
+        """A frame passed admission (or arrived pre-door): count it,
+        trace ingest, and dispatch — or hold-buffer during pauses.
+        ``m.t_created`` is the offer time, so any front-door queue wait
+        counts toward end-to-end latency and the tenant's SLO."""
         self.report.frames_in += 1
         if self._trace is not None and self._trace.admit(m.seq):
             self._trace.frame_begin(m.seq, self.now)
+            args = {"bytes": m.meta.get("bytes", 0)}
+            if "tenant" in m.meta:
+                args["tenant"] = m.meta["tenant"]
             self._trace.instant(trc.INGEST, self.now, m.seq, track="source",
-                                bytes=frame_bytes)
+                                **args)
         if self.now < self.paused_until or self.halted_since is not None \
                 or not self._groups:
             self._hold_buffer.append((0, m))  # paper: buffered, not dropped
             return
         self._enqueue(0, m)
+
+    def _capacity_fps(self):
+        """``(live_fps, nominal_fps)`` of the bottleneck stage — the
+        front door's pacing signal.  Nominal counts every lane at its
+        EWMA rate; live drops dead lanes and parked hubs, stretches
+        throttled hubs by their duty inflation, and discounts lanes on
+        quarantine probation — so admission shrinks with fleet health
+        instead of letting queues balloon.  A paused or halted pipeline
+        is live-zero: the door parks arrivals in bounded tenant queues
+        rather than flooding the hold buffer."""
+        halted = self.now < self.paused_until or self.halted_since is not None
+        gov = self.governor if self.governor.active else None
+        live_min = nom_min = float("inf")
+        for g in self._groups:
+            if not g.lanes:
+                continue
+            if g.mode == "broadcast":
+                # barrier-paced: the group advances at the slowest replica
+                nom = 1.0 / max(max(l.est_s for l in g.lanes), 1e-9)
+                up = [l for l in g.lanes
+                      if not (self._chaos and id(l) in self._down)
+                      and not (gov is not None
+                               and gov.parked(self.now, l.hub))]
+                live = 0.0 if not up else \
+                    1.0 / max(max(l.est_s for l in up), 1e-9)
+            else:
+                nom = live = 0.0
+                for l in g.lanes:
+                    r = 1.0 / max(l.est_s, 1e-9)
+                    nom += r
+                    if self._chaos and id(l) in self._down:
+                        continue
+                    if gov is not None:
+                        if gov.parked(self.now, l.hub):
+                            continue
+                        r /= max(gov.inflation(self.now, l.hub), 1e-9)
+                    if self._chaos:
+                        r /= max(self.qledger.penalty(l.cart.name, self.now),
+                                 1e-9)
+                    live += r
+            nom_min = min(nom_min, nom)
+            live_min = min(live_min, live)
+        if nom_min == float("inf"):
+            return 0.0, 0.0
+        # The shared bus is a serialized medium every hop crosses, and on
+        # USB-class fabrics it — not the lanes — can be the bottleneck.
+        # Hop count and payload sizes vary per pipeline, so it is measured
+        # rather than modeled: amortized bus-busy seconds per delivered
+        # frame is exact in the limit and independent of offered load.
+        done = self.report.frames_out
+        if done >= 8 and self.bus.busy_s > 0:
+            bus_fps = done / self.bus.busy_s
+            nom_min = min(nom_min, bus_fps)
+            live_min = min(live_min, bus_fps)
+        return (0.0 if halted else live_min), nom_min
 
     # -- stage machinery ------------------------------------------------------
     # Events reference _Lane/_LaneGroup objects, not indices: hot-swap
@@ -1336,6 +1469,21 @@ class StreamEngine:
         if not fresh:
             return
         deadline = self._hedge_deadline(lane, factor) * infl
+        if self._fd is not None and self._fd.has_slo:
+            # SLO-driven hedging: spend at most half the tightest
+            # remaining per-tenant budget waiting on a straggler, but
+            # never hedge inside a single expected service time (a
+            # blown deadline is already lost; a zero-delay hedge storm
+            # would finish the job)
+            cap = None
+            for m in fresh:
+                s = m.meta.get("_slo_t")
+                if s is not None and (cap is None or s < cap):
+                    cap = s
+            if cap is not None:
+                room = (cap - self.now) * self.slo_hedge_frac
+                if room < deadline:
+                    deadline = max(room, lane.est_s * factor * infl)
         handle = self._push_event(self.now + deadline, self._hedge_check,
                                   g, lane, tuple(m.seq for m in fresh))
         for m in fresh:
@@ -1680,6 +1828,10 @@ class StreamEngine:
         lat = self.now - m.t_created
         self.report.latencies.append(lat)
         self.report.latency_hist.record(lat)
+        if self._fd is not None:
+            tenant = m.meta.get("tenant")
+            if tenant is not None:
+                self._fd.on_complete(tenant, lat, self.now)
         if self._trace is not None and self._trace.watches(m.seq):
             self._trace.instant(trc.COMPLETE, self.now, m.seq, track="sink",
                                 latency_s=lat)

@@ -19,6 +19,7 @@ from repro.bus.simulator import BusParams, SharedBus, calibrated
 from repro.core import messages as msg
 from repro.core.cartridge import DeviceModel, FnCartridge
 from repro.runtime.engine import EngineReport, StreamEngine
+from repro.runtime.frontdoor import FrontDoor, Tenant
 from repro.runtime.registry import CapabilityRegistry
 
 FRAME_BYTES = 150528        # 224x224x3 uint8, the paper's imagenet frame
@@ -444,3 +445,70 @@ def build_cross_hub_hedge_engine(suppression: bool = True,
     for i in range(n_bursts):
         eng.feed(5, interval_s=0.0, t0=i * period)
     return eng
+
+
+# ---------------------------------------------------------------------------
+# fleet front door (multi-tenant serving) — the canonical scenario shared
+# by benchmarks/serve_bench.py, tests/test_frontdoor.py and
+# examples/fleet_serving.py, so the invariants the tests pin are measured
+# on the exact workload the benchmark reports
+# ---------------------------------------------------------------------------
+FLEET_LANES = 8             # one shard group of identical fleet lanes
+FLEET_SERVICE_S = 0.012     # per-frame service time -> ~666 fps nominal
+
+# the three conventional priority tiers (paper applications): checkpoint
+# operators screening live subjects (tight SLO, sheds last), recon feeds,
+# and archive backfill (bulk: first to shed under overload)
+FLEET_TENANTS = (
+    Tenant("field_ops", priority=0, weight=8.0, slo_s=0.25, queue_cap=64),
+    Tenant("recon", priority=1, weight=3.0, queue_cap=128),
+    Tenant("backfill", priority=2, weight=1.0, queue_cap=256),
+)
+# offered-load split across the tiers for the overload sweep
+FLEET_SPLIT = {"field_ops": 0.10, "recon": 0.30, "backfill": 0.60}
+
+
+def fleet_capacity_fps(n_lanes: int = FLEET_LANES,
+                       service_s: float = FLEET_SERVICE_S) -> float:
+    return n_lanes / service_s
+
+
+def build_fleet_engine(n_lanes: int = FLEET_LANES,
+                       service_s: float = FLEET_SERVICE_S,
+                       tenants=FLEET_TENANTS, queue_cap: int = 8,
+                       headroom: float = 0.95, **engine_kw):
+    """One shard group of identical lanes behind a multi-tenant front
+    door.  Returns ``(engine, frontdoor)``; feed tenants with
+    ``engine.feed_tenant(name, ...)``."""
+    dev = DeviceModel(name="fleet", service_s=service_s)
+    reg = CapabilityRegistry()
+    spec = msg.MessageSpec(msg.IMAGE_FRAME)
+    primary = FnCartridge("fleet", lambda p, x: x, spec, spec,
+                          capability_id=7, device=dev)
+    reg.insert(0, primary, mode="shard")
+    for i in range(1, n_lanes):
+        reg.add_replica(0, primary.clone(f"fleet#r{i}", device=dev))
+    fd = FrontDoor(headroom=headroom)
+    for t in tenants:
+        fd.add_tenant(t)
+    bus = SharedBus(BusParams("fleet", base_overhead_s=1e-5))
+    eng = StreamEngine(reg, bus, queue_cap=queue_cap, frontdoor=fd,
+                       **engine_kw)
+    return eng, fd
+
+
+def run_fleet_sweep(overload: float, duration_s: float = 20.0,
+                    split=None, **build_kw) -> EngineReport:
+    """Sustained offered load at ``overload`` x nominal capacity, divided
+    across the tenant tiers by ``split``, each tenant arriving at its own
+    even interval.  Arrivals stop at ``duration_s``; the run continues
+    until the admitted backlog drains."""
+    eng, fd = build_fleet_engine(**build_kw)
+    cap = fleet_capacity_fps(build_kw.get("n_lanes", FLEET_LANES),
+                             build_kw.get("service_s", FLEET_SERVICE_S))
+    for name, frac in (split or FLEET_SPLIT).items():
+        rate = overload * cap * frac
+        if rate <= 0.0:
+            continue
+        eng.feed_tenant(name, int(rate * duration_s), interval_s=1.0 / rate)
+    return eng.run(until=float("inf"))

@@ -74,6 +74,8 @@ WATCHDOG = "watchdog.promoted"  # instant: hang promoted to failure
 FAULT = "fault.injected"        # instant: a FaultPlan event landed
 SWAP = "swap"                   # instant: hot-swap transaction
 POWER = "power.state"           # instant: hub throttle/park transition
+TENANT_ADMIT = "tenant.admit"   # instant: queued frame passed the door
+TENANT_SHED = "tenant.shed"     # instant: front door shed a frame
 
 
 def _sample_hash(seed: int, frame_id: int) -> int:
@@ -152,6 +154,14 @@ class FlightRecorder:
 
     def watches(self, frame_id: int) -> bool:
         return frame_id in self._sampled
+
+    def sampled(self, frame_id: int) -> bool:
+        """Pure sampling probe (no admission bookkeeping): would this
+        frame be traced?  Pre-admission sites — the front door sheds
+        frames the engine never ingests — gate on this so shed instants
+        follow the same deterministic 1/N policy as everything else."""
+        return self.sample <= 1 or \
+            _sample_hash(self.seed, frame_id) % self.sample == 0
 
     # -- recording ------------------------------------------------------------
     def _code(self, name: str) -> int:

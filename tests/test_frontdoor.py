@@ -1,0 +1,393 @@
+"""Front-door admission invariants, driven two ways: a standalone
+heapq mini-sim (hypothesis property tests over arbitrary arrival
+interleavings) and the real ``StreamEngine`` (end-to-end pins).
+
+Invariants pinned:
+
+  * conservation — per tenant, ``offered == admitted + shed + queued``
+    under ANY arrival interleaving, rate caps, and queue caps;
+  * weighted fairness — under sustained all-tenant backlog, long-run
+    admission shares converge to the WFQ weights;
+  * pass-through — one tenant, no caps: ``feed()`` through the trivial
+    door is float-for-float identical to direct ingest (Table 1 cell);
+  * class shed order — overload sheds bulk before standard before
+    interactive, and the aggregate cap preempts only strictly-lower
+    classes;
+  * SLO coupling — a tenant SLO tightens the hedge deadline vs the
+    uncoupled engine;
+  * backpressure — live capacity collapsing to zero parks arrivals in
+    bounded tenant queues (brown-out guard), and admission resumes
+    after recovery.
+"""
+import heapq
+import itertools
+from types import SimpleNamespace
+
+import pytest
+
+from repro.runtime import FrontDoor, StreamEngine, Tenant
+from repro.runtime import build_replicated_engine, run_fleet_sweep
+
+try:
+    from hypothesis import given, settings, strategies as stn
+    settings.register_profile("ci", max_examples=30, deadline=None)
+    settings.load_profile("ci")
+    HAVE_HYPOTHESIS = True
+except ImportError:        # property tests skip; deterministic pins still run
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# standalone mini-sim: the door bound to a bare heapq event loop
+# ---------------------------------------------------------------------------
+class _MiniSim:
+    """Just enough host to drive a FrontDoor: a heap of timed callbacks,
+    a virtual clock, and a sink that 'completes' admitted frames after a
+    fixed service time at a bounded concurrency."""
+
+    def __init__(self, fd: FrontDoor, service_s: float = 0.01,
+                 capacity_fps: float = 100.0):
+        self.fd = fd
+        self.now = 0.0
+        self.service_s = service_s
+        self.capacity = capacity_fps
+        self.admitted_order = []
+        self._heap = []
+        self._seq = itertools.count()
+        fd.bind(clock=lambda: self.now,
+                schedule=self._push,
+                admit=self._on_admit,
+                capacity=lambda: (self.capacity, self.capacity))
+
+    def _push(self, t, fn, *a):
+        heapq.heappush(self._heap, (t, next(self._seq), fn, a))
+
+    def _on_admit(self, m):
+        self.admitted_order.append(m.tenant)
+        self._push(self.now + self.service_s, self._complete, m)
+
+    def _complete(self, m):
+        self.fd.on_complete(m.tenant, self.now - m.t_created, self.now)
+
+    def offer(self, t, tenant):
+        self._push(t, self._offer_now, tenant)
+
+    def _offer_now(self, tenant):
+        m = SimpleNamespace(tenant=tenant, t_created=self.now,
+                            seq=next(self._seq))
+        self.fd.offer(tenant, m, self.now)
+
+    def run(self):
+        while self._heap:
+            self.now, _, fn, a = heapq.heappop(self._heap)
+            fn(*a)
+
+
+def _run_conservation_case(specs, arrivals):
+    """Shared body: build a door from (priority, weight, rate, qcap)
+    specs, offer the arrival list, and assert the per-tenant ledger."""
+    fd = FrontDoor(total_queue_cap=48)
+    for i, (prio, w, rate, qcap) in enumerate(specs):
+        fd.add_tenant(Tenant(f"t{i}", priority=prio, weight=w,
+                             rate_fps=rate, queue_cap=qcap))
+    sim = _MiniSim(fd, service_s=0.02, capacity_fps=40.0)
+    offered = {f"t{i}": 0 for i in range(len(specs))}
+    for t, ti in arrivals:
+        name = f"t{ti % len(specs)}"
+        offered[name] += 1
+        sim.offer(t, name)
+    sim.run()
+    ledger = fd.check_conservation()   # raises on any leak
+    for name, n in offered.items():
+        row = ledger[name]
+        assert row["offered"] == n
+        assert row["offered"] == (row["admitted"] + row["shed"]
+                                  + row["queued"])
+
+
+def _lcg(seed):
+    """Tiny deterministic generator for the no-hypothesis fallback."""
+    x = seed or 1
+    while True:
+        x = (x * 1103515245 + 12345) % (1 << 31)
+        yield x
+
+
+def test_conservation_fixed_interleavings():
+    """Deterministic sweep of adversarial arrival patterns: bursts at
+    one instant, steady trickle, all-at-once floods, capped tenants."""
+    specs = [(0, 8.0, None, 4), (1, 2.0, 25.0, 8), (2, 1.0, None, 2)]
+    rnd = _lcg(42)
+    cases = [
+        [(0.0, i % 3) for i in range(120)],            # t=0 flood, round-robin
+        [(i * 0.001, 2) for i in range(150)],          # one tenant hammers
+        [(next(rnd) % 2000 / 1000.0, next(rnd) % 3)    # scattered
+         for _ in range(200)],
+        [(0.5, 0)] * 40 + [(0.5, 1)] * 40 + [(0.5, 2)] * 40,  # synced bursts
+    ]
+    for arrivals in cases:
+        _run_conservation_case(specs, arrivals)
+
+
+def _contended_shares(order, n_each, names):
+    """Admission shares over the contended window: the prefix of the
+    admission order up to the first tenant exhausting its offers (after
+    that, the drain is no longer a fair-queueing decision)."""
+    counts = {n: 0 for n in names}
+    window = dict(counts)
+    for name in order:
+        counts[name] += 1
+        window = dict(counts)
+        if counts[name] >= n_each:
+            break
+    total = sum(window.values())
+    return {n: window[n] / total for n in names}, total
+
+
+def test_wfq_shares_track_weights():
+    """All tenants saturated and uncapped: admission shares over the
+    contended window converge to the weight proportions."""
+    weights = [8.0, 3.0, 1.0]
+    fd = FrontDoor(total_queue_cap=100_000)
+    for i, w in enumerate(weights):
+        fd.add_tenant(Tenant(f"t{i}", weight=w, queue_cap=100_000))
+    sim = _MiniSim(fd, service_s=0.001, capacity_fps=200.0)
+    n_each = 400
+    for i in range(len(weights)):
+        for j in range(n_each):
+            sim.offer(i * 1e-5 + j * 1e-4, f"t{i}")
+    sim.run()
+    fd.check_conservation()
+    names = [f"t{i}" for i in range(len(weights))]
+    shares, total = _contended_shares(sim.admitted_order, n_each, names)
+    assert total >= 50
+    total_w = sum(weights)
+    for i, w in enumerate(weights):
+        assert shares[f"t{i}"] == pytest.approx(w / total_w, abs=0.12), \
+            (weights, shares)
+
+
+if HAVE_HYPOTHESIS:
+    TENANT_SPECS = stn.lists(
+        stn.tuples(stn.integers(0, 2),                  # priority class
+                   stn.floats(0.5, 8.0),                # WFQ weight
+                   stn.one_of(stn.none(),
+                              stn.floats(5.0, 200.0)),  # rate cap
+                   stn.integers(1, 32)),                # queue cap
+        min_size=1, max_size=4)
+
+    ARRIVALS = stn.lists(
+        stn.tuples(stn.floats(0.0, 2.0),                # offer time
+                   stn.integers(0, 3)),                 # tenant index
+        min_size=1, max_size=200)
+
+    @given(TENANT_SPECS, ARRIVALS)
+    def test_conservation_under_any_interleaving(specs, arrivals):
+        """offered == admitted + shed + queued under ANY arrival
+        pattern, caps, and queue bounds hypothesis can draw."""
+        _run_conservation_case(specs, arrivals)
+
+    @given(stn.lists(stn.floats(0.5, 8.0), min_size=2, max_size=4),
+           stn.integers(0, 10_000))
+    def test_wfq_shares_any_weights(weights, jitter_seed):
+        """WFQ share convergence for arbitrary weight vectors and
+        arrival phase offsets."""
+        fd = FrontDoor(total_queue_cap=100_000)
+        for i, w in enumerate(weights):
+            fd.add_tenant(Tenant(f"t{i}", weight=w, queue_cap=100_000))
+        sim = _MiniSim(fd, service_s=0.001, capacity_fps=200.0)
+        n_each = 400
+        for i in range(len(weights)):
+            phase = ((jitter_seed >> i) & 0xFF) / 51200.0
+            for j in range(n_each):
+                sim.offer(phase + j * 1e-4, f"t{i}")
+        sim.run()
+        fd.check_conservation()
+        names = [f"t{i}" for i in range(len(weights))]
+        shares, total = _contended_shares(sim.admitted_order, n_each,
+                                          names)
+        if total < 50:      # degenerate draw: too few contended slots
+            return
+        total_w = sum(weights)
+        for i, w in enumerate(weights):
+            assert shares[f"t{i}"] == pytest.approx(w / total_w,
+                                                    abs=0.15), \
+                (weights, shares)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_conservation_under_any_interleaving():
+        pass
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_wfq_shares_any_weights():
+        pass
+
+
+def test_token_bucket_caps_admission_rate():
+    """A rate-capped tenant admits at most burst + rate * T frames no
+    matter how hard it offers."""
+    fd = FrontDoor()
+    fd.add_tenant(Tenant("capped", rate_fps=10.0, burst=5.0, queue_cap=8))
+    sim = _MiniSim(fd, service_s=0.001, capacity_fps=1000.0)
+    for j in range(300):
+        sim.offer(j * 0.01, "capped")     # 100 fps offered for 3 s
+    sim.run()
+    row = fd.check_conservation()["capped"]
+    # bucket ceiling: 5 burst + 10/s * 3 s, plus the queue drain tail
+    assert row["admitted"] <= 5 + 10 * 3 + 8 + 1
+    assert row["offered"] == 300
+
+
+def test_class_shed_order_under_aggregate_pressure():
+    """When the aggregate cap bites, bulk is preempted first and the
+    interactive class never sheds."""
+    fd = FrontDoor(total_queue_cap=12)
+    fd.add_tenant(Tenant("gold", priority=0, weight=4.0, queue_cap=64))
+    fd.add_tenant(Tenant("bulk", priority=2, weight=1.0, queue_cap=64))
+    sim = _MiniSim(fd, service_s=1.0, capacity_fps=1.0)  # ~frozen pipe
+    for j in range(40):                    # bulk floods first
+        sim.offer(0.001 + j * 1e-4, "bulk")
+    for j in range(10):                    # gold arrives into the jam
+        sim.offer(0.01 + j * 1e-4, "gold")
+    sim.run()
+    ledger = fd.check_conservation()
+    assert ledger["gold"]["shed"] == 0
+    assert ledger["bulk"]["shed"] > 0
+
+
+# ---------------------------------------------------------------------------
+# end-to-end pins on the real engine
+# ---------------------------------------------------------------------------
+def _sig(rep):
+    return (rep.frames_in, rep.frames_out, rep.sim_time, rep.last_out_t,
+            tuple(rep.latencies), tuple(sorted(rep.hedges.items())),
+            tuple(sorted(rep.faults.items())))
+
+
+def test_single_tenant_feed_is_bit_identical():
+    """The trivial door (one tenant, no caps) is a pure pass-through:
+    feed() matches the direct-ingest path float for float."""
+    e1 = build_replicated_engine("ncs2", 3)
+    e1.feed(60, interval_s=0.0)
+    r1 = e1.run(until=float("inf"))
+    e2 = build_replicated_engine("ncs2", 3)
+    for _ in range(60):
+        e2._push_event(0.0, e2._frame_arrival, None, 150528)
+    r2 = e2.run(until=float("inf"))
+    assert _sig(r1) == _sig(r2)
+    assert not e1._fd.engaged          # and the door never engaged
+
+
+def test_fleet_overload_is_class_ordered():
+    """2x offered load: interactive holds goodput 1.0 and its SLO p99;
+    bulk sheds; nothing is lost in-pipeline; conservation holds."""
+    rep = run_fleet_sweep(2.0, duration_s=3.0)
+    assert rep.lost == 0
+    fd = rep.frontdoor
+    t = fd["tenants"]
+    assert t["field_ops"]["goodput"] == 1.0
+    assert t["field_ops"]["latency"]["p99"] <= t["field_ops"]["slo_s"]
+    assert t["backfill"]["shed"] > 0
+    gp = [t[n]["goodput"] for n in ("field_ops", "recon", "backfill")]
+    assert gp == sorted(gp, reverse=True)
+    for row in t.values():            # summary() already ran conservation
+        assert row["offered"] == (row["admitted"] + row["shed"]
+                                  + row["queued"])
+
+
+def test_slo_tightens_hedge_deadline():
+    """The same replicated scenario with a tight tenant SLO arms hedges
+    earlier (or as early) and never later than the uncoupled engine."""
+    base = build_replicated_engine("ncs2", 4, mode="shard", hedge=True)
+    base.feed(80, interval_s=0.01)
+    rb = base.run(until=float("inf"))
+
+    fd = FrontDoor()
+    fd.add_tenant(Tenant("tight", slo_s=0.05))
+    eng = build_replicated_engine("ncs2", 4, mode="shard", hedge=True,
+                                  frontdoor=fd)
+    eng.feed_tenant("tight", 80, interval_s=0.01, frame_bytes=150528)
+    rt = eng.run(until=float("inf"))
+    assert rt.frames_out == rb.frames_out == 80
+    assert sum(rt.hedges.values()) >= sum(rb.hedges.values())
+
+
+def test_brownout_parks_then_recovers():
+    """Capacity pinned to zero parks arrivals in bounded queues; when it
+    recovers, the backlog drains and conservation still holds."""
+    fd = FrontDoor(max_poll_s=0.05)
+    fd.add_tenant(Tenant("a", queue_cap=64))
+    fd.add_tenant(Tenant("b", queue_cap=64))   # two tenants: door engaged
+    sim = _MiniSim(fd, service_s=0.005, capacity_fps=0.0)
+    for j in range(30):
+        sim.offer(j * 0.001, "a")
+    # recovery: capacity comes back at t = 0.5
+    sim._push(0.5, lambda: setattr(sim, "capacity", 100.0))
+    sim.run()
+    ledger = fd.check_conservation()
+    assert ledger["a"]["admitted"] == 30       # nothing shed, all drained
+    assert ledger["a"]["queued"] == 0
+    assert fd.summary()["tenants"]["a"]["avg_wait_s"] > 0.0
+
+
+# ---------------------------------------------------------------------------
+# gallery tenancy: per-tenant shard views
+# ---------------------------------------------------------------------------
+def _tenant_gallery(n_shards=2, seed=0, dtype="fp32"):
+    import numpy as np
+    from repro.crypto import SecureGallery
+    rng = np.random.default_rng(seed)
+    g = SecureGallery(64, seed=7, n_shards=n_shards, match_dtype=dtype)
+    a = rng.normal(size=(12, 64)).astype(np.float32)
+    b = rng.normal(size=(9, 64)).astype(np.float32)
+    g.enroll(a, [f"a{i}" for i in range(12)], tenant="alpha")
+    g.enroll(b, [f"b{i}" for i in range(9)], tenant="beta")
+    return g, a, b
+
+
+def test_gallery_tenant_isolation():
+    """A tenant-scoped match never returns another tenant's labels, and
+    matches the brute-force oracle over that tenant's rows only."""
+    import numpy as np
+    g, a, b = _tenant_gallery()
+    q = a[3:4] + 0.01
+    labels, scores = g.match(q, k=5, tenant="alpha")
+    assert all(l.startswith("a") for l in labels[0])
+    labels_b, _ = g.match(q, k=5, tenant="beta")
+    assert all(l.startswith("b") for l in labels_b[0])
+    # unscoped search sees everything (the pre-tenancy behaviour)
+    labels_all, _ = g.match(q, k=21)
+    assert {l[0] for l in labels_all[0]} == {"a", "b"}
+
+
+def test_gallery_tenant_scope_survives_reshard_and_failover():
+    import numpy as np
+    g, a, b = _tenant_gallery(n_shards=3)
+    q = b[2:3]
+    before, _ = g.match(q, k=3, tenant="beta")
+    g.reshard(2)
+    after, _ = g.match(q, k=3, tenant="beta")
+    assert list(before[0]) == list(after[0])
+    g.failover_shard(0)
+    after2, _ = g.match(q, k=3, tenant="beta")
+    assert list(before[0]) == list(after2[0])
+    assert all(l.startswith("b") for l in after2[0])
+
+
+def test_gallery_tenant_ann_path_stays_scoped():
+    import numpy as np
+    g, a, b = _tenant_gallery(n_shards=2)
+    g.build_ann_index(n_cells=4)
+    q = a[5:6]
+    labels, _ = g.match(q, k=3, mode="ann", nprobe=4, tenant="alpha")
+    assert all(l.startswith("a") for l in labels[0])
+
+
+def test_gallery_unknown_or_empty_tenant_raises():
+    import numpy as np
+    import pytest as _pt
+    g, a, b = _tenant_gallery()
+    with _pt.raises(KeyError):
+        g.match(a[:1], k=1, tenant="nobody")
+    assert not g.has_tenant("nobody")
+    assert g.has_tenant("alpha")
